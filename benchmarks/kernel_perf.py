@@ -1,0 +1,108 @@
+"""Permanent-kernel perf loop (EXPERIMENTS.md Sec. Perf).
+
+No TPU in this container, so the "profile" is (a) trip-count-aware op
+counts from the interpret-lowered HLO (VPU-class elementwise flops, MXU dot
+flops, bytes) and (b) CPU wall time as a secondary signal.  The analytic
+roofline projects the op counts onto TPU v5e throughput ceilings:
+
+    VPU f32: 8x128 lanes x 4 ALUs x 1.5 GHz x (1 flop)  ~= 6.1 TF/s
+    MXU bf16/f32: 197 TF/s (the kernel's dots are small -- boundary/init)
+
+Variants (kernel modes):
+    baseline  -- paper-faithful Alg. 3 + CEG (3n VPU ops/step/lane)
+    schedmat  -- signed schedule columns precomputed (2n ops/step/lane)
+    batched   -- window-batched matmul state generation (2n ops, no serial
+                 X chain inside a window)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.oracle import perm_ryser_exact
+from repro.core.ryser import ryser_flops
+from repro.kernels.ops import block_partials_pallas
+from repro.utils.hlo_cost import analyze_hlo
+
+VPU_F32 = 6.1e12    # assumed v5e VPU f32 ceiling (see module docstring)
+MXU = 197e12
+
+
+def profile_variant(A, mode: str, *, lanes=64, steps_per_chunk=64,
+                    window=16, precision="dd", repeat=3):
+    n = A.shape[0]
+
+    def run():
+        out, geo = block_partials_pallas(
+            A, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window,
+            precision=precision, mode=mode)
+        return out, geo
+
+    f = jax.jit(lambda A_: block_partials_pallas(
+        A_, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window,
+        precision=precision, mode=mode)[0])
+    lowered = f.lower(jnp.asarray(A))
+    compiled = lowered.compile()
+    cost = analyze_hlo(compiled.as_text())
+
+    out = compiled(jnp.asarray(A))
+    t0 = time.time()
+    for _ in range(repeat):
+        out = compiled(jnp.asarray(A))
+    jax.block_until_ready(out)
+    wall = (time.time() - t0) / repeat
+
+    space = 1 << (n - 1)
+    ew_per_step = cost.elementwise_flops / space
+    dot_per_step = cost.dot_flops / space
+    # projected TPU time: VPU and MXU streams overlap; take max
+    t_vpu = cost.elementwise_flops / VPU_F32
+    t_mxu = cost.dot_flops / MXU
+    return {
+        "mode": mode, "n": n,
+        "elementwise_flops": cost.elementwise_flops,
+        "dot_flops": cost.dot_flops,
+        "bytes": cost.bytes_accessed,
+        "ew_per_step": ew_per_step,
+        "dot_per_step": dot_per_step,
+        "tpu_proj_s": max(t_vpu, t_mxu),
+        "tpu_vpu_s": t_vpu, "tpu_mxu_s": t_mxu,
+        "cpu_wall_s": wall,
+        "useful_flops": ryser_flops(n),
+        "roofline_frac": (ryser_flops(n) / VPU_F32) / max(t_vpu, t_mxu),
+        "value": float(jnp.sum(out)),
+    }
+
+
+def run(n: int = 18, window: int = 16, steps: int = 64, lanes: int = 64,
+        precision: str = "dd", seed: int = 0):
+    rng = np.random.default_rng(seed)
+    A = rng.uniform(-1, 1, (n, n))
+    exact = perm_ryser_exact(A) if n <= 18 else None
+    rows = []
+    for mode in ("baseline", "schedmat", "batched"):
+        r = profile_variant(A, mode, lanes=lanes, steps_per_chunk=steps,
+                            window=window, precision=precision)
+        rows.append(r)
+    return rows
+
+
+def main(csv: bool = True):
+    rows = run()
+    if csv:
+        print("kernel_perf,mode,n,ew_flops_per_step,dot_flops_per_step,"
+              "tpu_proj_s,roofline_frac,cpu_wall_s")
+        for r in rows:
+            print(f"kernel_perf,{r['mode']},{r['n']},"
+                  f"{r['ew_per_step']:.1f},{r['dot_per_step']:.1f},"
+                  f"{r['tpu_proj_s']:.4e},{r['roofline_frac']:.3f},"
+                  f"{r['cpu_wall_s']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Aggregate the dry-run JSONs into the roofline table (EXPERIMENTS.md).
+
+Reads experiments/dryrun/*.json, emits CSV + a markdown table with the
+three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and
+the per-cell one-line interpretation.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(out_dir: str = OUT_DIR):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _suggestion(rec: dict) -> str:
+    rl = rec.get("roofline", {})
+    dom = rl.get("dominant")
+    kind = "train" if rec["shape"].startswith("train") else (
+        "prefill" if rec["shape"].startswith("prefill") else "decode")
+    if dom == "collective":
+        kinds = rec.get("cost_trip_aware", {}).get("coll_by_kind", {})
+        top = max(kinds, key=kinds.get) if kinds else "?"
+        return (f"cut {top} volume (coarser FSDP gather granularity / "
+                "overlap with compute)")
+    if dom == "memory":
+        if kind == "decode":
+            return "KV-cache read-bound: quantize cache / widen batch"
+        return "increase arithmetic intensity (larger per-device batch)"
+    return "compute-bound: already at the right end of the roofline"
+
+
+def main(csv: bool = True):
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if str(c.get("status", "")).startswith("SKIP")]
+    bad = [c for c in cells if c.get("status") not in ("ok",)
+           and not str(c.get("status", "")).startswith("SKIP")]
+    if csv:
+        print("roofline,arch,shape,mesh,chips,compute_s,memory_s,"
+              "collective_s,dominant,model_flops,hlo_flops,useful_ratio,"
+              "mfu_bound")
+        for c in sorted(ok, key=lambda c: (c["arch"], c["shape"],
+                                           c["mesh"])):
+            rl = c["roofline"]
+            print(f"roofline,{c['arch']},{c['shape']},{c['mesh']},"
+                  f"{c['chips']},{rl['compute_s']:.4g},{rl['memory_s']:.4g},"
+                  f"{rl['collective_s']:.4g},{rl['dominant']},"
+                  f"{c['model_flops']:.4g},{rl['flops']:.4g},"
+                  f"{rl['useful_flops_ratio']:.3f},{rl['mfu_bound']:.4f}")
+        print(f"# ok={len(ok)} skipped={len(skipped)} failed={len(bad)}")
+        for c in bad:
+            print(f"# FAILED {c.get('arch')} {c.get('shape')} "
+                  f"{c.get('mesh')}")
+    return ok, skipped, bad
+
+
+def markdown_table(mesh: str = "single") -> str:
+    ok, skipped, _ = main(csv=False)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant |"
+        " MODEL/HLO flops | MFU bound | next lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"])):
+        if c["mesh"] != mesh:
+            continue
+        rl = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {rl['compute_s']:.3g} | "
+            f"{rl['memory_s']:.3g} | {rl['collective_s']:.3g} | "
+            f"{rl['dominant']} | {rl['useful_flops_ratio']:.2f} | "
+            f"{rl['mfu_bound']:.3f} | {_suggestion(c)} |")
+    for c in skipped:
+        if c["mesh"] != mesh:
+            continue
+        lines.append(f"| {c['arch']} | {c['shape']} | - | - | - | "
+                     f"SKIP(full-attention) | - | - | - |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table3,table5] [--fast]
+
+Prints ``name,...`` CSV rows per table (see each module's docstring for
+the mapping to the paper).  The roofline report additionally aggregates
+the dry-run artifacts if present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def print_rows(name, rows):
+    for r in rows:
+        print(f"{name}," + ",".join(f"{k}={v}" for k, v in r.items()))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: table3,table4,table5,fig7,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller n (CI-sized)")
+    args = ap.parse_args(argv)
+    only = set(filter(None, args.only.split(",")))
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    from . import (fig7_scaling, roofline_report, table3_precision,
+                   table4_dense, table5_sparse)
+
+    t0 = time.time()
+    if not only or "table3" in only:
+        if args.fast:
+            print_rows("table3", table3_precision.run(ns=(12, 16)))
+        else:
+            table3_precision.main()
+    if not only or "table4" in only:
+        if args.fast:
+            print_rows("table4", table4_dense.run(ns=(12, 14)))
+        else:
+            table4_dense.main()
+    if not only or "table5" in only:
+        table5_sparse.main()
+    if not only or "fig7" in only:
+        if args.fast:
+            print_rows("fig7", fig7_scaling.run(n=14, device_counts=(1, 2)))
+        else:
+            fig7_scaling.main()
+    if not only or "roofline" in only:
+        try:
+            roofline_report.main()
+        except Exception as e:
+            print(f"# roofline report unavailable: {e}")
+    print(f"# benchmarks done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

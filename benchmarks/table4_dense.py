@@ -1,0 +1,74 @@
+"""Paper Table 4: dense-kernel configuration comparison.
+
+The paper's axes -- memory placement (x_shr/x_reg, A_shr/A_glb), CEG
+on/off, matrix-specific rebuild -- map to our TPU-kernel axes:
+
+  engine=seq          faithful Alg. 1 (no chunk parallelism)
+  engine=chunked      Alg. 3, CEG-aligned power-of-2 chunks (jnp)
+  engine=pallas       the TPU kernel (interpret on CPU), baseline mode
+  engine=pallas-bat   window-batched matmul form (beyond-paper)
+
+Wall-times here are CPU-interpreter numbers -- ordering is meaningful,
+absolute speed is not (the TPU perf story lives in EXPERIMENTS.md Perf,
+derived from lowered HLO).  n is capped for the same reason.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.oracle import perm_ryser_exact
+from repro.core.ryser import perm_ryser_chunked, perm_ryser_seq
+from repro.kernels.ops import permanent_pallas
+
+
+def run(ns=(14, 16, 18), seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for n in ns:
+        A = rng.uniform(-1, 1, (n, n))
+        exact = perm_ryser_exact(A) if n <= 16 else None
+        engines = {
+            "seq": lambda: float(perm_ryser_seq(jnp.asarray(A))),
+            "chunked": lambda: float(perm_ryser_chunked(
+                jnp.asarray(A), num_chunks=1024)),
+            "pallas": lambda: float(permanent_pallas(
+                A, mode="baseline", lanes=64, steps_per_chunk=32,
+                window=16)),
+            "pallas-bat": lambda: float(permanent_pallas(
+                A, mode="batched", lanes=64, steps_per_chunk=32,
+                window=16)),
+        }
+        base = None
+        for name, fn in engines.items():
+            t0 = time.time()
+            val = fn()
+            dt = time.time() - t0
+            # re-time post-compilation
+            t0 = time.time()
+            val = fn()
+            dt_warm = time.time() - t0
+            if exact is not None:
+                assert abs(val - exact) / max(abs(exact), 1e-12) < 1e-8, \
+                    (n, name, val, exact)
+            base = base or val
+            rows.append({"n": n, "engine": name, "seconds": dt_warm,
+                         "cold_seconds": dt, "value": val})
+    return rows
+
+
+def main(csv: bool = True):
+    rows = run()
+    if csv:
+        print("table4,n,engine,seconds,cold_seconds")
+        for r in rows:
+            print(f"table4,{r['n']},{r['engine']},{r['seconds']:.4f},"
+                  f"{r['cold_seconds']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

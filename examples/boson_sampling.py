@@ -1,0 +1,82 @@
+"""Boson-sampling output probabilities via permanents (paper Sec. 1).
+
+The probability of detecting output configuration T given input S through
+a linear-optical network U is  |perm(U_{S,T})|^2 / (prod s_i! prod t_j!).
+This example builds a Haar-random unitary interferometer, extracts the
+submatrices for a set of output patterns, and computes their probabilities
+with the SUperman engine -- including the *batched* path (vmap over many
+submatrices), something the original CUDA tool cannot express.
+
+    PYTHONPATH=src python examples/boson_sampling.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import itertools  # noqa: E402
+import math  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import engine  # noqa: E402
+from repro.core.ryser import perm_ryser_chunked  # noqa: E402
+
+M_MODES = 12      # interferometer modes
+N_PHOTONS = 6     # photons (submatrix size)
+
+
+def haar_unitary(m: int, rng) -> np.ndarray:
+    z = (rng.normal(size=(m, m)) + 1j * rng.normal(size=(m, m))) / np.sqrt(2)
+    q, r = np.linalg.qr(z)
+    return q * (np.diag(r) / np.abs(np.diag(r)))
+
+
+def main():
+    rng = np.random.default_rng(42)
+    U = haar_unitary(M_MODES, rng)
+    in_modes = list(range(N_PHOTONS))        # photons in the first n modes
+
+    # sample some collision-free output patterns
+    patterns = list(itertools.combinations(range(M_MODES), N_PHOTONS))
+    rng.shuffle(patterns)
+    patterns = patterns[:32]
+
+    # --- engine path: one permanent at a time (full preprocessing) -----
+    probs = []
+    for T in patterns[:8]:
+        sub = U[np.ix_(in_modes, T)]
+        amp = engine.permanent(sub, precision="kahan")
+        probs.append(abs(amp) ** 2)
+    print("per-pattern probabilities (engine):")
+    for T, p in zip(patterns[:8], probs):
+        print(f"  T={T}: {p:.3e}")
+
+    # --- batched path: vmap over submatrices (JAX-native win) ----------
+    subs = np.stack([U[np.ix_(in_modes, T)] for T in patterns])
+    batched = jax.vmap(
+        lambda A: perm_ryser_chunked(A, num_chunks=64, precision="kahan"))
+    amps = np.asarray(jax.jit(batched)(jnp.asarray(subs)))
+    bprobs = np.abs(amps) ** 2
+    print(f"\nbatched over {len(patterns)} patterns: "
+          f"sum p = {bprobs.sum():.4f} (partial space)")
+    # consistency between paths
+    np.testing.assert_allclose(bprobs[:8], probs, rtol=1e-8)
+    print("engine vs batched paths agree to 1e-8  OK")
+
+    # total over ALL collision-free patterns for a smaller instance:
+    # probabilities must sum to <= 1 (remaining mass = collision events)
+    m_small, n_small = 8, 4
+    U2 = haar_unitary(m_small, rng)
+    total = 0.0
+    for T in itertools.combinations(range(m_small), n_small):
+        sub = U2[np.ix_(list(range(n_small)), T)]
+        total += abs(engine.permanent(sub, precision="kahan")) ** 2
+    print(f"\nsum over all collision-free outputs (m={m_small}, "
+          f"n={n_small}): {total:.4f} <= 1  "
+          f"({'OK' if total <= 1.0 + 1e-9 else 'VIOLATION'})")
+
+
+if __name__ == "__main__":
+    main()

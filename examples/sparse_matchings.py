@@ -1,0 +1,80 @@
+"""Counting perfect matchings of bipartite graphs via 0/1 permanents
+(paper Sec. 1: dimers, cycle covers, Nash-equilibrium structures).
+
+Demonstrates the sparse pipeline end-to-end: DM elimination strips
+edges that belong to no perfect matching, Forbert-Marx compression
+collapses low-degree vertices, and the count is exact (integer).
+
+    PYTHONPATH=src python examples/sparse_matchings.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from repro.core import engine  # noqa: E402
+from repro.core.decompose import dm_eliminate, fm_decompose  # noqa: E402
+from repro.core.oracle import perm_bigint  # noqa: E402
+
+
+def grid_graph_biadjacency(rows: int, cols: int) -> np.ndarray:
+    """Bipartite double cover of a rows x cols grid: matchings of the
+    cover correspond to dimer configurations."""
+    n = rows * cols
+    A = np.zeros((n, n))
+    for r in range(rows):
+        for c in range(cols):
+            u = r * cols + c
+            A[u, u] = 1
+            if c + 1 < cols:
+                A[u, u + 1] = 1
+                A[u + 1, u] = 1
+            if r + 1 < rows:
+                A[u, u + cols] = 1
+                A[u + cols, u] = 1
+    return A
+
+
+def main():
+    rng = np.random.default_rng(3)
+
+    # --- 1. structured graph ------------------------------------------
+    A = grid_graph_biadjacency(4, 4)
+    count = round(engine.permanent(A))
+    exact = perm_bigint(A.astype(np.int64))
+    print(f"4x4 grid cover: {count} perfect matchings "
+          f"(exact bigint oracle: {exact}) "
+          f"{'OK' if count == exact else 'MISMATCH'}")
+
+    # --- 2. random sparse bipartite graph + preprocessing detail -------
+    n, p = 22, 0.18
+    G = (rng.uniform(0, 1, (n, n)) < p).astype(float)
+    G[np.arange(n), np.arange(n)] = 1.0   # ensure a perfect matching
+    Gdm, removed = dm_eliminate(G)
+    leaves = fm_decompose(Gdm)
+    val, report = engine.permanent(G, return_report=True)
+    exact = perm_bigint(G.astype(np.int64))
+    print(f"\nrandom bipartite n={n}, |E|={int(G.sum())}:")
+    print(f"  DM removed {removed} edges in no perfect matching")
+    print(f"  Forbert-Marx left {len(leaves)} leaves, sizes "
+          f"{sorted(set(l.matrix.shape[0] for l in leaves), reverse=True)}")
+    print(f"  matchings = {round(val)} (exact {exact}) "
+          f"{'OK' if round(val) == exact else 'MISMATCH'}")
+
+    # --- 3. a graph with NO perfect matching ---------------------------
+    H = np.zeros((6, 6))
+    H[:, :4] = 1.0  # two right-vertices isolated
+    print(f"\nKoenig-deficient graph: {round(engine.permanent(H))} "
+          "matchings (structurally singular, detected by DM)")
+
+    # --- 4. triangular: only the diagonal survives DM -------------------
+    T = np.tril(np.ones((8, 8)))
+    Tdm, rem = dm_eliminate(T)
+    print(f"\nlower-triangular: DM removed {rem}/{int(T.sum()) - 8} "
+          f"off-diagonal entries; perm = {round(engine.permanent(T))}")
+
+
+if __name__ == "__main__":
+    main()

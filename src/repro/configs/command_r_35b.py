@@ -1,0 +1,10 @@
+"""command-r-35b [dense]: 40L d_model=8192 64H (GQA kv=8) d_ff=22528
+vocab=256000; no-bias.  [hf:CohereForAI/c4ai-command-r-v01; unverified]"""
+from ..models.common import ModelCfg
+
+CONFIG = ModelCfg(
+    arch_id="command-r-35b", family="dense",
+    n_layers=40, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=22528,
+    vocab=256000, norm="layernorm", mlp="swiglu", attn_bias=False,
+    rope_theta=10000.0,
+    source="hf:CohereForAI/c4ai-command-r-v01; unverified")

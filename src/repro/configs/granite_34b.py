@@ -1,0 +1,11 @@
+"""granite-34b [dense]: 88L d_model=6144 48H (MQA kv=1) d_ff=24576
+vocab=49152; llama-arch code model.  [arXiv:2405.04324; hf]"""
+from ..models.common import ModelCfg
+
+CONFIG = ModelCfg(
+    arch_id="granite-34b", family="dense",
+    n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1, d_ff=24576,
+    vocab=49152, norm="layernorm", mlp="gelu", attn_bias=True,
+    rope_theta=10000.0, source="arXiv:2405.04324; hf",
+    notes="deep-narrow MQA; non-gated gelu MLP (gpt-bigcode style): "
+          "gated swiglu would give 47B, the published model is 34B")

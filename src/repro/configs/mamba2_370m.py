@@ -1,0 +1,11 @@
+"""mamba2-370m [ssm]: 48L d_model=1024, attn-free, vocab=50280,
+ssm_state=128 (SSD).  [arXiv:2405.21060; unverified]"""
+from ..models.common import ModelCfg
+
+CONFIG = ModelCfg(
+    arch_id="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=0,
+    vocab=50280, ssm_state=128, ssm_head_dim=64, ssm_expand=2,
+    ssm_conv=4, ssm_chunk=128,
+    source="arXiv:2405.21060; unverified",
+    notes="attn-free SSD; runs long_500k")

@@ -1,0 +1,10 @@
+"""mixtral-8x22b [moe]: 56L d_model=6144 48H (GQA kv=8) d_ff=16384,
+8 experts top-2, SWA.  [arXiv:2401.04088; hf]"""
+from ..models.common import ModelCfg
+
+CONFIG = ModelCfg(
+    arch_id="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=16384,
+    vocab=32768, n_experts=8, top_k=2, norm="rmsnorm", mlp="swiglu",
+    swa_window=4096, rope_theta=1e6,
+    source="arXiv:2401.04088; hf", notes="SWA per assignment")

@@ -1,0 +1,12 @@
+"""qwen2-vl-72b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064; M-RoPE, dynamic resolution.  [arXiv:2409.12191; hf]
+Vision frontend is a stub: the backbone consumes precomputed patch
+embeddings + 3D (t, h, w) position ids (assignment rule)."""
+from ..models.common import ModelCfg
+
+CONFIG = ModelCfg(
+    arch_id="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=29568,
+    vocab=152064, norm="rmsnorm", mlp="swiglu", rope_theta=1e6,
+    mrope_sections=(16, 24, 24), attn_bias=True,
+    source="arXiv:2409.12191; hf", notes="M-RoPE; vision frontend stubbed")

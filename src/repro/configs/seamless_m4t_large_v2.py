@@ -1,0 +1,14 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec multimodal backbone.
+
+24L encoder + 24L decoder, d_model=1024, 16H (GQA kv=16), d_ff=8192,
+vocab=256206.  [arXiv:2308.11596; hf]  Audio frontend is a stub: the
+encoder consumes precomputed frame embeddings (assignment rule).
+"""
+from ..models.common import ModelCfg
+
+CONFIG = ModelCfg(
+    arch_id="seamless-m4t-large-v2", family="audio-encdec",
+    n_layers=24, enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab=256206, norm="layernorm", mlp="gelu",
+    rope_theta=10000.0, attn_bias=True,
+    source="arXiv:2308.11596; hf", notes="enc-dec; audio frontend stubbed")

@@ -1,0 +1,9 @@
+"""starcoder2-3b [dense]: 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152; GQA + RoPE, gelu MLP with bias.  [arXiv:2402.19173; hf]"""
+from ..models.common import ModelCfg
+
+CONFIG = ModelCfg(
+    arch_id="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, n_kv_heads=2, d_ff=12288,
+    vocab=49152, norm="layernorm", mlp="gelu", attn_bias=True,
+    rope_theta=100000.0, source="arXiv:2402.19173; hf")

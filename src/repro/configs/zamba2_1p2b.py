@@ -1,0 +1,13 @@
+"""zamba2-1.2b [hybrid]: 38L mamba2 backbone, d_model=2048, shared
+attention block (32H kv=32, d_ff=8192) applied every 6 layers,
+vocab=32000, ssm_state=64.  [arXiv:2411.15242; hf]"""
+from ..models.common import ModelCfg
+
+CONFIG = ModelCfg(
+    arch_id="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab=32000, ssm_state=64, ssm_head_dim=64, ssm_expand=2,
+    ssm_conv=4, ssm_chunk=128, shared_attn_period=6,
+    norm="rmsnorm", mlp="swiglu",
+    source="arXiv:2411.15242; hf",
+    notes="mamba2 + weight-shared attn blocks; runs long_500k")

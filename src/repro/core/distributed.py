@@ -1,0 +1,331 @@
+"""Distributed permanent computation (paper Sec. 6.3, scaled to pods).
+
+The paper's MPI layer statically splits the 2^{n-1} Gray-step space over
+GPUs; communication is a single final reduction.  We generalize to a JAX
+mesh with any number of axes (e.g. ("pod", "data", "model")):
+
+* **two-level split** -- space -> per-device ranges (shard_map) -> per-device
+  chunks (Alg. 3 / CEG inside the chunk engine).
+* **over-decomposition** -- every device's range is further cut into
+  ``slices_per_device`` slices; slice results are independent partial sums.
+  This is the straggler-mitigation / fault-tolerance granularity: a
+  restarted or re-scaled job only recomputes unfinished slices.
+* **deterministic reduction** -- per-slice twofloat sums are psum'd over all
+  mesh axes (one scalar pair; the paper's "communication is negligible").
+
+APIs:
+  ``permanent_on_mesh``     one-shot functional API (psum reduction)
+  ``slice_sums_on_mesh``    per-device slice sums, no reduction (wave mode)
+  ``DistributedPermanent``  checkpoint/restart + elastic runner (core.resume)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P_
+
+from . import gray as G
+from . import precision as P
+from .ryser import chunk_geometry, nw_base_vector, _final_factor
+
+__all__ = ["permanent_on_mesh", "slice_sums_on_mesh", "DistributedPermanent",
+           "plan_slices"]
+
+
+def plan_slices(n: int, num_devices: int, slices_per_device: int = 8,
+                lanes_per_device: int = 1024):
+    """Static decomposition of the 2^{n-1} step space.
+
+    Returns (total_slices, chunks_per_slice, chunk_size) such that
+    ``total_slices * chunks_per_slice * chunk_size == 2^{n-1}`` with
+    power-of-two chunk_size >= 2 (CEG alignment) and total_slices a
+    power-of-two multiple of num_devices when possible.
+    """
+    want_chunks = num_devices * slices_per_device * lanes_per_device
+    T, C, _ = chunk_geometry(n, want_chunks)
+    ts = num_devices * slices_per_device
+    ts = 1 << int(math.ceil(math.log2(ts)))
+    while ts > 1 and (T % ts != 0 or T // ts < 1):
+        ts //= 2
+    return ts, T // ts, C
+
+
+def _dyn_chunk_partials(A, first_chunk, T: int, C: int, precision: str):
+    """Chunk partial sums with a *traced* starting chunk index.
+
+    Mirrors ``ryser.chunk_partial_sums`` but computes the Gray-code init
+    bits and the tail schedule with jnp uint64 bit math, so the chunk
+    offset may be a device-varying traced value -- required under
+    shard_map, where every device runs the same program on different
+    slice ids.  Needs jax_enable_x64 for n > 31 (the Pallas kernel uses a
+    32-bit pair encoding on real TPUs instead; see kernels/ryser_pallas).
+    """
+    n = A.shape[0]
+    k = int(math.log2(C))
+    assert C == 1 << k and k >= 1
+    dtype = A.dtype
+    space = jnp.uint64(1) << jnp.uint64(n - 1)
+
+    x_base = nw_base_vector(A)
+    starts = (first_chunk.astype(jnp.uint64)
+              + jnp.arange(T, dtype=jnp.uint64)) * jnp.uint64(C)
+    gray_s = starts ^ (starts >> jnp.uint64(1))
+    jbits = jnp.arange(n, dtype=jnp.uint64)[:, None]
+    Gbits = ((gray_s[None, :] >> jbits) & jnp.uint64(1)).astype(dtype)  # (n,T)
+    X0 = x_base[:, None] + A @ Gbits
+
+    # schedules for w = 1..C-1 (host constants -- identical for all chunks)
+    sched = G.changed_bit_schedule(k)
+    w_arr = np.arange(1, C, dtype=np.uint64)
+    jj = sched.astype(np.uint64)
+    bit_j = ((w_arr >> jj) ^ (w_arr >> (jj + np.uint64(1)))) & np.uint64(1)
+    mid_mask = (jj + 1 == k)
+    sched_j = jnp.asarray(sched)
+    base_bits = jnp.asarray(bit_j.astype(np.int32))
+    mid_flags = jnp.asarray(mid_mask.astype(np.int32))
+    w_parity = jnp.asarray((w_arr & np.uint64(1)).astype(np.int32))
+    lane_bitk = ((starts >> jnp.uint64(k)) & jnp.uint64(1)).astype(jnp.int32)
+
+    # tail step (w = C): traced bit math
+    g_tail = starts + jnp.uint64(C)
+    low = g_tail & (~g_tail + jnp.uint64(1))
+    tail_j = jax.lax.population_count(low - jnp.uint64(1)).astype(jnp.int32)
+    gray_t = g_tail ^ (g_tail >> jnp.uint64(1))
+    tail_sign = jnp.where((gray_t & low) != 0, 1.0, -1.0).astype(dtype)
+    tail_live = g_tail <= (space - jnp.uint64(1))
+    tail_j = jnp.where(tail_live, tail_j, 0)
+
+    def accum(acc, term):
+        if precision == "dq_fast":
+            t = P.tf_add_fast(P.TwoFloat(*acc), term)
+            return (t.hi, t.lo)
+        if precision in ("dq_acc", "qq"):
+            t = P.tf_add_acc(P.TwoFloat(*acc), term)
+            return (t.hi, t.lo)
+        if precision == "kahan":
+            return P.kahan_add(acc, term)
+        return (acc[0] + term, acc[1])  # dd
+
+    def scan_body(carry, inputs):
+        X, acc = carry
+        col_j, bit, midf, par = inputs
+        sign_bits = bit ^ (midf & lane_bitk)
+        s = (2 * sign_bits - 1).astype(dtype)
+        X = X + A[:, col_j][:, None] * s[None, :]
+        prod = jnp.prod(X, axis=0)
+        term = jnp.where(par == 1, -prod, prod)
+        return (X, accum(acc, term)), None
+
+    # derive the zero accumulator from X0 so its varying-manual-axes match
+    # under shard_map (JAX >= 0.8 vma typing)
+    z = X0[0] * 0
+    (X, acc), _ = jax.lax.scan(
+        scan_body, (X0, (z, z)), (sched_j, base_bits, mid_flags, w_parity))
+
+    # tail: per-lane column via one-hot matmul (gather-free; kernel-identical)
+    onehot = (tail_j[None, :] == jnp.arange(n, dtype=jnp.int32)[:, None])
+    X = X + (A @ onehot.astype(dtype)) \
+        * (tail_sign * tail_live.astype(dtype))[None, :]
+    prod = jnp.prod(X, axis=0)
+    neg = (C & 1) == 1
+    term = jnp.where(tail_live, -prod if neg else prod, jnp.zeros_like(prod))
+    acc = accum(acc, term)
+    if precision in ("kahan", "dd"):
+        return P.TwoFloat(acc[0], jnp.zeros_like(acc[0]))
+    return P.TwoFloat(acc[0], acc[1])
+
+
+def _device_body(A_rep, slices_local, *, spd, chunks_per_slice, C, precision):
+    """Sum the slices owned by one device; returns scalar twofloat."""
+    acc = P.TwoFloat(jnp.zeros((), A_rep.dtype), jnp.zeros((), A_rep.dtype))
+    for i in range(spd):
+        first_chunk = slices_local[0, i] * chunks_per_slice
+        parts = _dyn_chunk_partials(A_rep, first_chunk, chunks_per_slice, C,
+                                    precision)
+        h, l = P.two_sum(jnp.sum(parts.hi), jnp.sum(parts.lo))
+        acc = P.tf_add_tf(acc, P.TwoFloat(h, l))
+    return acc
+
+
+def permanent_on_mesh(A, mesh: Mesh, *, precision: str = "dq_acc",
+                      slices_per_device: int = 1,
+                      lanes_per_device: int = 1024,
+                      backend: str = "jnp"):
+    """One-shot distributed permanent over every device of ``mesh``.
+
+    The iteration space is sharded over *all* mesh axes; ``A`` is replicated
+    (it is tiny); the result is the psum of twofloat partials -- the same
+    communication structure as the paper's MPI reduce.
+
+    backend="pallas" runs the TPU kernel (interpret-mode on CPU) on each
+    device's chunk range instead of the jnp engine -- the full production
+    path: two-level split -> Pallas grid -> lanes -> one psum.
+    """
+    A = jnp.asarray(A)
+    n = A.shape[0]
+    D = math.prod(mesh.devices.shape)
+    total_slices, chunks_per_slice, C = plan_slices(
+        n, D, slices_per_device, lanes_per_device)
+    spd = max(1, total_slices // D)
+    axes = tuple(mesh.axis_names)
+    slice_table = np.arange(D * spd, dtype=np.int32).reshape(D, spd)
+    # slices beyond total_slices would double-count; plan_slices pads the
+    # slice count to a power of two <= D*spd, so clamp via masking
+    live = (slice_table < total_slices)
+    slice_table = np.where(live, slice_table, 0)
+
+    dev_slices = jax.device_put(slice_table,
+                                NamedSharding(mesh, P_(axes)))
+    dev_live = jax.device_put(live.astype(np.float64),
+                              NamedSharding(mesh, P_(axes)))
+
+    def device_partials(A_rep, first_chunk):
+        if backend == "pallas":
+            return _pallas_device_partials(A_rep, first_chunk,
+                                           chunks_per_slice, C, precision,
+                                           vma=frozenset(axes))
+        return _dyn_chunk_partials(A_rep, first_chunk, chunks_per_slice, C,
+                                   precision)
+
+    @jax.jit
+    def run(A, dev_slices, dev_live):
+        def body(A_rep, slices_local, live_local):
+            acc = P.TwoFloat(jnp.zeros((), A_rep.dtype),
+                             jnp.zeros((), A_rep.dtype))
+            for i in range(slices_local.shape[1]):
+                first_chunk = slices_local[0, i] * chunks_per_slice
+                parts = device_partials(A_rep, first_chunk)
+                m = live_local[0, i].astype(A_rep.dtype)
+                h, l = P.two_sum(jnp.sum(parts.hi) * m, jnp.sum(parts.lo) * m)
+                acc = P.tf_add_tf(acc, P.TwoFloat(h, l))
+            hi, lo = acc
+            for ax in axes:
+                hi = jax.lax.psum(hi, ax)
+                lo = jax.lax.psum(lo, ax)
+            return hi, lo
+
+        # check_vma=False: interpret-mode pallas inside shard_map trips
+        # the vma typing on its internal grid dynamic_slices
+        return jax.shard_map(body, mesh=mesh,
+                             in_specs=(P_(), P_(axes), P_(axes)),
+                             out_specs=(P_(), P_()),
+                             check_vma=False)(A, dev_slices, dev_live)
+
+    hi, lo = run(A, dev_slices, dev_live)
+    p0 = jnp.prod(nw_base_vector(A))
+    total = P.tf_add_acc(P.TwoFloat(hi, lo), p0)
+    return P.tf_value(total) * _final_factor(n)
+
+
+def slice_sums_on_mesh(A, mesh: Mesh, slice_ids: np.ndarray, *,
+                       chunks_per_slice: int, chunk_size: int,
+                       precision: str = "dq_acc", backend: str = "jnp"):
+    """Per-slice twofloat sums for one wave of D slices (no reduction).
+
+    slice_ids: (D,) int32, one slice per device (pad with any id; the host
+    discards dead entries).  Returns (his, los) of shape (D,).
+    """
+    A = jnp.asarray(A)
+    D = math.prod(mesh.devices.shape)
+    assert slice_ids.shape == (D,)
+    axes = tuple(mesh.axis_names)
+    dev_slices = jax.device_put(slice_ids.reshape(D, 1),
+                                NamedSharding(mesh, P_(axes)))
+
+    @jax.jit
+    def run(A, dev_slices):
+        def body(A_rep, slices_local):
+            first_chunk = slices_local[0, 0] * chunks_per_slice
+            if backend == "pallas":
+                parts = _pallas_device_partials(
+                    A_rep, first_chunk, chunks_per_slice, chunk_size,
+                    precision, vma=frozenset(axes))
+            else:
+                parts = _dyn_chunk_partials(A_rep, first_chunk,
+                                            chunks_per_slice,
+                                            chunk_size, precision)
+            h, l = P.two_sum(jnp.sum(parts.hi), jnp.sum(parts.lo))
+            return h[None], l[None]
+
+        return jax.shard_map(body, mesh=mesh,
+                             in_specs=(P_(), P_(axes)),
+                             out_specs=(P_(axes), P_(axes)),
+                             check_vma=False)(A, dev_slices)
+
+    his, los = run(A, dev_slices)
+    return np.asarray(his), np.asarray(los)
+
+
+def _pallas_device_partials(A_rep, first_chunk, T: int, C: int,
+                            precision: str, vma=None):
+    """Per-device Pallas kernel over the chunk range [first_chunk,
+    first_chunk+T); the kernel's u64 lane math consumes the traced base
+    index, so the same program serves every device (shard_map-safe)."""
+    from ..kernels.ops import pad_matrix, pad_base_vector
+    from ..kernels.ryser_pallas import ryser_pallas_call
+    from .ryser import nw_base_vector
+
+    n = A_rep.shape[0]
+    TB = min(128, T)
+    num_blocks = T // TB
+    Wu = min(16, C)
+    A_pad = pad_matrix(A_rep)
+    xb = pad_base_vector(nw_base_vector(A_rep), A_pad.shape[0]).reshape(-1, 1)
+    prec = precision if precision in ("dd", "kahan", "dq_acc") else "dq_acc"
+    out = ryser_pallas_call(
+        A_pad, xb, first_chunk, n=n, TB=TB, C=C, Wu=Wu,
+        num_blocks=num_blocks, precision=prec, mode="batched",
+        interpret=True, vma=vma)
+    return P.TwoFloat(out[:, 0], out[:, 1])
+
+
+@dataclass
+class DistributedPermanent:
+    """Checkpointable, elastic multi-slice permanent job.
+
+    The unit of work is a *slice* (contiguous block of chunks).  ``run()``
+    executes unfinished slices in device-count-sized waves, checkpointing
+    after each wave; it can resume under a different mesh (elastic) because
+    slice sums are position-independent addends.
+    """
+    mesh: Mesh
+    precision: str = "dq_acc"
+    slices_per_device: int = 8
+    lanes_per_device: int = 1024
+    checkpoint_path: str | None = None
+    backend: str = "jnp"          # "pallas" -> per-device TPU kernel
+
+    def permanent(self, A, progress_cb=None):
+        from .resume import JobState  # local import to avoid cycle
+        A = np.asarray(A)
+        n = A.shape[0]
+        D = math.prod(self.mesh.devices.shape)
+        total_slices, chunks_per_slice, C = plan_slices(
+            n, D, self.slices_per_device, self.lanes_per_device)
+        state = JobState.load_or_create(self.checkpoint_path, matrix=A,
+                                        total_slices=total_slices)
+        pending = state.pending_slices()
+        for w0 in range(0, len(pending), D):
+            wave = pending[w0:w0 + D]
+            ids = np.array(list(wave) + [0] * (D - len(wave)), dtype=np.int32)
+            his, los = slice_sums_on_mesh(
+                A, self.mesh, ids, chunks_per_slice=chunks_per_slice,
+                chunk_size=C, precision=self.precision,
+                backend=self.backend)
+            state.record_wave(wave, his[:len(wave)], los[:len(wave)])
+            if self.checkpoint_path:
+                state.save(self.checkpoint_path)
+            if progress_cb:
+                progress_cb(state)
+
+        hi, lo = state.reduce()
+        p0 = float(np.prod(np.asarray(nw_base_vector(jnp.asarray(A)))))
+        total = P.tf_add_acc(
+            P.TwoFloat(jnp.asarray(hi), jnp.asarray(lo)), jnp.asarray(p0))
+        return float(P.tf_value(total)) * _final_factor(n)

@@ -1,0 +1,129 @@
+"""SUperman engine: the paper's end-to-end dispatch (Alg. 4) as a library.
+
+``permanent(A, ...)`` is the public entry point.  Pipeline:
+
+  1. type sniffing        real / complex / binary-integer
+  2. DM elimination       (Sec. 4.1, optional)   -- may zero the matrix
+  3. Forbert-Marx         (Sec. 4.2, optional)   -- leaves with minNnz > 4
+  4. per-leaf dispatch    density >= 30% -> dense ParRyser;
+                          sparsity > 70% -> ParSpaRyser     (Alg. 4 l.12-15)
+  5. precision mode       dd / dq_fast / dq_acc / qq / kahan (Sec. 5)
+  6. backend              "jnp" chunked engines, "pallas" kernel, or
+                          "distributed" (mesh shard_map, core.distributed)
+
+Complex matrices run the dense path with native complex dtype (twofloat
+compensation is applied per real/imaginary component by the complex-safe
+accumulators; `qq` is unsupported for complex and falls back to kahan).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from . import decompose as D
+from . import ryser as R
+from . import sparyser as S
+
+__all__ = ["permanent", "PermanentReport", "DENSITY_SWITCH"]
+
+# Alg. 4: dense kernel when nonzero density >= 30%
+DENSITY_SWITCH = 0.30
+
+
+@dataclass
+class PermanentReport:
+    """Everything the engine did, for logging / EXPERIMENTS.md."""
+    value: complex | float = 0.0
+    n: int = 0
+    nnz: int = 0
+    density: float = 1.0
+    dm_removed: int = 0
+    fm_leaves: int = 0
+    leaf_sizes: list[int] = field(default_factory=list)
+    dispatch: list[str] = field(default_factory=list)
+    precision: str = "dq_acc"
+    backend: str = "jnp"
+
+
+def _leaf_value(M: np.ndarray, precision: str, num_chunks: int,
+                backend: str, report: PermanentReport,
+                distributed_ctx: Any | None):
+    n = M.shape[0]
+    density = float((M != 0).sum()) / max(1, n * n)
+    if n <= 2 or density >= DENSITY_SWITCH:
+        report.dispatch.append(f"dense(n={n})")
+        if backend == "pallas" and n >= 4 and not np.iscomplexobj(M):
+            from ..kernels import ops as K
+            return complex(K.permanent_pallas(M, precision=precision)).real
+        if backend == "distributed" and distributed_ctx is not None:
+            return distributed_ctx.permanent(M, precision=precision)
+        val = R.perm_ryser_chunked(M, num_chunks=num_chunks,
+                                   precision=precision)
+        return np.asarray(val).item()
+    report.dispatch.append(f"sparse(n={n})")
+    sp = S.SparseMatrix.from_dense(M)
+    return S.perm_sparyser_chunked(sp, num_chunks=num_chunks,
+                                   precision=precision)
+
+
+def permanent(A, *, precision: str = "dq_acc", preprocess: bool = True,
+              dm: bool | None = None, fm: bool | None = None,
+              num_chunks: int = 4096, backend: str = "jnp",
+              distributed_ctx: Any | None = None,
+              return_report: bool = False):
+    """Compute perm(A) the SUperman way.
+
+    Args:
+      A: (n, n) array-like; real, complex or integer entries.
+      precision: one of ``dd | dq_fast | dq_acc | qq | kahan`` (Table 3).
+      preprocess: master switch for DM + FM preprocessing (Sec. 4).
+      dm / fm: override the individual preprocessing stages.
+      num_chunks: parallel chunk count (Alg. 3's tau); rounded to a power
+        of two per the CEG load distribution.
+      backend: ``jnp`` (chunked engines), ``pallas`` (TPU kernel,
+        interpret-mode on CPU), ``distributed`` (mesh-wide shard_map; pass
+        ``distributed_ctx`` from ``core.distributed.DistributedPermanent``).
+      return_report: also return a PermanentReport.
+    """
+    A = np.asarray(A)
+    if A.ndim != 2 or A.shape[0] != A.shape[1]:
+        raise ValueError(f"square matrix required, got {A.shape}")
+    n = A.shape[0]
+    is_complex = np.iscomplexobj(A)
+    if is_complex and precision == "qq":
+        precision = "kahan"
+    work = A.astype(np.complex128 if is_complex else np.float64)
+
+    report = PermanentReport(n=n, nnz=int((work != 0).sum()),
+                             precision=precision, backend=backend)
+    report.density = report.nnz / max(1, n * n)
+
+    do_dm = preprocess if dm is None else dm
+    do_fm = preprocess if fm is None else fm
+
+    if do_dm and report.density < 0.5 and n >= 3:
+        work, removed = D.dm_eliminate(work)
+        report.dm_removed = removed
+        if not work.any():
+            report.value = 0.0 + 0.0j if is_complex else 0.0
+            return (report.value, report) if return_report else report.value
+
+    if do_fm and n >= 3:
+        leaves = D.fm_decompose(work)
+    else:
+        leaves = [D.Leaf(1.0, work)]
+    report.fm_leaves = len(leaves)
+    report.leaf_sizes = [l.matrix.shape[0] for l in leaves]
+
+    total = 0.0 + 0.0j if is_complex else 0.0
+    for leaf in leaves:
+        if leaf.matrix.shape == (1, 1) and leaf.matrix[0, 0] == 1:
+            total += leaf.coef
+            continue
+        total += leaf.coef * _leaf_value(leaf.matrix, precision, num_chunks,
+                                         backend, report, distributed_ctx)
+    report.value = total if is_complex else float(np.real(total))
+    return (report.value, report) if return_report else report.value

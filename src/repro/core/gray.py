@@ -1,0 +1,113 @@
+"""Gray-code machinery for Ryser/Nijenhuis-Wilf permanent computation.
+
+The Nijenhuis-Wilf variant iterates column subsets S of {0..n-2} in binary
+reflected Gray-code order: at global step ``g`` (1-based) the changed bit is
+``j = ctz(g)`` and its new value is bit ``j`` of ``gray(g) = g ^ (g >> 1)``.
+
+Window/alignment properties used throughout the framework (the TPU analogue
+of the paper's CEG optimization, Sec. 3.2.1):
+
+* ``CBL_n`` (changed-bit-location sequence) is a palindrome and satisfies
+  ``CBL_n = CBL_{n-1} + [n-1] + CBL_{n-1}``, hence for chunks of size
+  ``2^k`` starting at multiples of ``2^k``, the changed bit at local step
+  ``w`` is ``ctz(w)`` -- identical for every chunk -- for all ``w < 2^k``.
+  Only the final local step (``w = 2^k``) has a chunk-dependent bit.
+* The accumulation sign ``(-1)^g`` equals ``(-1)^w`` for aligned power-of-2
+  chunks (the chunk base ``t * 2^k`` is even for ``k >= 1``).
+
+All helpers are dual: Python-int versions for trace-time constant folding
+(the analogue of the paper's matrix-specific rebuild) and jnp versions for
+in-kernel vectorized evaluation over lanes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "gray",
+    "ctz",
+    "gray_bit",
+    "step_sign",
+    "changed_bit_schedule",
+    "gray_bits_matrix",
+    "gray_code_jnp",
+    "step_sign_jnp",
+    "accum_sign",
+]
+
+
+# ---------------------------------------------------------------------------
+# Python-int versions (trace-time constants; exact for any n via bigints)
+# ---------------------------------------------------------------------------
+
+def gray(g: int) -> int:
+    """The g-th binary reflected Gray code."""
+    return g ^ (g >> 1)
+
+
+def ctz(g: int) -> int:
+    """Count trailing zeros == index of the bit changed at step g (g >= 1)."""
+    if g <= 0:
+        raise ValueError("ctz requires g >= 1")
+    return (g & -g).bit_length() - 1
+
+
+def gray_bit(g: int, j: int) -> int:
+    """Bit j of gray(g)."""
+    return (gray(g) >> j) & 1
+
+
+def step_sign(g: int) -> int:
+    """+1 if the changed bit at step g turned on, else -1.
+
+    The changed bit is ``j = ctz(g)``; its new value is ``gray_bit(g, j)``.
+    """
+    return 2 * gray_bit(g, ctz(g)) - 1
+
+
+def accum_sign(g: int) -> int:
+    """(-1)^g factor applied to the step-g product term."""
+    return -1 if (g & 1) else 1
+
+
+def changed_bit_schedule(chunk_log2: int) -> np.ndarray:
+    """Changed-bit index for local steps ``w = 1 .. 2^k - 1`` of an aligned
+    power-of-2 chunk (identical for every chunk; the last step ``w = 2^k``
+    is chunk-dependent and excluded).  Length ``2^k - 1``.
+    """
+    k = chunk_log2
+    return np.array([ctz(w) for w in range(1, 1 << k)], dtype=np.int32)
+
+
+def gray_bits_matrix(starts: np.ndarray, nbits: int) -> np.ndarray:
+    """(nbits, T) 0/1 matrix: column t holds the bits of gray(starts[t]).
+
+    Used to initialize per-chunk row-sum vectors with one matmul:
+    ``X0 = x_base[:, None] + A @ G`` (the MXU analogue of Alg. 3 lines 10-13).
+    """
+    starts = np.asarray(starts, dtype=np.uint64)
+    g = starts ^ (starts >> np.uint64(1))
+    j = np.arange(nbits, dtype=np.uint64)[:, None]
+    return ((g[None, :] >> j) & np.uint64(1)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# jnp versions (vectorized over lanes inside kernels / shard_map bodies)
+# ---------------------------------------------------------------------------
+
+def gray_code_jnp(g):
+    """gray(g) for integer arrays (uint32/uint64)."""
+    return g ^ (g >> 1)
+
+
+def step_sign_jnp(g, j):
+    """Vectorized step sign: +1 if bit j of gray(g) is 1 else -1 (float32).
+
+    ``bit_j(gray(g)) = (g >> j ^ g >> (j+1)) & 1`` avoids computing gray(g)
+    for wide integer types.
+    """
+    one = jnp.ones((), dtype=g.dtype)
+    b = ((g >> j) ^ (g >> (j + one))) & one
+    return (2 * b.astype(jnp.int32) - 1)

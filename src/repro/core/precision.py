@@ -1,0 +1,169 @@
+"""Compensated floating-point arithmetic (paper Sec. 5).
+
+The paper's precision ladder -- DD / DQ[30] / DQ[31] / QQ / Kahan[29] --
+emulates quad precision with pairs of doubles on GPUs.  TPUs have no f64
+hardware, so the framework makes the ladder *dtype-generic*: a ``twofloat``
+``(hi, lo)`` pair doubles the mantissa of any base dtype:
+
+    base f32  -> df32 (~49-bit mantissa)  -- the on-TPU "quad"
+    base f64  -> df64 (~106-bit mantissa) -- the paper's emulated quad (CPU)
+
+All primitives are branch-free jnp expressions usable inside Pallas kernels,
+``lax.scan`` bodies, and ``shard_map`` regions.
+
+References: Dekker 1971 [30] (fast/sloppy add, split, two_prod),
+Knuth TwoSum (accurate add, the NVIDIA-forum variant [31]), Kahan 1965 [29].
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "two_sum",
+    "fast_two_sum",
+    "split",
+    "two_prod",
+    "TwoFloat",
+    "tf_zero",
+    "tf_from",
+    "tf_add_fast",
+    "tf_add_acc",
+    "tf_add_tf",
+    "tf_mul",
+    "tf_mul_tf",
+    "tf_neg",
+    "tf_value",
+    "kahan_init",
+    "kahan_add",
+    "PRECISION_MODES",
+]
+
+
+# ---------------------------------------------------------------------------
+# Error-free transformations
+# ---------------------------------------------------------------------------
+
+def two_sum(a, b):
+    """Knuth TwoSum: s + e == a + b exactly (6 flops, branch-free)."""
+    s = a + b
+    bp = s - a
+    e = (a - (s - bp)) + (b - bp)
+    return s, e
+
+
+def fast_two_sum(a, b):
+    """Dekker FastTwoSum: requires |a| >= |b| (3 flops)."""
+    s = a + b
+    e = b - (s - a)
+    return s, e
+
+
+def _split_const(dtype) -> float:
+    """Dekker splitting constant 2^ceil(p/2) + 1 for p-bit mantissa."""
+    p = jnp.finfo(dtype).nmant + 1  # mantissa bits incl. implicit
+    return float((1 << ((p + 1) // 2)) + 1)
+
+
+def split(a):
+    """Dekker split: a == hi + lo with hi, lo having ~p/2 mantissa bits."""
+    c = _split_const(a.dtype) * a
+    hi = c - (c - a)
+    lo = a - hi
+    return hi, lo
+
+
+def two_prod(a, b):
+    """Dekker TwoProd via splitting (no FMA assumed): p + e == a * b."""
+    p = a * b
+    ah, al = split(a)
+    bh, bl = split(b)
+    e = ((ah * bh - p) + ah * bl + al * bh) + al * bl
+    return p, e
+
+
+# ---------------------------------------------------------------------------
+# TwoFloat ("emulated quad" for any base dtype)
+# ---------------------------------------------------------------------------
+
+class TwoFloat(NamedTuple):
+    hi: jnp.ndarray
+    lo: jnp.ndarray
+
+
+def tf_zero(dtype=jnp.float64, shape=()) -> TwoFloat:
+    z = jnp.zeros(shape, dtype=dtype)
+    return TwoFloat(z, z)
+
+
+def tf_from(x) -> TwoFloat:
+    return TwoFloat(x, jnp.zeros_like(x))
+
+
+def tf_add_fast(t: TwoFloat, b) -> TwoFloat:
+    """t + b, Dekker-style sloppy add (the paper's DQ[30]; 10-flop class).
+
+    Accurate when no catastrophic cancellation between hi parts; cheapest.
+    """
+    s, e = two_sum(t.hi, b)
+    return TwoFloat(*fast_two_sum(s, e + t.lo))
+
+
+def tf_add_acc(t: TwoFloat, b) -> TwoFloat:
+    """t + b, accurate two_sum-based add (the paper's DQ[31]; 18-flop class)."""
+    s, e = two_sum(t.hi, b)
+    lo, e2 = two_sum(t.lo, e)
+    hi, lo = fast_two_sum(s, lo)
+    return TwoFloat(*fast_two_sum(hi, lo + e2))
+
+
+def tf_add_tf(a: TwoFloat, b: TwoFloat) -> TwoFloat:
+    """Full twofloat + twofloat add (used for the outer/global reduction)."""
+    s, e = two_sum(a.hi, b.hi)
+    e = e + a.lo + b.lo
+    return TwoFloat(*fast_two_sum(s, e))
+
+
+def tf_mul(t: TwoFloat, b) -> TwoFloat:
+    """t * scalar b."""
+    p, e = two_prod(t.hi, b)
+    return TwoFloat(*fast_two_sum(p, e + t.lo * b))
+
+
+def tf_mul_tf(a: TwoFloat, b: TwoFloat) -> TwoFloat:
+    p, e = two_prod(a.hi, b.hi)
+    e = e + (a.hi * b.lo + a.lo * b.hi)
+    return TwoFloat(*fast_two_sum(p, e))
+
+
+def tf_neg(t: TwoFloat) -> TwoFloat:
+    return TwoFloat(-t.hi, -t.lo)
+
+
+def tf_value(t: TwoFloat):
+    return t.hi + t.lo
+
+
+# ---------------------------------------------------------------------------
+# Kahan compensated accumulation
+# ---------------------------------------------------------------------------
+
+def kahan_init(dtype=jnp.float64, shape=()):
+    z = jnp.zeros(shape, dtype=dtype)
+    return (z, z)
+
+
+def kahan_add(acc, x):
+    """acc = (sum, c); returns updated (sum, c) with compensation c."""
+    s, c = acc
+    y = x - c
+    t = s + y
+    c = (t - s) - y
+    return (t, c)
+
+
+# The engine-level precision modes mirroring the paper's Table 3 columns.
+# inner-product dtype x partial-sum accumulation strategy.
+PRECISION_MODES = ("dd", "dq_fast", "dq_acc", "qq", "kahan")

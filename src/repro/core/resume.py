@@ -1,0 +1,128 @@
+"""Checkpoint / restart state for distributed permanent jobs.
+
+A permanent job's durable state is tiny: the matrix fingerprint, the slice
+decomposition, and per-slice twofloat partial sums.  Slices are independent
+addends, so:
+
+* a crashed job resumes from the last snapshot, losing at most one wave;
+* a resumed job may use a different device count (elastic) -- waves are
+  re-formed from the pending slice set;
+* stragglers only delay their own wave; completed slices are never redone.
+
+The file format is a single ``.npz`` (atomic rename on save).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import tempfile
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import precision as P
+
+__all__ = ["JobState"]
+
+
+def matrix_fingerprint(A: np.ndarray) -> str:
+    A = np.ascontiguousarray(A)
+    h = hashlib.sha256()
+    h.update(str(A.shape).encode())
+    h.update(str(A.dtype).encode())
+    h.update(A.tobytes())
+    return h.hexdigest()[:32]
+
+
+@dataclass
+class JobState:
+    fingerprint: str
+    total_slices: int
+    done: np.ndarray          # (total_slices,) bool
+    hi: np.ndarray            # (total_slices,) f64 partial sums
+    lo: np.ndarray            # (total_slices,) f64 compensation terms
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def create(matrix: np.ndarray, total_slices: int) -> "JobState":
+        return JobState(
+            fingerprint=matrix_fingerprint(matrix),
+            total_slices=total_slices,
+            done=np.zeros(total_slices, dtype=bool),
+            hi=np.zeros(total_slices, dtype=np.float64),
+            lo=np.zeros(total_slices, dtype=np.float64))
+
+    @staticmethod
+    def load(path: str) -> "JobState":
+        with np.load(path, allow_pickle=False) as z:
+            return JobState(
+                fingerprint=str(z["fingerprint"]),
+                total_slices=int(z["total_slices"]),
+                done=z["done"], hi=z["hi"], lo=z["lo"])
+
+    @staticmethod
+    def load_or_create(path: str | None, matrix: np.ndarray,
+                       total_slices: int) -> "JobState":
+        if path and os.path.exists(path):
+            state = JobState.load(path)
+            if state.fingerprint != matrix_fingerprint(matrix):
+                raise ValueError(
+                    "checkpoint belongs to a different matrix "
+                    f"({state.fingerprint})")
+            if state.total_slices != total_slices:
+                raise ValueError(
+                    f"checkpoint has {state.total_slices} slices, plan has "
+                    f"{total_slices}; re-plan with matching slices_per_device"
+                    " x devices or finish with the original decomposition")
+            return state
+        return JobState.create(matrix, total_slices)
+
+    # ------------------------------------------------------------------
+    def pending_slices(self) -> list[int]:
+        return [int(i) for i in np.nonzero(~self.done)[0]]
+
+    def record_wave(self, slice_ids, his, los) -> None:
+        for sid, h, l in zip(slice_ids, his, los):
+            self.done[sid] = True
+            self.hi[sid] = float(h)
+            self.lo[sid] = float(l)
+
+    def fraction_done(self) -> float:
+        return float(self.done.mean())
+
+    def reduce(self):
+        """Twofloat sum of all completed slice partials (deterministic)."""
+        hi, lo = 0.0, 0.0
+        for i in np.nonzero(self.done)[0]:
+            s, e = _two_sum_host(hi, self.hi[i])
+            lo = lo + e + self.lo[i]
+            hi = s
+        # renormalize
+        s, e = _two_sum_host(hi, lo)
+        return s, e
+
+    def save(self, path: str) -> None:
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+        os.close(fd)
+        try:
+            np.savez(tmp, fingerprint=self.fingerprint,
+                     total_slices=self.total_slices,
+                     done=self.done, hi=self.hi, lo=self.lo)
+            # np.savez appends .npz to names without it
+            produced = tmp if tmp.endswith(".npz") else tmp + ".npz"
+            if os.path.exists(produced) and produced != tmp:
+                os.replace(produced, tmp)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+
+def _two_sum_host(a: float, b: float):
+    s = a + b
+    bp = s - a
+    e = (a - (s - bp)) + (b - bp)
+    return s, e

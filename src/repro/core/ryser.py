@@ -1,0 +1,263 @@
+"""Dense Gray-code Ryser permanent engines (paper Alg. 1 / Alg. 3) in JAX.
+
+Three engines, all returning ``perm(A)``:
+
+* ``perm_ryser_seq``     -- faithful sequential Alg. 1 (one ``lax.scan`` over
+  the 2^{n-1}-1 Gray steps).  Reference semantics; O(n 2^{n-1}).
+* ``perm_ryser_chunked`` -- faithful Alg. 3: the iteration space is split in
+  ``T`` chunks; each chunk rebuilds its private row-sum vector from
+  ``Gray(start-1)`` (here: one matmul ``A @ G``) and iterates locally.
+  Chunks are *power-of-2, window-aligned* (the paper's CEG load
+  distribution, Sec. 3.2.1) so the changed bit is chunk-uniform at every
+  local step except each window's last -- in vectorized form the column
+  update is a broadcast, not a gather.
+* the same chunked body is reused per-device by ``core.distributed`` and in
+  matmul ("window-batched") form by the Pallas kernel.
+
+Precision modes (paper Table 3): ``dd`` (plain), ``dq_fast`` (Dekker add,
+[30]), ``dq_acc`` (accurate add, [31]), ``qq`` (twofloat inner product too),
+``kahan`` ([29]).  The outer cross-chunk reduction is always twofloat
+("quad for the outer sum", Sec. 5).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gray as G
+from . import precision as P
+
+__all__ = [
+    "nw_base_vector",
+    "perm_ryser_seq",
+    "perm_ryser_chunked",
+    "chunk_partial_sums",
+    "chunk_geometry",
+    "ryser_flops",
+]
+
+
+def nw_base_vector(A):
+    """Nijenhuis-Wilf start vector  x[i] = a[i, n-1] - rowsum_i / 2."""
+    rowsum = jnp.sum(A, axis=1)
+    return A[:, -1] - rowsum / 2
+
+
+def _final_factor(n: int) -> int:
+    """(4 * (n mod 2) - 2) == 2 * (-1)^{n-1}."""
+    return 4 * (n % 2) - 2
+
+
+def ryser_flops(n: int) -> float:
+    """Model FLOPs of the chunked engine: ~2n per Gray step (n adds for the
+    row-sum update + n mults for the product) over 2^{n-1} steps."""
+    return 2.0 * n * 2.0 ** (n - 1)
+
+
+# ---------------------------------------------------------------------------
+# Sequential (faithful Alg. 1)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n",))
+def _ryser_seq_jit(A, n: int):
+    idx_dtype = jnp.int64 if n > 31 else jnp.int32
+    x0 = nw_base_vector(A)
+    p0 = jnp.prod(x0)
+
+    def body(carry, g):
+        x, acc_hi, acc_lo = carry
+        low = g & -g
+        j = jax.lax.population_count(low - 1)
+        gray_g = g ^ (g >> 1)
+        s = jnp.where((gray_g & low) != 0, 1.0, -1.0).astype(A.dtype)
+        x = x + s * A[:, j]
+        prod = jnp.prod(x)
+        term = jnp.where((g & 1) != 0, -prod, prod)
+        acc = P.tf_add_acc(P.TwoFloat(acc_hi, acc_lo), term)
+        return (x, acc.hi, acc.lo), None
+
+    gs = jnp.arange(1, 2 ** (n - 1), dtype=idx_dtype)
+    (x, hi, lo), _ = jax.lax.scan(body, (x0, p0, jnp.zeros_like(p0)), gs)
+    return (hi + lo) * _final_factor(n)
+
+
+def perm_ryser_seq(A):
+    """Faithful Algorithm 1 with twofloat accumulation. n <= ~26 advised."""
+    A = jnp.asarray(A)
+    n = A.shape[0]
+    if n == 1:
+        return A[0, 0]
+    return _ryser_seq_jit(A, n)
+
+
+# ---------------------------------------------------------------------------
+# Chunked / vectorized (faithful Alg. 3 + CEG chunking)
+# ---------------------------------------------------------------------------
+
+def chunk_geometry(n: int, num_chunks: int):
+    """Power-of-2, window-aligned chunking of the 2^{n-1}-step space.
+
+    Returns (T, C, k): T chunks of C = 2^k local steps; T * C == 2^{n-1},
+    k >= 1 (so chunk starts are even and the accumulation sign is
+    chunk-uniform).  Step ``w`` of chunk ``t`` is global step ``g = t*C + w``.
+    """
+    space = 1 << (n - 1)
+    T = max(1, min(num_chunks, space // 2))
+    T = 1 << int(math.floor(math.log2(T)))  # power of two
+    C = space // T
+    return T, C, int(math.log2(C))
+
+
+def chunk_partial_sums(A, T: int, C: int, precision: str = "dq_acc",
+                       chunk_offset: int = 0, total_chunks: int | None = None):
+    """Per-chunk partial sums for chunks [chunk_offset, chunk_offset + T).
+
+    This is the device-level workhorse reused by ``core.distributed``: each
+    device calls it on its own chunk range.  Returns a TwoFloat of shape (T,)
+    with ``partial[t] = sum_{w=1..C} (-1)^{g} prod_i x_{t,w}[i]`` -- the base
+    (g == 0) term is NOT included (added once by the caller).  Requires
+    C == 2^k with k >= 1 and chunk starts aligned to C.
+    """
+    if total_chunks is None:
+        total_chunks = T
+    n = A.shape[0]
+    k = int(math.log2(C))
+    assert C == 1 << k and k >= 1, "chunks must be power-of-2 sized, C >= 2"
+    space = 1 << (n - 1)
+    assert total_chunks * C == space, (total_chunks, C, space)
+    dtype = A.dtype
+
+    x_base = nw_base_vector(A)
+
+    # --- chunk state init via one matmul (Alg. 3 lines 10-13, MXU form) ---
+    starts = (np.arange(T, dtype=np.uint64) + np.uint64(chunk_offset)) * np.uint64(C)
+    Gbits = jnp.asarray(G.gray_bits_matrix(starts, n), dtype=dtype)  # (n, T)
+    X0 = x_base[:, None] + A @ Gbits                                  # (n, T)
+
+    # --- trace-time schedules (the "matrix-specific rebuild" analogue) ---
+    sched = G.changed_bit_schedule(k)            # (C-1,) uniform changed bits
+    # per-step signs need bits j and j+1 of g = start + w.  For w < C these
+    # depend only on w, except bit k of the start enters at w = C/2.
+    w_arr = np.arange(1, C, dtype=np.uint64)
+    jj = sched.astype(np.uint64)
+    bit_j = ((w_arr >> jj) ^ (w_arr >> (jj + np.uint64(1)))) & np.uint64(1)
+    mid_mask = (jj + 1 == k)                               # only at w = C/2
+    start_bit_k = ((starts >> np.uint64(k)) & np.uint64(1)).astype(np.int32)
+
+    sched_j = jnp.asarray(sched)                           # (C-1,)
+    base_bits = jnp.asarray(bit_j.astype(np.int32))        # (C-1,)
+    mid_flags = jnp.asarray(mid_mask.astype(np.int32))     # (C-1,)
+    w_parity = jnp.asarray((w_arr & np.uint64(1)).astype(np.int32))  # (C-1,)
+    lane_bitk = jnp.asarray(start_bit_k)                   # (T,)
+
+    # tail step (w = C): per-chunk column and sign, host-computed constants.
+    g_tail = starts + np.uint64(C)
+    tail_j = np.array([G.ctz(int(gt)) for gt in g_tail], dtype=np.int32)
+    tail_sign = np.array([G.step_sign(int(gt)) for gt in g_tail], dtype=np.int64)
+    tail_live = g_tail <= np.uint64(space - 1)
+    tail_j = np.where(tail_live, tail_j, 0)
+    Atail = A[:, jnp.asarray(tail_j)] * jnp.asarray(
+        (tail_sign * tail_live).astype(np.float64)).astype(dtype)[None, :]
+
+    use_qq = precision == "qq"
+
+    def tf_update(Xhi, Xlo, d):
+        shi, slo = P.two_sum(Xhi, d)
+        return P.fast_two_sum(shi, slo + Xlo)
+
+    def product(Xhi, Xlo):
+        if not use_qq:
+            return P.tf_from(jnp.prod(Xhi, axis=0))
+        t = P.TwoFloat(Xhi[0], Xlo[0])
+        for i in range(1, n):
+            t = P.tf_mul_tf(t, P.TwoFloat(Xhi[i], Xlo[i]))
+        return t
+
+    def init_acc():
+        z = jnp.zeros((T,), dtype=dtype)
+        return (z, z)
+
+    def accum(acc, term: P.TwoFloat):
+        """Fold a product term into the per-chunk partial accumulator."""
+        if precision == "dq_fast":
+            t = P.tf_add_fast(P.TwoFloat(*acc), term.hi)
+            return (t.hi, t.lo)
+        if precision == "dq_acc":
+            t = P.tf_add_acc(P.TwoFloat(*acc), term.hi)
+            return (t.hi, t.lo)
+        if precision == "qq":
+            t = P.tf_add_tf(P.TwoFloat(*acc), term)
+            return (t.hi, t.lo)
+        if precision == "kahan":
+            return P.kahan_add(acc, term.hi)
+        return (acc[0] + term.hi, acc[1])  # dd
+
+    def scan_body(carry, inputs):
+        Xhi, Xlo, acc = carry
+        col_j, bit, midf, par = inputs
+        sign_bits = bit ^ (midf & lane_bitk)               # (T,) in {0,1}
+        s = (2 * sign_bits - 1).astype(dtype)              # (T,)
+        d = A[:, col_j][:, None] * s[None, :]              # broadcast column
+        if use_qq:
+            Xhi, Xlo = tf_update(Xhi, Xlo, d)
+        else:
+            Xhi = Xhi + d
+        prod = product(Xhi, Xlo)
+        term = P.TwoFloat(jnp.where(par == 1, -prod.hi, prod.hi),
+                          jnp.where(par == 1, -prod.lo, prod.lo))
+        acc = accum(acc, term)
+        return (Xhi, Xlo, acc), None
+
+    Xlo0 = jnp.zeros_like(X0)
+    carry = (X0, Xlo0, init_acc())
+    carry, _ = jax.lax.scan(scan_body, carry,
+                            (sched_j, base_bits, mid_flags, w_parity))
+    Xhi, Xlo, acc = carry
+
+    # tail step w = C (per-chunk column; sign/mask folded into Atail)
+    if use_qq:
+        Xhi, Xlo = tf_update(Xhi, Xlo, Atail)
+    else:
+        Xhi = Xhi + Atail
+    prod = product(Xhi, Xlo)
+    live = jnp.asarray(tail_live)
+    neg = (C & 1) == 1  # (-1)^{g = start + C} == (-1)^C, chunk-uniform
+    hi = jnp.where(live, -prod.hi if neg else prod.hi, jnp.zeros_like(prod.hi))
+    lo = jnp.where(live, -prod.lo if neg else prod.lo, jnp.zeros_like(prod.lo))
+    acc = accum(acc, P.TwoFloat(hi, lo))
+
+    if precision == "kahan":
+        return P.TwoFloat(acc[0], jnp.zeros_like(acc[0]))
+    if precision == "dd":
+        return P.TwoFloat(acc[0], jnp.zeros_like(acc[0]))
+    return P.TwoFloat(acc[0], acc[1])
+
+
+@partial(jax.jit, static_argnames=("num_chunks", "precision"))
+def _chunked_jit(A, num_chunks: int, precision: str):
+    n = A.shape[0]
+    T, C, _ = chunk_geometry(n, num_chunks)
+    partials = chunk_partial_sums(A, T, C, precision)
+    # outer reduction always in twofloat (paper: quad outer sum)
+    acc = P.tf_zero(dtype=A.dtype)
+    hi, e1 = P.two_sum(jnp.sum(partials.hi), jnp.sum(partials.lo))
+    x_base = nw_base_vector(A)
+    p0 = jnp.prod(x_base)
+    total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
+    return P.tf_value(total) * _final_factor(n)
+
+
+def perm_ryser_chunked(A, num_chunks: int = 4096, precision: str = "dq_acc"):
+    """Faithful Alg. 3 (chunked parallel Ryser) with CEG-aligned chunks."""
+    A = jnp.asarray(A)
+    n = A.shape[0]
+    if n == 1:
+        return A[0, 0]
+    if n == 2:
+        return A[0, 0] * A[1, 1] + A[0, 1] * A[1, 0]
+    return _chunked_jit(A, num_chunks, precision)

@@ -1,0 +1,114 @@
+"""Public jitted wrappers around the Pallas Ryser kernels.
+
+``permanent_pallas(A)`` computes perm(A) with the TPU kernel (interpret mode
+on CPU).  ``block_partials_pallas`` exposes the raw per-block partial sums
+for the distributed runtime (each device runs the kernel over its own chunk
+range; the cross-device reduction is a psum, exactly like the jnp engine).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import precision as P
+from ..core.ryser import nw_base_vector, _final_factor
+from .ryser_pallas import kernel_geometry, ryser_pallas_call
+
+__all__ = ["permanent_pallas", "block_partials_pallas", "pad_matrix"]
+
+_SUBLANE = 8  # f32 sublane quantum on TPU
+
+
+def pad_matrix(A, n_pad: int | None = None):
+    """Pad A to (n_pad, n_pad) with zeros; padded x entries must be 1 so
+    products are unaffected -- handled by pad_base_vector."""
+    A = jnp.asarray(A)
+    n = A.shape[0]
+    if n_pad is None:
+        n_pad = max(_SUBLANE, int(math.ceil(n / _SUBLANE)) * _SUBLANE)
+    out = jnp.zeros((n_pad, n_pad), dtype=A.dtype)
+    return out.at[:n, :n].set(A)
+
+
+def pad_base_vector(x, n_pad: int):
+    n = x.shape[0]
+    out = jnp.ones((n_pad,), dtype=x.dtype)
+    return out.at[:n].set(x)
+
+
+def block_partials_pallas(A, *, dev_chunk_base: int = 0,
+                          num_blocks: int | None = None,
+                          lanes: int = 128, steps_per_chunk: int = 64,
+                          window: int = 16, precision: str = "dq_acc",
+                          mode: str = "baseline", interpret: bool = True):
+    """Run the kernel over ``num_blocks`` blocks starting at chunk
+    ``dev_chunk_base``; returns (num_blocks, 2) (hi, lo) partials."""
+    A = jnp.asarray(A)
+    n = A.shape[0]
+    TB, C, Wu, full_blocks = kernel_geometry(
+        n, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window)
+    if num_blocks is None:
+        num_blocks = full_blocks
+    A_pad = pad_matrix(A)
+    xb = pad_base_vector(nw_base_vector(A), A_pad.shape[0]).reshape(-1, 1)
+    out = ryser_pallas_call(
+        A_pad, xb, dev_chunk_base, n=n, TB=TB, C=C, Wu=Wu,
+        num_blocks=num_blocks, precision=precision, mode=mode,
+        interpret=interpret)
+    return out, (TB, C, Wu, full_blocks)
+
+
+def permanent_pallas(A, *, precision: str = "dq_acc", mode: str = "baseline",
+                     lanes: int = 128, steps_per_chunk: int = 64,
+                     window: int = 16, interpret: bool = True):
+    """perm(A) via the Pallas kernel (full iteration space, one device).
+
+    Complex matrices run the split re/im kernel (window-batched mode)."""
+    A = jnp.asarray(A)
+    n = A.shape[0]
+    if n == 1:
+        return A[0, 0]
+    if n == 2:
+        return A[0, 0] * A[1, 1] + A[0, 1] * A[1, 0]
+    if jnp.iscomplexobj(A):
+        return _permanent_pallas_complex(
+            A, precision=precision, lanes=lanes,
+            steps_per_chunk=steps_per_chunk, window=window,
+            interpret=interpret)
+    out, _ = block_partials_pallas(
+        A, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window,
+        precision=precision, mode=mode, interpret=interpret)
+    # outer reduction in twofloat (paper: quad outer sum)
+    hi, e = P.two_sum(jnp.sum(out[:, 0]), jnp.sum(out[:, 1]))
+    p0 = jnp.prod(nw_base_vector(A))
+    total = P.tf_add_acc(P.TwoFloat(hi, e), p0)
+    return P.tf_value(total) * _final_factor(n)
+
+
+def _permanent_pallas_complex(A, *, precision, lanes, steps_per_chunk,
+                              window, interpret):
+    from .ryser_complex import ryser_pallas_call_complex
+    n = A.shape[0]
+    prec = precision if precision in ("dd", "kahan", "dq_acc") else "dq_acc"
+    TB, C, Wu, blocks = kernel_geometry(
+        n, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window)
+    Ar = pad_matrix(jnp.real(A))
+    Ai = pad_matrix(jnp.imag(A))
+    xb = nw_base_vector(A)
+    xbr = pad_base_vector(jnp.real(xb), Ar.shape[0]).reshape(-1, 1)
+    # padded rows multiply by (1 + 0i)
+    xbi = jnp.zeros((Ar.shape[0], 1), Ar.dtype).at[:n, 0].set(jnp.imag(xb))
+    out = ryser_pallas_call_complex(
+        Ar, Ai, xbr, xbi, 0, n=n, TB=TB, C=C, Wu=Wu, num_blocks=blocks,
+        precision=prec, interpret=interpret)
+    re_hi, e1 = P.two_sum(jnp.sum(out[:, 0]), jnp.sum(out[:, 1]))
+    im_hi, e2 = P.two_sum(jnp.sum(out[:, 2]), jnp.sum(out[:, 3]))
+    p0 = jnp.prod(xb)
+    tot_r = P.tf_add_acc(P.TwoFloat(re_hi, e1), jnp.real(p0))
+    tot_i = P.tf_add_acc(P.TwoFloat(im_hi, e2), jnp.imag(p0))
+    return (P.tf_value(tot_r) + 1j * P.tf_value(tot_i)) * _final_factor(n)

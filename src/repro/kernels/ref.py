@@ -1,0 +1,50 @@
+"""Pure-jnp oracle mirroring the Pallas kernel semantics exactly.
+
+``block_partials_ref`` reproduces the kernel's block/chunk/window geometry
+and accumulation order with plain jnp ops, so kernel-vs-ref comparisons
+isolate Pallas-specific bugs from algorithmic ones.  The ground truth for
+*values* remains core.oracle; this oracle additionally pins down the
+*decomposition* (per-block partial sums).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import gray as G
+from ..core import precision as P
+from ..core.ryser import chunk_partial_sums, nw_base_vector, _final_factor
+
+__all__ = ["block_partials_ref", "permanent_ref"]
+
+
+def block_partials_ref(A, *, TB: int, C: int, num_blocks: int,
+                       dev_chunk_base: int = 0, precision: str = "dq_acc"):
+    """(num_blocks, 2) partial sums with the same chunk->block mapping as
+    the kernel (block b owns chunks [base + b*TB, base + (b+1)*TB))."""
+    A = jnp.asarray(A)
+    n = A.shape[0]
+    space = 1 << (n - 1)
+    total_chunks = space // C
+    outs = []
+    for b in range(num_blocks):
+        parts = chunk_partial_sums(
+            A, TB, C, precision,
+            chunk_offset=dev_chunk_base + b * TB,
+            total_chunks=total_chunks)
+        hi, lo = P.two_sum(jnp.sum(parts.hi), jnp.sum(parts.lo))
+        outs.append((hi, lo + jnp.sum(parts.lo) * 0))
+    return jnp.asarray(outs)
+
+
+def permanent_ref(A, *, TB: int, C: int, num_blocks: int,
+                  precision: str = "dq_acc"):
+    A = jnp.asarray(A)
+    n = A.shape[0]
+    out = block_partials_ref(A, TB=TB, C=C, num_blocks=num_blocks,
+                             precision=precision)
+    hi, e = P.two_sum(jnp.sum(out[:, 0]), jnp.sum(out[:, 1]))
+    p0 = jnp.prod(nw_base_vector(A))
+    total = P.tf_add_acc(P.TwoFloat(hi, e), p0)
+    return P.tf_value(total) * _final_factor(n)

@@ -1,0 +1,168 @@
+"""Complex-matrix Pallas Ryser kernel (boson-sampling workloads, Sec. 1).
+
+TPU VPUs have no complex dtype, so the kernel carries split re/im planes:
+the row-sum state is (Xr, Xi), column updates are two real adds, and the
+product chain is the complex multiply recurrence
+
+    (pr, pi) <- (pr*xr - pi*xi, pr*xi + pi*xr)
+
+unrolled over rows (4 mults + 2 adds per row per lane).  Geometry, u64
+lane math, CEG window alignment and the boundary one-hot matmul are shared
+with the real kernel (window-batched mode: per-window states from two real
+MXU matmuls).  Padded rows multiply by (1 + 0i).
+
+Accumulation: dd or kahan per component; output (blocks, 4) =
+(re_hi, re_err, im_hi, im_err).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import u64emu as U
+from .ryser_pallas import (_accum_add, _accum_make, _cumsig_host,
+                           _signed_const_schedule, kernel_geometry)
+
+__all__ = ["ryser_pallas_call_complex"]
+
+
+def _cprod(Xr, Xi, n_pad):
+    """Complex product over rows: (n_pad, TB) x2 -> (TB,) x2."""
+    pr, pi = Xr[0], Xi[0]
+    for i in range(1, n_pad):
+        pr, pi = pr * Xr[i] - pi * Xi[i], pr * Xi[i] + pi * Xr[i]
+    return pr, pi
+
+
+def _ryser_kernel_cx(base_hi_ref, base_lo_ref, Ar_ref, Ai_ref, xbr_ref,
+                     xbi_ref, c0_ref, out_ref, *, n: int, n_pad: int,
+                     TB: int, C: int, Wu: int, space: int, precision: str,
+                     dtype):
+    i = pl.program_id(0)
+    k = int(math.log2(C))
+    kw = int(math.log2(Wu))
+    M = C // Wu
+    Ar, Ai = Ar_ref[...], Ai_ref[...]
+    xbr, xbi = xbr_ref[...], xbi_ref[...]
+
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (1, TB), 1).reshape(TB)
+    dev = (base_hi_ref[0, 0].astype(jnp.uint32),
+           base_lo_ref[0, 0].astype(jnp.uint32))
+    chunk64 = U.u64_add_u32((jnp.broadcast_to(dev[0], (TB,)),
+                             jnp.broadcast_to(dev[1], (TB,))),
+                            (i * TB).astype(jnp.uint32) + lane)
+    start64 = U.u64_shl(chunk64, k)
+
+    gbits = U.u64_gray(start64)
+    rows = [U.u64_bit(gbits, np.uint32(j)).astype(dtype) if j < n
+            else jnp.zeros((TB,), dtype) for j in range(n_pad)]
+    Gb = jnp.stack(rows, axis=0)
+    dd = (((1,), (0,)), ((), ()))
+    Xr = xbr + jax.lax.dot_general(Ar, Gb, dd, preferred_element_type=dtype)
+    Xi = xbi + jax.lax.dot_general(Ai, Gb, dd, preferred_element_type=dtype)
+
+    sched = _signed_const_schedule(Wu)
+    space_m1 = U.u64_from_int(space - 1, like=lane)
+    row_iota = jax.lax.broadcasted_iota(jnp.uint32, (n_pad, TB), 0)
+    C0 = c0_ref[...]
+    mid_idx = next((ix for ix, st in enumerate(sched) if st[2]), None)
+
+    def macro_body(m, carry):
+        Xr, Xi, acc_r, acc_i = carry
+        macro64 = U.u64_add_u32(start64,
+                                m.astype(jnp.uint32) * np.uint32(Wu))
+        bitk = U.u64_bit(macro64, np.uint32(kw)).astype(dtype)
+
+        # window-batched states: D = A @ cumsig for both planes
+        Dr = jax.lax.dot_general(Ar, C0, dd, preferred_element_type=dtype)
+        Di = jax.lax.dot_general(Ai, C0, dd, preferred_element_type=dtype)
+        cmr = jax.lax.dynamic_slice_in_dim(Ar, kw - 1, 1, 1)
+        cmi = jax.lax.dynamic_slice_in_dim(Ai, kw - 1, 1, 1)
+        s_mid = sched[mid_idx][1] if mid_idx is not None else 0
+        corr = (float(-2.0 * s_mid) * bitk)[None, :]
+        for idx, (j, s, is_mid, parity) in enumerate(sched):
+            sr = Xr + Dr[:, idx][:, None]
+            si = Xi + Di[:, idx][:, None]
+            if mid_idx is not None and idx >= mid_idx:
+                sr = sr + cmr * corr
+                si = si + cmi * corr
+            pr, pi = _cprod(sr, si, n_pad)
+            acc_r = _accum_add(acc_r, -pr if parity else pr, precision)
+            acc_i = _accum_add(acc_i, -pi if parity else pi, precision)
+        Xr = Xr + Dr[:, Wu - 2][:, None]
+        Xi = Xi + Di[:, Wu - 2][:, None]
+        if mid_idx is not None:
+            Xr = Xr + cmr * corr
+            Xi = Xi + cmi * corr
+
+        # boundary step
+        gb64 = U.u64_add_u32(macro64, np.uint32(Wu))
+        jb = U.u64_ctz(gb64)
+        sb = 2 * U.u64_bit(U.u64_gray(gb64), jb).astype(dtype) - 1
+        live = U.u64_leq(gb64, space_m1).astype(dtype)
+        onehot = (row_iota == jb[None, :].astype(jnp.uint32)).astype(dtype)
+        colr = jax.lax.dot_general(Ar, onehot, dd,
+                                   preferred_element_type=dtype)
+        coli = jax.lax.dot_general(Ai, onehot, dd,
+                                   preferred_element_type=dtype)
+        Xr = Xr + colr * (sb * live)[None, :]
+        Xi = Xi + coli * (sb * live)[None, :]
+        pr, pi = _cprod(Xr, Xi, n_pad)
+        acc_r = _accum_add(acc_r, pr * live, precision)  # (-1)^Wu == +1
+        acc_i = _accum_add(acc_i, pi * live, precision)
+        return (Xr, Xi, acc_r, acc_i)
+
+    acc_r = _accum_make(dtype, (TB,))
+    acc_i = _accum_make(dtype, (TB,))
+    if M == 1:
+        Xr, Xi, acc_r, acc_i = macro_body(jnp.int32(0),
+                                          (Xr, Xi, acc_r, acc_i))
+    else:
+        Xr, Xi, acc_r, acc_i = jax.lax.fori_loop(
+            0, M, macro_body, (Xr, Xi, acc_r, acc_i))
+
+    out_ref[0, 0] = jnp.sum(acc_r[0])
+    out_ref[0, 1] = jnp.sum(acc_r[1]) if precision == "dq_acc" \
+        else jnp.zeros((), dtype)
+    out_ref[0, 2] = jnp.sum(acc_i[0])
+    out_ref[0, 3] = jnp.sum(acc_i[1]) if precision == "dq_acc" \
+        else jnp.zeros((), dtype)
+
+
+def ryser_pallas_call_complex(Ar_pad, Ai_pad, xbr, xbi,
+                              dev_chunk_base: int, *, n: int, TB: int,
+                              C: int, Wu: int, num_blocks: int,
+                              precision: str = "dq_acc",
+                              interpret: bool = True):
+    """(num_blocks, 4) partials: (re_hi, re_err, im_hi, im_err)."""
+    n_pad = Ar_pad.shape[0]
+    dtype = Ar_pad.dtype
+    space = 1 << (n - 1)
+    base_hi = jnp.full((1, 1), (int(dev_chunk_base) >> 32) & 0xFFFFFFFF,
+                       jnp.uint32)
+    base_lo = jnp.full((1, 1), int(dev_chunk_base) & 0xFFFFFFFF, jnp.uint32)
+    c0 = jnp.asarray(_cumsig_host(_signed_const_schedule(Wu), n_pad), dtype)
+    kernel = functools.partial(
+        _ryser_kernel_cx, n=n, n_pad=n_pad, TB=TB, C=C, Wu=Wu, space=space,
+        precision=precision, dtype=dtype)
+    rep = lambda i: (0, 0)
+    return pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, 1), rep), pl.BlockSpec((1, 1), rep),
+            pl.BlockSpec((n_pad, n_pad), rep),
+            pl.BlockSpec((n_pad, n_pad), rep),
+            pl.BlockSpec((n_pad, 1), rep), pl.BlockSpec((n_pad, 1), rep),
+            pl.BlockSpec(c0.shape, rep),
+        ],
+        out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, 4), dtype),
+        interpret=interpret,
+    )(base_hi, base_lo, Ar_pad, Ai_pad, xbr, xbi, c0)

@@ -1,0 +1,319 @@
+"""Pallas TPU kernels for Gray-code Ryser permanents (paper Sec. 3).
+
+Geometry (one ``pallas_call``):
+
+    grid = (num_blocks,)                 one block per VMEM-resident lane set
+    block = TB chunks (lanes)            each lane owns one Alg.-3 chunk
+    chunk = C = Wu * M Gray steps        M macro-windows of Wu steps each
+
+TPU mapping of the paper's GPU optimizations (DESIGN.md Sec. 2):
+
+* CEG (Sec. 3.2.1): chunks are power-of-2 sized and window-aligned, so for
+  local steps ``w = 1 .. Wu-1`` the changed bit ``ctz(w)`` and (almost
+  always) the sign are *host constants* -- the column update is a broadcast
+  ``X += s * A[:, j]`` with zero gathers.  Only each window's boundary step
+  has per-lane columns; it is resolved with a one-hot MXU matmul.
+* x in registers (Sec. 3.3): the whole X tile (n_pad, TB) lives in VMEM and
+  the Wu-step schedule is unrolled at trace time -- the analogue of the
+  paper's matrix-specific rebuild.
+* A in shared memory (Sec. 3.2): A is a replicated (n_pad, n_pad) VMEM
+  block.
+* 64-bit step indices: TPU has no i64; chunk ids/steps use uint32-pair
+  emulation (kernels/u64emu.py).
+
+Two modes:
+
+* ``baseline``  -- paper-faithful Alg. 3: sequential X updates per step.
+* ``batched``   -- beyond-paper window-batched form: per-window states are
+  generated as ``X0 + A @ cumsig`` (one MXU matmul, lane-shared), removing
+  the serial X dependency and all per-step X writes (see DESIGN.md and
+  EXPERIMENTS.md Sec. Perf).
+
+Accumulation: ``dd`` (plain), ``kahan``, ``dq_acc`` (twofloat) per lane;
+the cross-lane / cross-block reduction happens outside in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..core import gray as G
+from . import u64emu as U
+
+__all__ = ["ryser_pallas_call", "kernel_geometry"]
+
+
+def kernel_geometry(n: int, *, lanes: int = 128, steps_per_chunk: int = 64,
+                    window: int = 16, max_blocks: int | None = None):
+    """Pick (TB, C, Wu, num_blocks) covering the 2^{n-1} step space.
+
+    All power-of-two; TB * C * num_blocks == 2^{n-1}.  For small test
+    matrices the requested sizes are clamped down.
+    """
+    space = 1 << (n - 1)
+    TB = min(lanes, max(2, space // 4))
+    TB = 1 << int(math.floor(math.log2(TB)))
+    C = min(steps_per_chunk, space // TB)
+    C = max(2, 1 << int(math.floor(math.log2(C))))
+    Wu = max(2, min(window, C))
+    num_blocks = space // (TB * C)
+    if max_blocks is not None:
+        num_blocks = min(num_blocks, max_blocks)
+    return TB, C, Wu, num_blocks
+
+
+def _signed_const_schedule(Wu: int):
+    """Host schedule for inner steps w = 1..Wu-1 of any aligned window.
+
+    Returns [(j, s_const, is_mid, parity)], where the true sign is
+    ``s_const`` except at the mid step (w = Wu/2), where lanes whose window
+    base has bit kw set use ``-s_const`` (see core/gray.py notes).
+    """
+    kw = int(math.log2(Wu))
+    out = []
+    for w in range(1, Wu):
+        j = G.ctz(w)
+        if j + 1 < kw or kw == 0:
+            bit = ((w >> j) ^ (w >> (j + 1))) & 1
+            is_mid = False
+        else:  # w == Wu // 2, j == kw - 1
+            bit = ((w >> j)) & 1  # == 1; true bit = 1 ^ bit_kw(base)
+            is_mid = True
+        s = 2 * bit - 1
+        parity = w & 1
+        out.append((j, s, is_mid, parity))
+    return out
+
+
+def _accum_make(dtype, shape):
+    z = jnp.zeros(shape, dtype)
+    return (z, z)
+
+
+def _accum_add(acc, term, precision):
+    s, c = acc
+    if precision == "kahan":
+        y = term - c
+        t = s + y
+        return (t, (t - s) - y)
+    if precision == "dq_acc":
+        # two_sum based twofloat accumulate
+        hi = s + term
+        bp = hi - s
+        e = (s - (hi - bp)) + (term - bp)
+        return (hi, c + e)
+    return (s + term, c)  # dd
+
+
+def _accum_value(acc, precision):
+    if precision == "dq_acc":
+        return acc[0], acc[1]
+    return acc[0], jnp.zeros_like(acc[1])
+
+
+def _sched_select_host(sched, n_pad: int) -> np.ndarray:
+    """Per-step signed one-hot selection matrix (n_pad, Wu-1):
+    column idx holds s_const(w) e_{j(w)}.  The wrapper multiplies by A to
+    get the signed schedule columns (the 'schedmat' beyond-paper mode:
+    the per-step broadcast-multiply and column slice both disappear --
+    each inner step is ONE vector add + the product chain)."""
+    S = np.zeros((n_pad, max(1, len(sched))), dtype=np.float64)
+    for idx, (j, sgn, _is_mid, _) in enumerate(sched):
+        S[j, idx] = sgn
+    return S
+
+
+def _cumsig_host(sched, n_pad: int) -> np.ndarray:
+    """Cumulative signed one-hot schedule (n_pad, Wu-1) for batched mode.
+
+    Column idx holds sum_{w' <= w} s_const(w') e_{j(w')}; the mid step's
+    lane-dependent sign is corrected in-kernel.
+    """
+    C0 = np.zeros((n_pad, max(1, len(sched))), dtype=np.float64)
+    run = np.zeros(n_pad, dtype=np.float64)
+    for idx, (j, s, _is_mid, _) in enumerate(sched):
+        run[j] += s
+        C0[:, idx] = run
+    return C0
+
+
+def _ryser_kernel(base_hi_ref, base_lo_ref, A_ref, xb_ref, c0_ref, out_ref, *,
+                  n: int, n_pad: int, TB: int, C: int, Wu: int,
+                  space: int, precision: str, mode: str, dtype):
+    """One grid step: TB chunks x C Gray steps; writes (1, 2) partial."""
+    i = pl.program_id(0)
+    k = int(math.log2(C))
+    kw = int(math.log2(Wu))
+    M = C // Wu
+    A = A_ref[...]                                   # (n_pad, n_pad)
+    xb = xb_ref[...]                                 # (n_pad, 1)
+
+    # ---- chunk ids & start steps (u64 lane math) ----
+    # (1, TB) iota then reshape: Mosaic requires >= 2D iota on TPU
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (1, TB), 1).reshape(TB)
+    block_first = (i * TB).astype(jnp.uint32)
+    dev_base = (base_hi_ref[0, 0].astype(jnp.uint32),
+                base_lo_ref[0, 0].astype(jnp.uint32))
+    chunk64 = U.u64_add_u32((jnp.broadcast_to(dev_base[0], (TB,)),
+                             jnp.broadcast_to(dev_base[1], (TB,))),
+                            block_first + lane)
+    start64 = U.u64_shl(chunk64, k)
+
+    # ---- init X = xb + A @ graybits(start) (MXU) ----
+    gbits_start = U.u64_gray(start64)
+    rows = []
+    for j in range(n_pad):
+        if j < n:
+            rows.append(U.u64_bit(gbits_start, np.uint32(j)).astype(dtype))
+        else:
+            rows.append(jnp.zeros((TB,), dtype))
+    Gb = jnp.stack(rows, axis=0)                     # (n_pad, TB)
+    X = xb + jax.lax.dot_general(
+        A, Gb, (((1,), (0,)), ((), ())), preferred_element_type=dtype)
+
+    sched = _signed_const_schedule(Wu)
+    space_m1 = U.u64_from_int(space - 1, like=lane)
+    row_iota = jax.lax.broadcasted_iota(jnp.uint32, (n_pad, TB), 0)
+
+    # schedule-matrix kernel input: cumulative signed one-hots (batched)
+    # or A-premultiplied signed columns (schedmat)
+    if mode in ("batched", "schedmat"):
+        C0 = c0_ref[...]                             # (n_pad, Wu-1)
+        mid_idx = next((ix for ix, st in enumerate(sched) if st[2]), None)
+
+    def macro_body(m, carry):
+        X, acc = carry
+        m_u = m.astype(jnp.uint32) * np.uint32(Wu)
+        macro64 = U.u64_add_u32(start64, m_u)
+        # per-lane bit kw of the macro base (mid-step sign correction)
+        bitk = U.u64_bit(macro64, np.uint32(kw)).astype(dtype)  # (TB,)
+        mid_flip = 1 - 2 * bitk                                  # +-1
+
+        if mode == "baseline":
+            for (j, s, is_mid, parity) in sched:
+                colj = jax.lax.dynamic_slice_in_dim(A, j, 1, 1)  # (n_pad,1)
+                if is_mid:
+                    slane = (s * mid_flip)[None, :]              # (1, TB)
+                    X = X + colj * slane
+                else:
+                    X = X + colj * float(s)
+                prod = jnp.prod(X, axis=0)                       # (TB,)
+                term = -prod if parity else prod
+                acc = _accum_add(acc, term, precision)
+        elif mode == "schedmat":
+            # beyond-paper: per-step signed column precomputed (C0 = A@Sel);
+            # inner step = one add + product; mid step adds one correction
+            col_mid = jax.lax.dynamic_slice_in_dim(A, kw - 1, 1, 1) \
+                if kw >= 1 else jnp.zeros((n_pad, 1), dtype)
+            for idx, (j, s, is_mid, parity) in enumerate(sched):
+                X = X + C0[:, idx][:, None]
+                if is_mid:
+                    X = X + col_mid * (float(-2.0 * s) * bitk)[None, :]
+                prod = jnp.prod(X, axis=0)
+                term = -prod if parity else prod
+                acc = _accum_add(acc, term, precision)
+        else:
+            # window-batched: states from one shared matmul, X never written
+            D = jax.lax.dot_general(A, C0, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=dtype)  # (n_pad,Wu-1)
+            col_mid = jax.lax.dynamic_slice_in_dim(A, kw - 1, 1, 1) if kw >= 1 \
+                else jnp.zeros((n_pad, 1), dtype)
+            # lanes with bitk=1 need mid sign -s i.e. subtract 2*s*col_mid
+            s_mid = sched[mid_idx][1] if mid_idx is not None else 0
+            corr = col_mid * (float(-2.0 * s_mid) * bitk)[None, :]
+            for idx, (j, s, is_mid, parity) in enumerate(sched):
+                state = X + D[:, idx][:, None]
+                if mid_idx is not None and idx >= mid_idx:
+                    state = state + corr
+                prod = jnp.prod(state, axis=0)
+                term = -prod if parity else prod
+                acc = _accum_add(acc, term, precision)
+            # advance X to the last inner state for the boundary step
+            X = X + D[:, Wu - 2][:, None] if Wu >= 2 else X
+            if mid_idx is not None:
+                X = X + corr
+
+        # ---- boundary step w = Wu (per-lane column via one-hot MXU) ----
+        gb64 = U.u64_add_u32(macro64, np.uint32(Wu))
+        jb = U.u64_ctz(gb64)                                    # (TB,)
+        sign_bit = U.u64_bit(U.u64_gray(gb64), jb).astype(dtype)
+        sb = 2 * sign_bit - 1                                   # (TB,)
+        live = U.u64_leq(gb64, space_m1).astype(dtype)          # (TB,)
+        onehot = (row_iota == jb[None, :].astype(jnp.uint32)).astype(dtype)
+        colb = jax.lax.dot_general(A, onehot, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=dtype)
+        X = X + colb * (sb * live)[None, :]
+        prod = jnp.prod(X, axis=0)
+        # (-1)^{g_boundary} == (-1)^{Wu} == +1 (Wu is even)
+        acc = _accum_add(acc, prod * live, precision)
+        return (X, acc)
+
+    acc0 = _accum_make(dtype, (TB,))
+    if M == 1:
+        X, acc = macro_body(jnp.int32(0), (X, acc0))
+    else:
+        X, acc = jax.lax.fori_loop(0, M, macro_body, (X, acc0))
+
+    hi, lo = _accum_value(acc, precision)
+    out_ref[0, 0] = jnp.sum(hi)
+    out_ref[0, 1] = jnp.sum(lo)
+
+
+def ryser_pallas_call(A_pad, x_base_pad, dev_chunk_base, *,
+                      n: int, TB: int, C: int, Wu: int, num_blocks: int,
+                      precision: str = "dq_acc", mode: str = "baseline",
+                      interpret: bool = True, vma=None):
+    """Launch the kernel over ``num_blocks`` blocks; returns (blocks, 2)
+    per-block (hi, lo) partial sums (base g=0 term NOT included)."""
+    n_pad = A_pad.shape[0]
+    dtype = A_pad.dtype
+    space = 1 << (n - 1)
+    if isinstance(dev_chunk_base, (int, np.integer)):
+        base_hi = jnp.full((1, 1), (int(dev_chunk_base) >> 32) & 0xFFFFFFFF,
+                           jnp.uint32)
+        base_lo = jnp.full((1, 1), int(dev_chunk_base) & 0xFFFFFFFF,
+                           jnp.uint32)
+    else:
+        # traced base (distributed shard_map path): uint64 under x64 keeps
+        # the full range; 32-bit ints cover per-device ranges in tests
+        b = jnp.asarray(dev_chunk_base)
+        if b.dtype in (jnp.uint64, jnp.int64):
+            base_hi = (b >> 32).astype(jnp.uint32).reshape(1, 1)
+            base_lo = b.astype(jnp.uint32).reshape(1, 1)
+        else:
+            base_hi = jnp.zeros((1, 1), jnp.uint32) * b.astype(jnp.uint32)
+            base_lo = b.astype(jnp.uint32).reshape(1, 1)
+        base_hi = base_hi.reshape(1, 1)
+    sched = _signed_const_schedule(Wu)
+    if mode == "schedmat":
+        sel = jnp.asarray(_sched_select_host(sched, n_pad), dtype)
+        c0 = A_pad @ sel                             # signed schedule columns
+    else:
+        c0 = jnp.asarray(_cumsig_host(sched, n_pad), dtype)
+
+    kernel = functools.partial(
+        _ryser_kernel, n=n, n_pad=n_pad, TB=TB, C=C, Wu=Wu, space=space,
+        precision=precision, mode=mode, dtype=dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((n_pad, 1), lambda i: (0, 0)),
+            pl.BlockSpec(c0.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=(jax.ShapeDtypeStruct((num_blocks, 2), dtype, vma=vma)
+                   if vma is not None
+                   else jax.ShapeDtypeStruct((num_blocks, 2), dtype)),
+        interpret=interpret,
+    )(base_hi, base_lo, A_pad, x_base_pad, c0)

@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (the ONLY entry point that fakes 512 devices).
+
+For every (architecture x input-shape x mesh) cell this lowers + compiles
+the real sharded step (train_step / prefill / decode), proving the
+distribution config is coherent, then records:
+
+  * memory_analysis()          -- fits-per-device evidence
+  * cost_analysis()            -- FLOPs / bytes for the roofline
+  * collective bytes           -- parsed from the optimized HLO
+  * the three roofline terms   -- utils/roofline.py
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-3b --shape train_4k \
+      --mesh single --out experiments/dryrun
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs ...]
+      (runs every cell in its own subprocess; failures isolated)
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import math              # noqa: E402
+import subprocess        # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+
+from ..configs import ARCH_IDS, FULL_ATTENTION_ARCHS, get_config  # noqa: E402
+from ..models.model import SHAPES, ShapeCell, build               # noqa: E402
+from ..train.optimizer import AdamWConfig, AdamWState             # noqa: E402
+from ..train.train_step import (build_serve_steps, build_train_step,  # noqa: E402
+                                mesh_axes_of)
+from ..utils.hlo import collective_bytes, count_ops               # noqa: E402
+from ..utils.hlo_cost import analyze_hlo                           # noqa: E402
+from ..utils.roofline import roofline_from_analysis               # noqa: E402
+from .mesh import make_production_mesh, mesh_device_count         # noqa: E402
+
+SKIP = "SKIP(full-attention)"
+
+
+def cell_is_skipped(arch: str, shape: str) -> bool:
+    return shape == "long_500k" and arch in FULL_ATTENTION_ARCHS
+
+
+def _abstract_opt(params_abs):
+    m = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                     params_abs)
+    return AdamWState(m=m, v=m, count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+    t0 = time.time()
+    cfg = get_config(arch)
+    model = build(cfg)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh_device_count(mesh)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "chips": chips,
+           "status": "error"}
+
+    params_abs = model.init_params(abstract=True)
+
+    if cell.kind == "train":
+        bundle = build_train_step(model, mesh, AdamWConfig())
+        opt_abs = _abstract_opt(params_abs)
+        batch_abs = model.input_specs(cell)
+        lowered = bundle.step_fn.lower(params_abs, opt_abs, batch_abs)
+    else:
+        step_fn, in_shards, c_shard, policy = build_serve_steps(
+            model, mesh, cell)
+        rec["kv_policy"] = policy
+        # serving weights are bf16 and resident (no FSDP gathers)
+        params_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+            params_abs)
+        in_abs = model.input_specs(cell)
+        if cell.kind == "prefill":
+            lowered = step_fn.lower(params_abs, in_abs)
+        else:
+            cache_abs = model.cache_specs(cell)
+            lowered = step_fn.lower(params_abs, in_abs, cache_abs)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = dict(compiled.cost_analysis() or {})
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "bytes_per_device": getattr(
+                mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "peak_bytes": getattr(
+                mem, "peak_memory_in_bytes",
+                getattr(mem, "temp_size_in_bytes", None)),
+            "repr": str(mem)[:2000],
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_rec = {"error": f"{type(e).__name__}: {e}"}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)          # trip-count-UNAWARE (raw HLO)
+    ops = count_ops(hlo)
+    tc = analyze_hlo(hlo)                 # trip-count-aware per-device costs
+
+    model_fl = model.model_flops(cell)
+    # analyze_hlo returns per-device totals; the roofline helper divides
+    # whole-program numbers by chips, so scale back up
+    cost_tc = {"flops": tc.dot_flops * chips,
+               "bytes accessed": tc.bytes_accessed * chips}
+    bytes_min = float((mem_rec.get("argument_bytes") or 0)
+                      + (mem_rec.get("output_bytes") or 0))
+    rl = roofline_from_analysis(cost_tc, tc.collective_bytes, chips,
+                                model_fl, bytes_min=bytes_min)
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        cost={k: cost[k] for k in sorted(cost) if isinstance(
+            cost[k], (int, float))},
+        cost_trip_aware={
+            "dot_flops_per_device": tc.dot_flops,
+            "bytes_per_device": tc.bytes_accessed,
+            "collective_bytes_per_device": tc.collective_bytes,
+            "coll_by_kind": tc.coll_by_kind,
+            "dot_count": tc.dot_count,
+            "while_count": tc.while_count,
+        },
+        memory=mem_rec,
+        collectives=coll,
+        ops=ops,
+        hlo_bytes=len(hlo),
+        n_params=model.n_params(),
+        n_active_params=model.n_active_params(),
+        model_flops=model_fl,
+        roofline=rl.to_dict(),
+    )
+    return rec
+
+
+def out_path(out_dir: str, arch: str, shape: str, mesh_kind: str) -> str:
+    safe = arch.replace("/", "_")
+    return os.path.join(out_dir, f"{safe}__{shape}__{mesh_kind}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true",
+                    help="run every cell in subprocesses (cached)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        failures = []
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mk in meshes:
+                    path = out_path(args.out, arch, shape, mk)
+                    if cell_is_skipped(arch, shape):
+                        with open(path, "w") as f:
+                            json.dump({"arch": arch, "shape": shape,
+                                       "mesh": mk, "status": SKIP}, f)
+                        continue
+                    if os.path.exists(path) and not args.force:
+                        with open(path) as f:
+                            if json.load(f).get("status") == "ok":
+                                continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--mesh", mk,
+                           "--out", args.out]
+                    print(f"[dryrun] {arch} x {shape} x {mk} ...",
+                          flush=True)
+                    r = subprocess.run(cmd, capture_output=True, text=True)
+                    if r.returncode != 0:
+                        failures.append((arch, shape, mk))
+                        with open(path, "w") as f:
+                            json.dump({"arch": arch, "shape": shape,
+                                       "mesh": mk, "status": "error",
+                                       "stderr": r.stderr[-4000:]}, f)
+                        print(f"  FAILED: {r.stderr[-500:]}", flush=True)
+                    else:
+                        print(f"  ok ({r.stdout.strip().splitlines()[-1] if r.stdout.strip() else ''})",
+                              flush=True)
+        print(f"[dryrun] done; {len(failures)} failures: {failures}")
+        return 1 if failures else 0
+
+    assert args.arch and args.shape
+    mesh_kinds = (["single", "multi"] if args.mesh == "both"
+                  else [args.mesh])
+    for mk in mesh_kinds:
+        if cell_is_skipped(args.arch, args.shape):
+            print(f"{args.arch} x {args.shape}: {SKIP}")
+            continue
+        try:
+            rec = run_cell(args.arch, args.shape, mk)
+        except Exception:
+            rec = {"arch": args.arch, "shape": args.shape, "mesh": mk,
+                   "status": "error", "traceback": traceback.format_exc()}
+        with open(out_path(args.out, args.arch, args.shape, mk), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        if rec["status"] != "ok":
+            print(rec.get("traceback", "error"), file=sys.stderr)
+            return 1
+        rl = rec["roofline"]
+        print(f"{args.arch} x {args.shape} x {mk}: ok "
+              f"compile={rec['compile_s']}s "
+              f"flops={rec['cost'].get('flops', 0):.3e} "
+              f"coll={rec['collectives']['total_bytes']:.3e}B "
+              f"dominant={rl['dominant']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+IMPORTANT: functions only -- importing this module never touches jax device
+state.  The dry-run entry point (launch/dryrun.py) force-creates 512 host
+devices via XLA_FLAGS *before* importing jax; everything else sees the real
+device count.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "mesh_device_count"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) ("data", "model") = 256 chips.
+    Multi-pod:   (2, 16, 16) ("pod", "data", "model") = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int | None = None):
+    """Best-effort mesh over whatever devices exist (examples/tests)."""
+    n = jax.device_count()
+    if model_axis is None:
+        model_axis = 1
+        while model_axis * 2 <= int(math.sqrt(n)):
+            model_axis *= 2
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def mesh_device_count(mesh) -> int:
+    return math.prod(mesh.devices.shape)

@@ -1,0 +1,90 @@
+"""Activation-sharding context: with_sharding_constraint at layer
+boundaries (the GSPMD equivalent of MaxText's logical sharding rules).
+
+Without explicit constraints XLA may propagate the *embedding table's*
+sharding (feature dim over the data axis) into the residual stream and
+keep the batch replicated -- observed as a 16x per-device FLOP blowup on
+the production mesh.  The step builders activate the context inside the
+traced function, so every (re)trace applies the constraints; with no
+context active (CPU smoke tests) the helpers are no-ops.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("act_ctx",
+                                                      default=None)
+
+DP = "__dp__"      # placeholder: data axes (batch dim)
+MDL = "__mdl__"    # placeholder: model axis
+
+
+@contextlib.contextmanager
+def use(mesh, dp_axes, model_axis, seq_parallel: bool = False):
+    """Activate constraints for code traced within this block.
+
+    seq_parallel: residual-stream tensors additionally shard their
+    sequence dim over the model axis (Megatron-SP) -- converts the
+    per-layer TP boundary all-reduces into reduce-scatter/all-gather
+    pairs and shards norm/residual compute.
+    """
+    token = _CTX.set((mesh, tuple(dp_axes) if dp_axes else None,
+                      model_axis, seq_parallel))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def _resolve(axis, dp, mdl):
+    if axis == DP:
+        if dp is None:
+            return None
+        return dp if len(dp) > 1 else dp[0]
+    if axis == MDL:
+        return mdl
+    return axis
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint(x, P(spec)) under the active context.
+
+    spec entries: DP, MDL, None, or literal axis names.  No-op when no
+    context is active; per-dim fallback to replicated when a dim is not
+    divisible by its axes (tiny smoke shapes, S=1 decode).
+    """
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, dp, mdl = ctx[0], ctx[1], ctx[2]
+    resolved = list(_resolve(a, dp, mdl) for a in spec)
+    for i, (dim, axes) in enumerate(zip(x.shape, resolved)):
+        if axes is None:
+            continue
+        names = axes if isinstance(axes, tuple) else (axes,)
+        size = 1
+        for nm in names:
+            size *= mesh.shape[nm]
+        if dim % size != 0:
+            resolved[i] = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def seq_parallel_on() -> bool:
+    ctx = _CTX.get()
+    return bool(ctx and len(ctx) > 3 and ctx[3])
+
+
+def batch_act(h):
+    """Residual-stream constraint: (B, S, D); batch over data axes, and
+    with sequence parallelism the seq dim over the model axis."""
+    if seq_parallel_on():
+        return constrain(h, DP, MDL, None)
+    return constrain(h, DP, None, None)

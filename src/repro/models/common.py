@@ -1,0 +1,151 @@
+"""Model configuration and parameter-initialization substrate.
+
+Pure-JAX models: parameters are nested dicts of jnp arrays; layer stacks
+are *scanned* (stacked leading L dim) so HLO size -- and therefore SPMD
+compile time on the 512-way dry-run -- is independent of depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ModelCfg", "ShapeInit", "init_tree", "param_count", "tree_bytes"]
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """One config object covers every assigned family; unused fields are
+    ignored by families that don't need them."""
+    arch_id: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio-encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # --- attention flavor ---
+    rope_theta: float = 10000.0
+    swa_window: int = 0              # 0 -> full attention
+    mrope_sections: tuple = ()       # e.g. (16, 24, 24) for M-RoPE (qwen2-vl)
+    attn_bias: bool = False
+    # --- mlp flavor ---
+    mlp: str = "swiglu"              # swiglu | gelu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    # --- MoE ---
+    n_experts: int = 0               # 0 -> dense FFN
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # --- hybrid (zamba2) ---
+    shared_attn_period: int = 0      # apply shared attn block every N layers
+    # --- enc-dec (seamless) ---
+    enc_layers: int = 0              # >0 -> encoder-decoder
+    # --- numerics ---
+    dtype: Any = jnp.bfloat16        # activation/compute dtype
+    param_dtype: Any = jnp.float32
+    # --- training ---
+    tie_embeddings: bool = False
+    notes: str = ""
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the embedding/unembed
+        tables shard evenly over any power-of-2 model axis (standard
+        padded-vocab practice); padded logits are masked in the loss."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def replace(self, **kw) -> "ModelCfg":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self, **overrides) -> "ModelCfg":
+        """Small same-family config for CPU smoke tests."""
+        kw = dict(
+            n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=max(1, min(4, self.n_kv_heads)),
+            d_ff=128, vocab=256, head_dim=16,
+            dtype=jnp.float32, param_dtype=jnp.float32,
+        )
+        if self.n_experts:
+            kw["n_experts"] = 4
+        if self.ssm_state:
+            kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+        if self.shared_attn_period:
+            kw["shared_attn_period"] = 2
+            kw["n_layers"] = 4
+        if self.enc_layers:
+            kw["enc_layers"] = 2
+        if self.mrope_sections:
+            kw["mrope_sections"] = (2, 3, 3)
+        kw.update(overrides)
+        return self.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Initialization: every param leaf is declared as (shape, init) so the same
+# tree builds either real arrays (smoke tests) or ShapeDtypeStructs (dry-run)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ShapeInit:
+    shape: tuple
+    kind: str = "normal"   # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+
+def init_tree(tree, key, param_dtype, abstract: bool = False):
+    """Materialize a nested dict of ShapeInit into arrays (or structs)."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, ShapeInit))
+    if abstract:
+        out = [jax.ShapeDtypeStruct(l.shape, param_dtype) for l in leaves]
+        return jax.tree.unflatten(treedef, out)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for l, k in zip(leaves, keys):
+        if l.kind == "zeros":
+            out.append(jnp.zeros(l.shape, param_dtype))
+        elif l.kind == "ones":
+            out.append(jnp.ones(l.shape, param_dtype))
+        elif l.kind == "scaled":
+            fan_in = l.shape[-2] if len(l.shape) >= 2 else l.shape[-1]
+            out.append(jax.random.normal(k, l.shape, param_dtype)
+                       / math.sqrt(fan_in))
+        else:
+            out.append(l.scale * jax.random.normal(k, l.shape, param_dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def tree_bytes(params) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(params))

@@ -1,0 +1,184 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The audio frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, D).  The backbone is a standard
+transformer encoder (bidirectional) + decoder (causal self-attn + cross
+attn), both scanned.  Decode serving keeps a self-attention KV cache plus
+per-layer cross KV computed once from the encoder memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelCfg, ShapeInit
+from . import layers as L
+from . import actx
+from .transformer import (_ffn, _norm, _qkv, _rope, attn_param_shapes,
+                          ffn_param_shapes, layer_param_shapes,
+                          norm_param_shapes, _stack_shapes, chunked_ce_loss)
+
+__all__ = ["encdec_param_shapes", "encdec_loss", "encode", "decode_forward",
+           "encdec_prefill", "encdec_decode_step"]
+
+
+def encdec_param_shapes(cfg: ModelCfg) -> dict:
+    D, V = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": ShapeInit((V, D), "normal", 0.02),     # decoder tokens
+        "enc_layers": _stack_shapes(layer_param_shapes(cfg), cfg.enc_layers),
+        "enc_norm": norm_param_shapes(cfg),
+        "dec_layers": _stack_shapes(layer_param_shapes(cfg, cross_attn=True),
+                                    cfg.n_layers),
+        "final_norm": norm_param_shapes(cfg),
+        "unembed": ShapeInit((D, V), "scaled"),
+    }
+
+
+def encode(params, embeds, cfg: ModelCfg, kv_chunk: int = 1024):
+    """Bidirectional encoder over stub frame embeddings (B, Se, D)."""
+    h = embeds.astype(cfg.dtype)
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = L.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+
+    def body(h, lp):
+        x = _norm(lp["ln1"], h, cfg)
+        q, k, v = _qkv(lp["attn"], x, cfg)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        out = L.flash_attention(q, k, v, causal=False, kv_chunk=kv_chunk)
+        out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+        h = h + jnp.einsum("bse,ed->bsd", out,
+                           lp["attn"]["wo"].astype(h.dtype))
+        h = h + _ffn(lp["ffn"], _norm(lp["ln2"], h, cfg), cfg)
+        return actx.batch_act(h), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    h = actx.batch_act(h)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return _norm(params["enc_norm"], h, cfg)
+
+
+def _cross_attention(p, x, memory, cfg, kv_chunk: int = 1024):
+    dt = x.dtype
+    B, S = x.shape[:2]
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)) \
+        .reshape(B, S, cfg.n_heads, cfg.hd)
+    k = jnp.einsum("bsd,de->bse", memory, p["wk"].astype(dt)) \
+        .reshape(B, memory.shape[1], cfg.n_kv_heads, cfg.hd)
+    v = jnp.einsum("bsd,de->bse", memory, p["wv"].astype(dt)) \
+        .reshape(B, memory.shape[1], cfg.n_kv_heads, cfg.hd)
+    out = L.flash_attention(q, k, v, causal=False, kv_chunk=kv_chunk)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+
+
+def decode_forward(params, tokens, memory, cfg: ModelCfg,
+                   kv_chunk: int = 1024):
+    """Teacher-forced decoder pass (training)."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = L.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+
+    def body(h, lp):
+        x = _norm(lp["ln1"], h, cfg)
+        q, k, v = _qkv(lp["attn"], x, cfg)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        out = L.flash_attention(q, k, v, causal=True, kv_chunk=kv_chunk)
+        out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+        h = h + jnp.einsum("bse,ed->bsd", out,
+                           lp["attn"]["wo"].astype(h.dtype))
+        h = h + _cross_attention(lp["xattn"], _norm(lp["lnx"], h, cfg),
+                                 memory, cfg, kv_chunk)
+        h = h + _ffn(lp["ffn"], _norm(lp["ln2"], h, cfg), cfg)
+        return actx.batch_act(h), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    h = actx.batch_act(h)
+    h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    return _norm(params["final_norm"], h, cfg)
+
+
+def encdec_loss(params, batch, cfg: ModelCfg, ce_chunk: int = 512):
+    """batch: {enc_embeds (B,Se,D), dec_tokens (B,Sd), labels (B,Sd)}."""
+    memory = encode(params, batch["enc_embeds"], cfg)
+    h = decode_forward(params, batch["dec_tokens"], memory, cfg)
+    return chunked_ce_loss(h, params["unembed"], batch["labels"],
+                           batch.get("mask"), chunk=ce_chunk,
+                           valid_vocab=cfg.vocab)
+
+
+# ---------------------------------------------------------------- serving
+def encdec_prefill(params, enc_embeds, cfg: ModelCfg, max_seq: int = 0,
+                   cache_dtype=jnp.bfloat16):
+    """Encode once; precompute per-decoder-layer cross K/V and an empty
+    decoder self-attention cache of length max_seq."""
+    memory = encode(params, enc_embeds, cfg)
+    B, Se = memory.shape[:2]
+    max_seq = max_seq or Se
+
+    def xkv(lp):
+        k = jnp.einsum("bsd,de->bse", memory,
+                       lp["xattn"]["wk"].astype(memory.dtype))
+        v = jnp.einsum("bsd,de->bse", memory,
+                       lp["xattn"]["wv"].astype(memory.dtype))
+        return (k.reshape(B, Se, cfg.n_kv_heads, cfg.hd).astype(cache_dtype),
+                v.reshape(B, Se, cfg.n_kv_heads, cfg.hd).astype(cache_dtype))
+
+    xk, xv = jax.vmap(xkv)(params["dec_layers"])
+    kv_shape = (cfg.n_layers, B, max_seq, cfg.n_kv_heads, cfg.hd)
+    return memory, {"k": jnp.zeros(kv_shape, cache_dtype),
+                    "v": jnp.zeros(kv_shape, cache_dtype),
+                    "xk": xk, "xv": xv}
+
+
+def encdec_decode_step(params, token, pos, cache, cfg: ModelCfg,
+                       kv_chunk: int = 1024):
+    """cache: {k, v (L,B,Sd,KV,hd) self; xk, xv (L,B,Se,KV,hd) cross}."""
+    h = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)
+    B = h.shape[0]
+    positions = jnp.full((B, 1), pos)
+    cos, sin = L.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+
+    def body(h, xs):
+        lp, kc, vc, xk, xv = xs
+        x = _norm(lp["ln1"], h, cfg)
+        q, k_new, v_new = _qkv(lp["attn"], x, cfg)
+        q = L.apply_rope(q, cos, sin)
+        k_new = L.apply_rope(k_new, cos, sin)
+        kc = L.dus_seq(kc, k_new, pos)
+        vc = L.dus_seq(vc, v_new, pos)
+        out = L.flash_attention(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                                causal=True, q_offset=pos, kv_valid=pos + 1,
+                                kv_chunk=kv_chunk)
+        out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+        h = h + jnp.einsum("bse,ed->bsd", out,
+                           lp["attn"]["wo"].astype(h.dtype))
+        # cross attention over the (precomputed) encoder memory KV
+        xq = jnp.einsum("bsd,de->bse", _norm(lp["lnx"], h, cfg),
+                        lp["xattn"]["wq"].astype(h.dtype)) \
+            .reshape(B, 1, cfg.n_heads, cfg.hd)
+        xout = L.flash_attention(xq, xk.astype(h.dtype), xv.astype(h.dtype),
+                                 causal=False, kv_chunk=kv_chunk)
+        xout = xout.reshape(B, 1, cfg.n_heads * cfg.hd)
+        h = h + jnp.einsum("bse,ed->bsd", xout,
+                           lp["xattn"]["wo"].astype(h.dtype))
+        h = h + _ffn(lp["ffn"], _norm(lp["ln2"], h, cfg), cfg)
+        return h, {"k": kc, "v": vc}
+
+    h, new_self = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    h = _norm(params["final_norm"], h, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                        params["unembed"].astype(jnp.float32))
+    V = logits.shape[-1]
+    if cfg.vocab < V:
+        logits = jnp.where(jnp.arange(V)[None, None, :] < cfg.vocab,
+                           logits, -1e30)
+    return logits, {"k": new_self["k"], "v": new_self["v"],
+                    "xk": cache["xk"], "xv": cache["xv"]}

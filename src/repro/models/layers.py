@@ -1,0 +1,359 @@
+"""Shared layer library (pure JAX, scan- and SPMD-friendly).
+
+Design notes:
+
+* **flash attention** -- chunked online-softmax over KV blocks
+  (``lax.scan``), O(S) memory, supports causal, sliding-window, GQA,
+  cross-attention and single-query decode.  Logits/softmax in f32.
+  ``merge_partial_softmax`` implements the flash-decoding combine used when
+  the KV cache is *sequence-sharded* across the mesh (serve/decode_sharded).
+* **MoE** -- top-k routing with capacity-bounded scatter dispatch: tokens
+  are placed into an (E, cap, D) buffer via cumsum slots, experts run as
+  one batched einsum (MXU-friendly, active-expert FLOPs only, EP-shardable
+  over the "model" axis), results gathered back with combine weights.
+* **RoPE / M-RoPE** -- rotary embeddings; M-RoPE splits the frequency
+  spectrum into (temporal, height, width) sections fed by 3D position ids
+  (qwen2-vl).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import actx
+
+__all__ = [
+    "rmsnorm", "layernorm", "rope_cos_sin", "mrope_cos_sin", "apply_rope",
+    "flash_attention", "merge_partial_softmax", "mlp_swiglu", "mlp_gelu", "dus_seq",
+    "moe_ffn", "gqa_reshape", "grad_cast",
+]
+
+
+@jax.custom_vjp
+def grad_cast(x):
+    """Identity whose COTANGENT is cast to the primal dtype.
+
+    f32 creeps into backward cotangents through mixed-precision dots
+    (preferred_element_type=f32); left alone, the per-layer TP boundary
+    all-reduces of dx then move f32 bytes.  Casting the cotangent to the
+    activation dtype (bf16) at each TP consumer input halves those
+    collective bytes -- the standard bf16-backward policy."""
+    return x
+
+
+def _gc_fwd(x):
+    # residual must be a JAX value; a zero-size array carries the dtype
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _gc_bwd(proto, ct):
+    return (ct.astype(proto.dtype),)
+
+
+grad_cast.defvjp(_gc_fwd, _gc_bwd)
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32) \
+        + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+def rope_cos_sin(positions, head_dim: int, theta: float = 10000.0):
+    """positions (..., S) -> cos/sin (..., S, head_dim/2), f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions3, head_dim: int, sections, theta: float = 1e6):
+    """M-RoPE (qwen2-vl): positions3 (3, ..., S); sections sum to hd/2.
+
+    Frequency components are partitioned into (temporal, h, w) groups; each
+    group's angles come from the corresponding position stream.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang_all = positions3.astype(jnp.float32)[..., None] * inv  # (3,...,S,half)
+    parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[i, ..., off:off + sec])
+        off += sec
+    ang = jnp.concatenate(parts, axis=-1)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) -> rotated x."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def gqa_reshape(q, n_kv: int):
+    """(B, S, H, hd) -> (B, S, KVH, G, hd)."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, hd)
+
+
+NEG_INF = -1e30
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset=0, kv_valid=None, kv_chunk: int = 1024,
+                    softmax_scale: float | None = None):
+    """Chunked online-softmax attention.
+
+    q: (B, Sq, H, hd);  k, v: (B, Sk, KVH, hd) with H % KVH == 0.
+    causal: mask kv_pos > q_pos (q_pos = q_offset + iq; q_offset may be a
+      traced scalar -- decode).  window > 0 adds kv_pos > q_pos - window.
+    kv_valid: optional traced scalar; positions >= kv_valid are masked
+      (partially-filled decode caches).
+    Returns (B, Sq, H, hd) in q.dtype.
+    """
+    q, k, v = grad_cast(q), grad_cast(k), grad_cast(v)
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    scale = softmax_scale or (1.0 / math.sqrt(hd))
+    qr = gqa_reshape(q, KVH)                              # (B,Sq,KVH,G,hd)
+
+    kc = min(kv_chunk, Sk)
+    pad = (-Sk) % kc
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (Sk + pad) // kc
+    ks = k.reshape(B, nc, kc, KVH, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nc, kc, KVH, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Sq)                     # (Sq,) maybe traced
+    limit = jnp.asarray(Sk if kv_valid is None else kv_valid)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        c, (kb, vb) = inputs
+        kv_pos = c * kc + jnp.arange(kc)                  # (kc,)
+        # dots keep the input dtype (bf16 on TPU -> MXU rate) and
+        # accumulate in f32 (preferred_element_type)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qr, kb,
+                            preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((Sq, kc), dtype=bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+        mask &= kv_pos[None, :] < limit
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    # IMPORTANT: derive the carry inits from qr so GSPMD propagates the
+    # head sharding into the scan carry -- literal zeros/full inits are
+    # replicated and force XLA to all-gather heads and compute attention
+    # replicated across the model axis (observed 16x dot-flops blowup)
+    qz = qr[..., 0].transpose(0, 2, 3, 1).astype(jnp.float32) * 0
+    m0 = qz + NEG_INF                                     # (B,KVH,G,Sq)
+    l0 = qz
+    a0 = qr.transpose(0, 2, 3, 1, 4).astype(jnp.float32) * 0
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nc), (ks, vs)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KVH,G,Sq,hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def merge_partial_softmax(m, l, acc, axis_name: str):
+    """Flash-decoding combine across a sequence-sharded KV cache.
+
+    Each shard computes (m, l, acc) over its local KV range; the global
+    softmax is reconstructed with one max-psum and one weighted psum.
+    m, l: (...) running max / normalizer; acc: (..., hd).
+    """
+    m_glob = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_glob)
+    l_glob = jax.lax.psum(l * corr, axis_name)
+    acc_glob = jax.lax.psum(acc * corr[..., None], axis_name)
+    return acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+
+
+def flash_attention_partial(q, k, v, *, q_offset=0, kv_offset=0,
+                            kv_valid=None, causal=True, window: int = 0,
+                            kv_chunk: int = 1024):
+    """Like flash_attention but returns raw (m, l, acc) for cross-shard
+    merging (sequence-sharded KV decode).  kv_offset is the global position
+    of this shard's first key."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qr = gqa_reshape(q, KVH)
+    kc = min(kv_chunk, Sk)
+    pad = (-Sk) % kc
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (Sk + pad) // kc
+    ks = k.reshape(B, nc, kc, KVH, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nc, kc, KVH, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+    limit = jnp.asarray(Sk if kv_valid is None else kv_valid)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        c, (kb, vb) = inputs
+        kv_pos = kv_offset + c * kc + jnp.arange(kc)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qr, kb,
+                            preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((Sq, kc), dtype=bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+        mask &= kv_pos[None, :] < limit
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * corr[..., None] + pv), None
+
+    qz = qr[..., 0].transpose(0, 2, 3, 1).astype(jnp.float32) * 0
+    m0 = qz + NEG_INF
+    l0 = qz
+    a0 = qr.transpose(0, 2, 3, 1, 4).astype(jnp.float32) * 0
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nc), (ks, vs)))
+    return m, l, acc
+
+
+def dus_seq(cache, new, pos):
+    """dynamic_update_slice along dim 1 with dtype-consistent indices."""
+    z = jnp.zeros((), dtype=jnp.asarray(pos).dtype)
+    return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype),
+                                        (z, jnp.asarray(pos), z, z))
+
+
+# ---------------------------------------------------------------- mlp
+def mlp_swiglu(x, wi, wg, wo):
+    x = grad_cast(x)
+    h = jnp.einsum("bsd,df->bsf", x, wi.astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", x, wg.astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    return jnp.einsum("bsf,fd->bsd", h, wo.astype(x.dtype))
+
+
+def mlp_gelu(x, wi, wo, bi=None, bo=None):
+    x = grad_cast(x)
+    h = jnp.einsum("bsd,df->bsf", x, wi.astype(x.dtype))
+    if bi is not None:
+        h = h + bi.astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    y = jnp.einsum("bsf,fd->bsd", h, wo.astype(x.dtype))
+    if bo is not None:
+        y = y + bo.astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- MoE
+def moe_ffn(x, router_w, wi, wg, wo, *, top_k: int, capacity_factor: float,
+            return_aux: bool = False):
+    """Top-k MoE with GROUPED capacity dispatch (GShard/Switch style).
+
+    x (B, S, D); router_w (D, E); wi/wg (E, D, F); wo (E, F, D).
+    Each batch row is a dispatch group: routing, capacity slots (cumsum)
+    and the (E, cap, D) buffers are all PER GROUP, so with the batch dim
+    sharded over the data axes the dispatch never communicates -- the only
+    collectives left are the expert-weight gathers / TP reductions.
+    (A global-cumsum dispatch forces cross-device gathers of every token;
+    observed as a 224s collective term on mixtral train_4k -- see
+    EXPERIMENTS.md Perf H1.)  Overflowing tokens are dropped per group
+    (capacity-factor semantics); aux losses push the router to balance.
+    FLOPs ~= top_k * tokens * 3DF -- active experts only.
+    """
+    B, S, D = x.shape
+    E = router_w.shape[1]
+    cap = int(max(1, math.ceil(capacity_factor * top_k * S / E)))
+    x = grad_cast(x)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)               # (B, S, E)
+    top_w, top_e = jax.lax.top_k(probs, top_k)            # (B, S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_group(xg, eg, wg_):
+        """xg (S, D); eg (S, k); wg_ (S, k) -> (buf (E,cap,D), meta)."""
+        e_flat = eg.reshape(-1)                           # (S*k,)
+        w_flat = wg_.reshape(-1)
+        onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        slot = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+        keep = slot < cap
+        x_rep = jnp.repeat(xg, top_k, axis=0)             # (S*k, D)
+        buf = jnp.zeros((E, cap, D), xg.dtype)
+        buf = buf.at[jnp.where(keep, e_flat, 0),
+                     jnp.where(keep, slot, 0)].add(
+            x_rep * keep[:, None].astype(xg.dtype))
+        return buf, (e_flat, slot, keep, w_flat)
+
+    buf, (e_flat, slot, keep, w_flat) = jax.vmap(dispatch_group)(
+        x, top_e, top_w)                                  # buf (B,E,cap,D)
+    # scatter/gather break GSPMD propagation: re-pin the group (batch) dim
+    buf = actx.constrain(buf, actx.DP, None, None, None)
+
+    h = jnp.einsum("becd,edf->becf", buf, wi.astype(x.dtype))
+    g = jnp.einsum("becd,edf->becf", buf, wg.astype(x.dtype))
+    h = actx.constrain(h, actx.DP, None, None, actx.MDL)
+    g = actx.constrain(g, actx.DP, None, None, actx.MDL)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    y = jnp.einsum("becf,efd->becd", h, wo.astype(x.dtype))  # (B,E,cap,D)
+    y = actx.constrain(y, actx.DP, None, None, None)
+
+    def combine_group(yg, e_flat, slot, keep, w_flat):
+        y_tok = yg[jnp.where(keep, e_flat, 0), jnp.where(keep, slot, 0)]
+        y_tok = y_tok * (w_flat * keep).astype(yg.dtype)[:, None]
+        return y_tok.reshape(S, top_k, D).sum(axis=1)
+
+    out = jax.vmap(combine_group)(y, e_flat, slot, keep, w_flat)
+
+    if return_aux:
+        oh = jax.nn.one_hot(top_e.reshape(B, -1), E).mean((0, 1)) * 1.0
+        imp = probs.mean((0, 1))
+        lb = E * jnp.sum(oh * imp)
+        z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        return out, {"load_balance": lb, "router_z": z}
+    return out

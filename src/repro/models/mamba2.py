@@ -1,0 +1,230 @@
+"""Mamba2 (SSD -- state-space duality, arXiv:2405.21060) in pure JAX.
+
+The SSD algorithm computes the selective-SSM recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T        (per head)
+    y_t = C_t h_t + D x_t
+
+with a *chunked* dual form: quadratic attention-like matmuls inside chunks
+of length Q (MXU-friendly) and a linear state hand-off between chunks
+(``lax.scan``).  ``ssd_scan_ref`` is the naive O(S) recurrence used as the
+test oracle.  Single-token decode keeps (conv window, SSM state) as the
+per-layer cache -- O(1) in sequence length, which is why mamba2/zamba2 are
+the assigned ``long_500k`` architectures.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelCfg, ShapeInit
+from .layers import rmsnorm
+
+__all__ = ["mamba2_param_shapes", "mamba2_block", "mamba2_block_decode",
+           "ssd_chunked", "ssd_scan_ref", "mamba2_state_shapes"]
+
+
+# ---------------------------------------------------------------- SSD core
+def ssd_scan_ref(x, dt, A, B, C):
+    """Naive recurrence oracle.  x (b,s,h,p); dt (b,s,h); A (h,);
+    B, C (b,s,n).  Returns y (b,s,h,p), final state (b,h,n,p)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    a = jnp.exp(dt * A[None, None, :])                    # (b,s,h)
+
+    def step(state, inp):
+        a_t, dtx_t, B_t, C_t = inp
+        # state (b,h,n,p)
+        state = state * a_t[..., None, None] + \
+            B_t[:, None, :, None] * dtx_t[:, :, None, :]
+        y = jnp.einsum("bn,bhnp->bhp", C_t, state)
+        return state, y
+
+    dtx = dt[..., None] * x                               # (b,s,h,p)
+    s0 = jnp.zeros((b, h, n, p), x.dtype)
+    state, ys = jax.lax.scan(
+        step, s0,
+        (a.transpose(1, 0, 2), dtx.transpose(1, 0, 2, 3),
+         B.transpose(1, 0, 2), C.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD.  Shapes as ssd_scan_ref; S % chunk == 0 (caller pads).
+
+    All heavy ops are batched matmuls; the only sequential part is a scan
+    over S/chunk chunk-states.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Q = chunk
+    nc = s // Q
+    xc = x.reshape(b, nc, Q, h, p)
+    dtc = dt.reshape(b, nc, Q, h)
+    Bc = B.reshape(b, nc, Q, n)
+    Cc = C.reshape(b, nc, Q, n)
+
+    loga = dtc * A[None, None, None, :]                   # (b,nc,Q,h) <= 0
+    L = jnp.cumsum(loga, axis=2)                          # cumulative decay
+    Ltot = L[:, :, -1, :]                                 # (b,nc,h)
+
+    # --- intra-chunk (quadratic, causal-masked) ---
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))               # (b,nc,Q,Q)
+    decay = jnp.exp(L[:, :, :, None, :] - L[:, :, None, :, :])  # (b,nc,Q,K,h)
+    causal = np.tril(np.ones((Q, Q), dtype=bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    M = CB[..., None] * decay * dtc[:, :, None, :, :]     # (b,nc,Q,K,h)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M.astype(jnp.float32),
+                         xc.astype(jnp.float32))
+
+    # --- chunk states ---
+    sdecay = jnp.exp(Ltot[:, :, None, :] - L) * dtc       # (b,nc,Q,h)
+    S_c = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bc.astype(jnp.float32),
+                     sdecay.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # --- inter-chunk scan ---
+    def step(state, inp):
+        S_chunk, ltot = inp                               # (b,h,n,p), (b,h)
+        prev = state
+        state = state * jnp.exp(ltot)[..., None, None] + S_chunk
+        return state, prev
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    state, prevs = jax.lax.scan(
+        step, s0, (S_c.transpose(1, 0, 2, 3, 4), Ltot.transpose(1, 0, 2)))
+    prevs = prevs.transpose(1, 0, 2, 3, 4)                # (b,nc,h,n,p)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cc.astype(jnp.float32),
+                         jnp.exp(L).astype(jnp.float32), prevs)
+    y = (y_intra + y_inter).reshape(b, s, h, p).astype(x.dtype)
+    return y, state
+
+
+# ---------------------------------------------------------------- block
+def mamba2_param_shapes(cfg: ModelCfg) -> dict:
+    D = cfg.d_model
+    din = cfg.d_inner
+    n = cfg.ssm_state
+    H = cfg.ssm_heads
+    conv_ch = din + 2 * n
+    return {
+        "in_proj": ShapeInit((D, 2 * din + 2 * n + H), "scaled"),
+        "conv_w": ShapeInit((cfg.ssm_conv, conv_ch), "normal", 0.1),
+        "conv_b": ShapeInit((conv_ch,), "zeros"),
+        "dt_bias": ShapeInit((H,), "zeros"),
+        "A_log": ShapeInit((H,), "ones"),
+        "Dskip": ShapeInit((H,), "ones"),
+        "norm_w": ShapeInit((din,), "ones"),
+        "out_proj": ShapeInit((din, D), "scaled"),
+    }
+
+
+def _split_proj(cfg: ModelCfg, zxbcdt):
+    din, n, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:din + din + 2 * n]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d: xBC (B,S,ch), w (K,ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out + b[None, None, :]
+
+
+def mamba2_block(params, x, cfg: ModelCfg, return_state: bool = False):
+    """Full-sequence mamba2 mixer.  x (B, S, D) -> (B, S, D).
+
+    With ``return_state`` also returns the decode cache {conv, ssm} at the
+    end of the sequence (prefill)."""
+    B_, S, D = x.shape
+    din, n, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z, xBC_raw, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC_raw, params["conv_w"].astype(x.dtype),
+                       params["conv_b"].astype(x.dtype))
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs = xBC[..., :din].reshape(B_, S, H, P)
+    Bmat = xBC[..., din:din + n]
+    Cmat = xBC[..., din + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    y, final = ssd_chunked(xs, dt, A, Bmat, Cmat, Q)
+    y = y[:, :S]
+    y = y + params["Dskip"].astype(jnp.float32)[None, None, :, None] \
+        * xs[:, :S].astype(jnp.float32)
+    y = y.reshape(B_, S, din).astype(x.dtype)
+    # gated RMSNorm then out projection
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                params["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    if not return_state:
+        return out
+    # NOTE: with padding the final chunked state includes zero-decay padded
+    # steps (dt=0 -> a=1, contribution 0), so it equals the state at S.
+    K = cfg.ssm_conv
+    conv_win = xBC_raw[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+        xBC_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return out, {"conv": conv_win.astype(jnp.float32),
+                 "ssm": final.astype(jnp.float32)}
+
+
+def mamba2_state_shapes(cfg: ModelCfg, batch: int):
+    """Per-layer decode cache: (conv window, SSM state)."""
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": (batch, cfg.ssm_conv - 1, conv_ch),
+        "ssm": (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+    }
+
+
+def mamba2_block_decode(params, x1, cache, cfg: ModelCfg):
+    """Single-token step.  x1 (B, 1, D); cache {conv (B,K-1,ch),
+    ssm (B,H,n,P)} -> (y1, new_cache).  O(1) in sequence length."""
+    B_, _, D = x1.shape
+    din, n, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x1, params["in_proj"].astype(x1.dtype))
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = xBC[:, 0]                                        # (B, ch)
+    window = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)
+    w = params["conv_w"].astype(x1.dtype)                  # (K, ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) \
+        + params["conv_b"].astype(x1.dtype)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x1.dtype)
+    xs = conv_out[:, :din].reshape(B_, H, P)
+    Bv = conv_out[:, din:din + n]
+    Cv = conv_out[:, din + n:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A[None, :])                           # (B,H)
+    ssm = cache["ssm"] * a[..., None, None] + \
+        Bv[:, None, :, None] * (dt[..., None] * xs)[:, :, None, :]
+    y = jnp.einsum("bn,bhnp->bhp", Cv.astype(jnp.float32),
+                   ssm.astype(jnp.float32))
+    y = y + params["Dskip"].astype(jnp.float32)[None, :, None] \
+        * xs.astype(jnp.float32)
+    y = y.reshape(B_, 1, din).astype(x1.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x1.dtype),
+                params["norm_w"])
+    y = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x1.dtype))
+    new_cache = {"conv": window[:, 1:], "ssm": ssm.astype(cache["ssm"].dtype)}
+    return y, new_cache

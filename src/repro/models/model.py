@@ -1,0 +1,218 @@
+"""Model registry: one uniform API over every assigned architecture.
+
+``build(cfg)`` returns a ``Model`` exposing:
+
+  param_shapes / init_params(key, abstract)   parameters (or structs)
+  loss_fn(params, batch)                      training loss (scalar f32)
+  prefill_fn(params, inputs)                  prompt pass -> (h, cache)
+  decode_fn(params, inputs, cache)            one-token serve step
+  input_specs(shape)                          ShapeDtypeStructs per cell
+  model_flops(shape)                          6 N_active tokens (train),
+                                              2 N_active tokens (serve)
+
+The dry-run driver, trainer, server, benchmarks and smoke tests all consume
+only this API.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelCfg, init_tree, param_count
+from . import transformer as T
+from . import encdec as ED
+from . import ssm_lm as SL
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+    name: str          # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str          # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclass
+class Model:
+    cfg: ModelCfg
+
+    # ------------------------------------------------------------ params
+    def param_shapes(self):
+        c = self.cfg
+        if c.family in ("dense", "moe", "vlm"):
+            return T.lm_param_shapes(c)
+        if c.family == "audio-encdec":
+            return ED.encdec_param_shapes(c)
+        if c.family == "ssm":
+            return SL.mamba_lm_param_shapes(c)
+        if c.family == "hybrid":
+            return SL.zamba_param_shapes(c)
+        raise ValueError(c.family)
+
+    def init_params(self, key=None, abstract: bool = False):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return init_tree(self.param_shapes(), key, self.cfg.param_dtype,
+                         abstract=abstract)
+
+    def n_params(self) -> int:
+        import numpy as _np
+        from .common import ShapeInit
+        tot = 0
+        for leaf in jax.tree.leaves(
+                self.param_shapes(),
+                is_leaf=lambda x: isinstance(x, ShapeInit)):
+            tot += int(_np.prod(leaf.shape))
+        return tot
+
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts expert FFNs)."""
+        c = self.cfg
+        total = self.n_params()
+        if not c.n_experts:
+            return total
+        expert = 3 * c.d_model * c.d_ff * c.n_experts * c.n_layers
+        active = expert * c.top_k / c.n_experts
+        return int(total - expert + active)
+
+    # ------------------------------------------------------------ steps
+    def loss_fn(self) -> Callable:
+        c = self.cfg
+        if c.family in ("dense", "moe", "vlm"):
+            return lambda p, b: T.lm_loss(p, b, c)
+        if c.family == "audio-encdec":
+            return lambda p, b: ED.encdec_loss(p, b, c)
+        if c.family == "ssm":
+            return lambda p, b: SL.mamba_lm_loss(p, b, c)
+        if c.family == "hybrid":
+            return lambda p, b: SL.zamba_loss(p, b, c)
+        raise ValueError(c.family)
+
+    def prefill_fn(self, max_seq: int) -> Callable:
+        c = self.cfg
+        if c.family in ("dense", "moe", "vlm"):
+            def f(p, b):
+                return T.lm_prefill(p, b.get("tokens"), c, max_seq,
+                                    embeds=b.get("embeds"),
+                                    positions=b.get("positions"))
+            return f
+        if c.family == "audio-encdec":
+            return lambda p, b: ED.encdec_prefill(p, b["enc_embeds"], c,
+                                                  max_seq)
+        if c.family == "ssm":
+            return lambda p, b: SL.mamba_lm_prefill(p, b["tokens"], c)
+        if c.family == "hybrid":
+            return lambda p, b: SL.zamba_prefill(p, b["tokens"], c, max_seq)
+        raise ValueError(c.family)
+
+    def decode_fn(self, seq_ctx=None) -> Callable:
+        c = self.cfg
+        if c.family in ("dense", "moe", "vlm"):
+            def f(p, b, cache):
+                return T.lm_decode_step(p, b["token"], b["pos"], cache, c,
+                                        positions=b.get("positions"),
+                                        seq_ctx=seq_ctx)
+            return f
+        if c.family == "audio-encdec":
+            return lambda p, b, cache: ED.encdec_decode_step(
+                p, b["token"], b["pos"], cache, c)
+        if c.family == "ssm":
+            return lambda p, b, cache: SL.mamba_lm_decode_step(
+                p, b["token"], b["pos"], cache, c)
+        if c.family == "hybrid":
+            return lambda p, b, cache: SL.zamba_decode_step(
+                p, b["token"], b["pos"], cache, c, seq_ctx=seq_ctx)
+        raise ValueError(c.family)
+
+    # ------------------------------------------------------------ specs
+    def input_specs(self, shape: ShapeCell) -> dict:
+        """ShapeDtypeStructs for the step inputs of one cell (no alloc)."""
+        c = self.cfg
+        B, S, D = shape.global_batch, shape.seq, c.d_model
+        i32, emb = jnp.int32, c.dtype
+        if shape.kind == "train":
+            if c.family == "vlm":
+                return {"embeds": _sds((B, S, D), emb),
+                        "positions": _sds((3, B, S), i32),
+                        "labels": _sds((B, S), i32)}
+            if c.family == "audio-encdec":
+                return {"enc_embeds": _sds((B, S, D), emb),
+                        "dec_tokens": _sds((B, S), i32),
+                        "labels": _sds((B, S), i32)}
+            return {"tokens": _sds((B, S), i32),
+                    "labels": _sds((B, S), i32)}
+        if shape.kind == "prefill":
+            if c.family == "vlm":
+                return {"embeds": _sds((B, S, D), emb),
+                        "positions": _sds((3, B, S), i32)}
+            if c.family == "audio-encdec":
+                return {"enc_embeds": _sds((B, S, D), emb)}
+            return {"tokens": _sds((B, S), i32)}
+        # decode: one new token against a seq-long cache
+        b = {"token": _sds((B, 1), i32), "pos": _sds((), i32)}
+        if c.family == "vlm":
+            b["positions"] = _sds((3, B, 1), i32)
+        return b
+
+    def cache_specs(self, shape: ShapeCell, cache_dtype=jnp.bfloat16) -> dict:
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq
+        if c.family in ("dense", "moe", "vlm"):
+            kv = (c.n_layers, B, S, c.n_kv_heads, c.hd)
+            return {"k": _sds(kv, cache_dtype), "v": _sds(kv, cache_dtype)}
+        if c.family == "audio-encdec":
+            kv = (c.n_layers, B, S, c.n_kv_heads, c.hd)
+            return {"k": _sds(kv, cache_dtype), "v": _sds(kv, cache_dtype),
+                    "xk": _sds(kv, cache_dtype), "xv": _sds(kv, cache_dtype)}
+        if c.family == "ssm":
+            st = SL.mamba2_state_shapes(c, B)
+            return {"conv": _sds((c.n_layers,) + st["conv"], jnp.float32),
+                    "ssm": _sds((c.n_layers,) + st["ssm"], jnp.float32)}
+        if c.family == "hybrid":
+            G, period, rem = SL.zamba_groups(c)
+            st = SL.mamba2_state_shapes(c, B)
+            out = {
+                "conv": _sds((G, period) + st["conv"], jnp.float32),
+                "ssm": _sds((G, period) + st["ssm"], jnp.float32),
+                "k": _sds((G, B, S, c.n_kv_heads, c.hd), cache_dtype),
+                "v": _sds((G, B, S, c.n_kv_heads, c.hd), cache_dtype),
+            }
+            if rem:
+                out["conv_tail"] = _sds((rem,) + st["conv"], jnp.float32)
+                out["ssm_tail"] = _sds((rem,) + st["ssm"], jnp.float32)
+            return out
+        raise ValueError(c.family)
+
+    # ------------------------------------------------------------ flops
+    def model_flops(self, shape: ShapeCell) -> float:
+        """Useful-model FLOPs for the cell: 6 N_active tokens (train),
+        2 N_active tokens (prefill/decode forward)."""
+        tokens = shape.global_batch * (shape.seq if shape.kind != "decode"
+                                       else 1)
+        n = self.n_active_params()
+        mult = 6.0 if shape.kind == "train" else 2.0
+        # decode reads the whole KV cache: attention flops separate and
+        # dominated by memory; 6ND/2ND convention per instructions
+        return mult * n * tokens
+
+
+def build(cfg: ModelCfg) -> Model:
+    return Model(cfg)

@@ -1,0 +1,176 @@
+"""Parameter / activation PartitionSpec rules (GSPMD, mesh-agnostic).
+
+Strategy (DESIGN.md Sec. 6): 2D-sharded params -- the "width" dim (heads,
+ffn, vocab, experts, d_inner) over the ``model`` axis (TP/EP), the other
+matrix dim over the combined data axes (``("pod", "data")``) for
+FSDP/ZeRO-3-style weight sharding; optimizer state inherits the param
+specs.  Scanned stacks add leading unsharded layer dims (auto-padded).
+
+The rules are name-based over the param-tree paths, so they apply uniformly
+to every family in the zoo.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .common import ModelCfg, ShapeInit
+
+__all__ = ["param_specs", "batch_specs", "cache_specs_sharding"]
+
+
+def _base_spec(path: str, name: str, cfg: ModelCfg, fsdp, mdl,
+               mdl_size: int = 16):
+    """(base_ndim, spec) for an unstacked leaf, or None -> replicated."""
+    is_moe = cfg.n_experts > 0 and "/ffn/" in path and "shared" not in path
+    # EP when the expert count divides the model axis, else TP inside each
+    # expert (e.g. mixtral 8e on a 16-way model axis)
+    moe_ep = is_moe and cfg.n_experts % mdl_size == 0
+    if name == "embed":
+        return 2, P(mdl, fsdp)
+    if name == "unembed":
+        return 2, P(fsdp, mdl)
+    if name in ("wq", "wk", "wv"):
+        return 2, P(fsdp, mdl)
+    if name == "wo" and "attn" in path.rsplit("/", 2)[-2]:
+        return 2, P(mdl, fsdp)
+    if name == "router":
+        return 2, P(fsdp, None)
+    if name in ("wi", "wg"):
+        if is_moe:
+            return (3, P(mdl, fsdp, None)) if moe_ep else (3, P(None, fsdp, mdl))
+        return 2, P(fsdp, mdl)
+    if name == "wo":  # ffn wo
+        if is_moe:
+            return (3, P(mdl, None, fsdp)) if moe_ep else (3, P(None, mdl, fsdp))
+        return 2, P(mdl, fsdp)
+    if name in ("bq", "bk", "bv", "bi"):
+        return 1, P(mdl)
+    if name == "bo":
+        return 1, P(None)
+    # --- mamba ---
+    if name == "in_proj":
+        return 2, P(fsdp, mdl)
+    if name == "out_proj":
+        return 2, P(mdl, fsdp)
+    if name == "conv_w":
+        return 2, P(None, mdl)
+    if name in ("conv_b", "dt_bias", "A_log", "Dskip", "norm_w"):
+        return 1, P(mdl)
+    # --- norms (w/b) and everything else: replicated ---
+    return 1, P(None)
+
+
+_MESH_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def set_mesh_sizes(sizes: dict) -> None:
+    """Axis sizes used for divisibility checks in param_specs."""
+    _MESH_SIZES.clear()
+    _MESH_SIZES.update(sizes)
+
+
+def param_specs(cfg: ModelCfg, shapes_tree, *, fsdp=("data",), mdl="model",
+                mdl_size: int = 16, serve: bool = False):
+    """PartitionSpec tree matching a param-shapes tree (ShapeInit leaves).
+
+    serve=True: weights stay RESIDENT (no FSDP over the data axes -- a
+    per-token weight all-gather costs ~150 ms/token on a 35B decode cell;
+    see EXPERIMENTS.md Perf H4).  MoE expert tables keep the data-axis
+    sharding for memory (they exceed HBM replicated)."""
+    fsdp = tuple(fsdp) if isinstance(fsdp, (tuple, list)) else (fsdp,)
+    fsdp_axis = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+
+    def visit(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        name = pstr.rsplit("/", 1)[-1]
+        ndim = len(leaf.shape)
+        is_moe_w = (cfg.n_experts > 0 and "/ffn/" in pstr
+                    and "shared" not in pstr and name in ("wi", "wg", "wo"))
+        eff_fsdp = fsdp_axis if (not serve or is_moe_w) else None
+        base_ndim, spec = _base_spec(pstr, name, cfg, eff_fsdp, mdl,
+                                     mdl_size)
+        pad = ndim - base_ndim
+        if pad < 0:  # scalar-ish leaf
+            return P()
+        full = (None,) * pad + tuple(spec)
+        # drop axes that do not divide the dim evenly (e.g. 1-d params
+        # under full fsdp sharding)
+        fixed = []
+        for dim, ax in zip(leaf.shape, full):
+            if ax is None:
+                fixed.append(None)
+                continue
+            names = ax if isinstance(ax, tuple) else (ax,)
+            sz = 1
+            import math as _m
+            for nm in names:
+                sz *= _MESH_SIZES.get(nm, 0) or 1
+            fixed.append(ax if sz and dim % sz == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(
+        visit, shapes_tree, is_leaf=lambda x: isinstance(x, ShapeInit))
+
+
+def batch_specs(cfg: ModelCfg, input_tree, *, dp=("data",), mdl="model"):
+    """PartitionSpecs for step inputs: batch over the data axes.
+    dp=None replicates the batch dim (e.g. global_batch=1 cells)."""
+    if dp is None:
+        dp_axis = None
+    else:
+        dp = tuple(dp) if isinstance(dp, (tuple, list)) else (dp,)
+        dp_axis = dp if len(dp) > 1 else dp[0]
+
+    def visit(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = len(leaf.shape)
+        if name == "pos":
+            return P()
+        if name == "positions" and nd == 3:       # (3, B, S)
+            return P(None, dp_axis, None)
+        if name in ("embeds", "enc_embeds"):      # (B, S, D)
+            return P(dp_axis, None, None)
+        if nd >= 2:                               # tokens/labels (B, S)
+            return P(*((dp_axis,) + (None,) * (nd - 1)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(visit, input_tree)
+
+
+def cache_specs_sharding(cfg: ModelCfg, cache_tree, *, dp=("data",),
+                         mdl="model", seq_sharded: bool = False):
+    """PartitionSpecs for decode caches.
+
+    KV tensors (..., B, S, KVH, hd): batch over dp; then either kv-heads
+    over model (divisible case) or the sequence dim over model
+    (seq_sharded; flash-decoding combine in the decode step).
+    SSM states (..., B, H, n, p): heads over model.
+    """
+    if dp is None:
+        dp_axis = None
+    else:
+        dp = tuple(dp) if isinstance(dp, (tuple, list)) else (dp,)
+        dp_axis = dp if len(dp) > 1 else dp[0]
+
+    def visit(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = len(leaf.shape)
+        if name in ("k", "v", "xk", "xv"):
+            # (L_or_G, B, S, KVH, hd)
+            if seq_sharded:
+                return P(None, dp_axis, mdl, None, None)
+            return P(None, dp_axis, None, mdl, None)
+        if name in ("ssm", "ssm_tail"):
+            # (..., B, H, n, p): batch over dp, heads over model
+            pad = nd - 4
+            return P(*((None,) * pad + (dp_axis, mdl, None, None)))
+        if name in ("conv", "conv_tail"):
+            # (..., B, K-1, ch): channels over model
+            pad = nd - 3
+            return P(*((None,) * pad + (dp_axis, None, mdl)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(visit, cache_tree)

@@ -1,0 +1,303 @@
+"""SSM and hybrid language models: mamba2-370m and zamba2-1.2b.
+
+* mamba2 LM: embed -> N x (rmsnorm -> mamba2 mixer -> residual) -> norm ->
+  unembed; scanned stack.
+* zamba2 hybrid: mamba2 backbone with ONE weight-shared attention+MLP block
+  applied after every ``shared_attn_period`` mamba layers (arXiv:2411.15242;
+  the shared block's weights are reused at every application site).
+
+Decode state is O(1) in sequence length for the mamba layers (conv window +
+SSM state) plus a KV cache per shared-attention application site (zamba2),
+which is why these two archs run the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelCfg, ShapeInit
+from . import layers as L
+from . import actx
+from .mamba2 import (mamba2_block, mamba2_block_decode, mamba2_param_shapes,
+                     mamba2_state_shapes)
+from .transformer import (_ffn, _norm, _qkv, attn_param_shapes,
+                          ffn_param_shapes, norm_param_shapes,
+                          _stack_shapes, chunked_ce_loss)
+
+__all__ = [
+    "mamba_lm_param_shapes", "mamba_lm_loss", "mamba_lm_forward",
+    "mamba_lm_init_state", "mamba_lm_decode_step",
+    "zamba_param_shapes", "zamba_loss", "zamba_forward",
+    "zamba_init_state", "zamba_decode_step", "zamba_groups",
+]
+
+
+# =========================================================== mamba2 LM
+def _mamba_layer_shapes(cfg: ModelCfg) -> dict:
+    return {"ln": norm_param_shapes(cfg), "mixer": mamba2_param_shapes(cfg)}
+
+
+def mamba_lm_param_shapes(cfg: ModelCfg) -> dict:
+    return {
+        "embed": ShapeInit((cfg.padded_vocab, cfg.d_model), "normal", 0.02),
+        "layers": _stack_shapes(_mamba_layer_shapes(cfg), cfg.n_layers),
+        "final_norm": norm_param_shapes(cfg),
+        "unembed": ShapeInit((cfg.d_model, cfg.padded_vocab), "scaled"),
+    }
+
+
+def mamba_lm_forward(params, tokens, cfg: ModelCfg, remat: bool = True):
+    h = actx.batch_act(jnp.take(params["embed"], tokens,
+                                axis=0).astype(cfg.dtype))
+
+    def body(h, lp):
+        h = h + mamba2_block(lp["mixer"], _norm(lp["ln"], h, cfg), cfg)
+        return actx.batch_act(h), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return _norm(params["final_norm"], h, cfg)
+
+
+def mamba_lm_loss(params, batch, cfg: ModelCfg, ce_chunk: int = 512):
+    h = mamba_lm_forward(params, batch["tokens"], cfg)
+    return chunked_ce_loss(h, params["unembed"], batch["labels"],
+                           batch.get("mask"), chunk=ce_chunk)
+
+
+def mamba_lm_prefill(params, tokens, cfg: ModelCfg):
+    """Process a prompt, returning (final hidden, decode state)."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+    def body(h, lp):
+        y, st = mamba2_block(lp["mixer"], _norm(lp["ln"], h, cfg), cfg,
+                             return_state=True)
+        return actx.batch_act(h + y), st
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    h = actx.batch_act(h)
+    h, states = jax.lax.scan(body, h, params["layers"])
+    return _norm(params["final_norm"], h, cfg), states
+
+
+def mamba_lm_init_state(cfg: ModelCfg, batch: int, dtype=jnp.float32):
+    s = mamba2_state_shapes(cfg, batch)
+    return {
+        "conv": jnp.zeros((cfg.n_layers,) + s["conv"], dtype),
+        "ssm": jnp.zeros((cfg.n_layers,) + s["ssm"], dtype),
+    }
+
+
+def mamba_lm_decode_step(params, token, pos, state, cfg: ModelCfg):
+    """O(1) decode: no KV cache, just per-layer (conv, ssm) states."""
+    h = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)
+
+    def body(h, xs):
+        lp, conv, ssm = xs
+        y, new = mamba2_block_decode(lp["mixer"], _norm(lp["ln"], h, cfg),
+                                     {"conv": conv, "ssm": ssm}, cfg)
+        return h + y, (new["conv"], new["ssm"])
+
+    h, (conv, ssm) = jax.lax.scan(
+        body, h, (params["layers"], state["conv"], state["ssm"]))
+    h = _norm(params["final_norm"], h, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                        params["unembed"].astype(jnp.float32))
+    V = logits.shape[-1]
+    if cfg.vocab < V:
+        logits = jnp.where(jnp.arange(V)[None, None, :] < cfg.vocab,
+                           logits, -1e30)
+    return logits, {"conv": conv, "ssm": ssm}
+
+
+# =========================================================== zamba2 hybrid
+def zamba_groups(cfg: ModelCfg):
+    """(n_groups, period, remainder) covering cfg.n_layers mamba layers."""
+    period = cfg.shared_attn_period
+    return cfg.n_layers // period, period, cfg.n_layers % period
+
+
+def zamba_param_shapes(cfg: ModelCfg) -> dict:
+    G, period, rem = zamba_groups(cfg)
+    layer = _mamba_layer_shapes(cfg)
+    shapes = {
+        "embed": ShapeInit((cfg.padded_vocab, cfg.d_model), "normal", 0.02),
+        # grouped stack: (G, period, ...) so one scan-of-scan covers it
+        "groups": _stack_shapes(_stack_shapes(layer, period), G),
+        # the weight-SHARED attention+MLP block (one copy, reused G times)
+        "shared": {
+            "ln1": norm_param_shapes(cfg),
+            "attn": attn_param_shapes(cfg),
+            "ln2": norm_param_shapes(cfg),
+            "ffn": ffn_param_shapes(cfg),
+        },
+        "final_norm": norm_param_shapes(cfg),
+        "unembed": ShapeInit((cfg.d_model, cfg.padded_vocab), "scaled"),
+    }
+    if rem:
+        shapes["tail"] = _stack_shapes(layer, rem)
+    return shapes
+
+
+def _shared_attn_block(sp, h, cfg, cos, sin, kv_chunk: int = 1024):
+    B, S = h.shape[:2]
+    x = _norm(sp["ln1"], h, cfg)
+    q, k, v = _qkv(sp["attn"], x, cfg)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    out = L.flash_attention(q, k, v, causal=True, kv_chunk=kv_chunk)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    h = h + jnp.einsum("bse,ed->bsd", out, sp["attn"]["wo"].astype(h.dtype))
+    return h + _ffn(sp["ffn"], _norm(sp["ln2"], h, cfg), cfg)
+
+
+def zamba_forward(params, tokens, cfg: ModelCfg, remat: bool = True):
+    h = actx.batch_act(jnp.take(params["embed"], tokens,
+                                axis=0).astype(cfg.dtype))
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = L.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+    shared = params["shared"]
+
+    def mamba_body(h, lp):
+        h = h + mamba2_block(lp["mixer"], _norm(lp["ln"], h, cfg), cfg)
+        return actx.batch_act(h), None
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+
+    def group_body(h, gp):
+        h, _ = jax.lax.scan(mamba_body, h, gp)
+        h = _shared_attn_block(shared, h, cfg, cos, sin)
+        return actx.batch_act(h), None
+
+    h, _ = jax.lax.scan(group_body, h, params["groups"])
+    if "tail" in params:
+        h, _ = jax.lax.scan(mamba_body, h, params["tail"])
+    return _norm(params["final_norm"], h, cfg)
+
+
+def zamba_loss(params, batch, cfg: ModelCfg, ce_chunk: int = 512):
+    h = zamba_forward(params, batch["tokens"], cfg)
+    return chunked_ce_loss(h, params["unembed"], batch["labels"],
+                           batch.get("mask"), chunk=ce_chunk,
+                           valid_vocab=cfg.vocab)
+
+
+def zamba_init_state(cfg: ModelCfg, batch: int, max_seq: int,
+                     cache_dtype=jnp.bfloat16, state_dtype=jnp.float32):
+    G, period, rem = zamba_groups(cfg)
+    s = mamba2_state_shapes(cfg, batch)
+    st = {
+        "conv": jnp.zeros((G, period) + s["conv"], state_dtype),
+        "ssm": jnp.zeros((G, period) + s["ssm"], state_dtype),
+        "k": jnp.zeros((G, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                       cache_dtype),
+        "v": jnp.zeros((G, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                       cache_dtype),
+    }
+    if rem:
+        st["conv_tail"] = jnp.zeros((rem,) + s["conv"], state_dtype)
+        st["ssm_tail"] = jnp.zeros((rem,) + s["ssm"], state_dtype)
+    return st
+
+
+def zamba_prefill(params, tokens, cfg: ModelCfg, max_seq: int,
+                  cache_dtype=jnp.bfloat16, kv_chunk: int = 1024):
+    """Prompt pass: mamba states + shared-attention KV caches."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = L.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+    shared = params["shared"]
+
+    def mamba_body(h, lp):
+        y, st = mamba2_block(lp["mixer"], _norm(lp["ln"], h, cfg), cfg,
+                             return_state=True)
+        return actx.batch_act(h + y), st
+
+    mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+
+    def group_body(h, gp):
+        h, st = jax.lax.scan(mamba_body, h, gp)
+        x = _norm(shared["ln1"], h, cfg)
+        q, k, v = _qkv(shared["attn"], x, cfg)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        out = L.flash_attention(q, k, v, causal=True, kv_chunk=kv_chunk)
+        out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+        h = h + jnp.einsum("bse,ed->bsd", out,
+                           shared["attn"]["wo"].astype(h.dtype))
+        h = h + _ffn(shared["ffn"], _norm(shared["ln2"], h, cfg), cfg)
+        pad = max_seq - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+        return h, (st, kc, vc)
+
+    h, (gstates, kc, vc) = jax.lax.scan(group_body, h, params["groups"])
+    state = {"conv": gstates["conv"], "ssm": gstates["ssm"], "k": kc, "v": vc}
+    if "tail" in params:
+        h, st = jax.lax.scan(mamba_body, h, params["tail"])
+        state["conv_tail"], state["ssm_tail"] = st["conv"], st["ssm"]
+    return _norm(params["final_norm"], h, cfg), state
+
+
+def zamba_decode_step(params, token, pos, state, cfg: ModelCfg, *,
+                      seq_ctx=None, kv_chunk: int = 1024):
+    """One hybrid decode step.  Mamba layers use O(1) state; each shared
+    attention application site has its own KV cache (G, B, S, KV, hd),
+    optionally sequence-sharded (seq_ctx; long_500k)."""
+    from .transformer import _decode_attn_sharded
+    h = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)
+    B = h.shape[0]
+    positions = jnp.full((B, 1), pos)
+    cos, sin = L.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+    shared = params["shared"]
+
+    def mamba_body(h, xs):
+        lp, conv, ssm = xs
+        y, new = mamba2_block_decode(lp["mixer"], _norm(lp["ln"], h, cfg),
+                                     {"conv": conv, "ssm": ssm}, cfg)
+        return h + y, (new["conv"], new["ssm"])
+
+    def group_body(h, xs):
+        gp, conv, ssm, kc, vc = xs
+        h, (conv, ssm) = jax.lax.scan(mamba_body, h, (gp, conv, ssm))
+        x = _norm(shared["ln1"], h, cfg)
+        q, k_new, v_new = _qkv(shared["attn"], x, cfg)
+        q = L.apply_rope(q, cos, sin)
+        k_new = L.apply_rope(k_new, cos, sin)
+        if seq_ctx is not None:
+            out, kc, vc = _decode_attn_sharded(q, kc, vc, k_new, v_new, pos,
+                                               cfg, seq_ctx)
+        else:
+            kc = L.dus_seq(kc, k_new, pos)
+            vc = L.dus_seq(vc, v_new, pos)
+            out = L.flash_attention(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                                    causal=True, q_offset=pos,
+                                    kv_valid=pos + 1, kv_chunk=kv_chunk)
+        out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+        h = h + jnp.einsum("bse,ed->bsd", out,
+                           shared["attn"]["wo"].astype(h.dtype))
+        h = h + _ffn(shared["ffn"], _norm(shared["ln2"], h, cfg), cfg)
+        return h, (conv, ssm, kc, vc)
+
+    h, (conv, ssm, kc, vc) = jax.lax.scan(
+        group_body, h, (params["groups"], state["conv"], state["ssm"],
+                        state["k"], state["v"]))
+    new_state = dict(state, conv=conv, ssm=ssm, k=kc, v=vc)
+    if "tail" in params:
+        h, (ct, st_) = jax.lax.scan(
+            mamba_body, h,
+            (params["tail"], state["conv_tail"], state["ssm_tail"]))
+        new_state["conv_tail"], new_state["ssm_tail"] = ct, st_
+    h = _norm(params["final_norm"], h, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                        params["unembed"].astype(jnp.float32))
+    V = logits.shape[-1]
+    if cfg.vocab < V:
+        logits = jnp.where(jnp.arange(V)[None, None, :] < cfg.vocab,
+                           logits, -1e30)
+    return logits, new_state

@@ -1,0 +1,396 @@
+"""Decoder-only transformer LM family (pure JAX, scan-over-layers).
+
+Covers: stablelm-3b, starcoder2-3b, command-r-35b, granite-34b (MQA),
+qwen2-vl-72b (M-RoPE backbone), phi3.5-moe, mixtral-8x22b (MoE + SWA).
+
+Layer stacks are scanned with stacked parameters (leading L dim): HLO size
+and SPMD partitioning cost are depth-independent, which keeps the 512-way
+dry-run compilable on one CPU core.  ``jax.checkpoint`` wraps the scanned
+body for remat.
+
+Serving: ``prefill`` builds the KV cache with chunked flash attention;
+``decode_step`` appends one token.  When the cache is sequence-sharded
+(decode_32k / long_500k meshes), attention runs under a nested
+``shard_map`` with the flash-decoding partial-softmax combine
+(layers.merge_partial_softmax).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelCfg, ShapeInit, init_tree
+from . import layers as L
+from . import actx
+
+__all__ = ["lm_param_shapes", "lm_forward", "lm_loss", "lm_prefill",
+           "lm_decode_step", "attention", "decoder_layer", "chunked_ce_loss",
+           "SeqShardCtx"]
+
+
+@dataclass(frozen=True)
+class SeqShardCtx:
+    """Present when the decode KV cache is sequence-sharded over a mesh
+    axis; attention then uses shard_map + flash-decoding combine."""
+    mesh: Any
+    axis: str       # mesh axis name sharding the KV sequence dim
+    dp_axes: tuple  # mesh axes sharding the batch dim
+
+
+# ---------------------------------------------------------------- shapes
+def attn_param_shapes(cfg: ModelCfg) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": ShapeInit((D, H * hd), "scaled"),
+        "wk": ShapeInit((D, KV * hd), "scaled"),
+        "wv": ShapeInit((D, KV * hd), "scaled"),
+        "wo": ShapeInit((H * hd, D), "scaled"),
+    }
+    if cfg.attn_bias:
+        p.update(bq=ShapeInit((H * hd,), "zeros"),
+                 bk=ShapeInit((KV * hd,), "zeros"),
+                 bv=ShapeInit((KV * hd,), "zeros"))
+    return p
+
+
+def ffn_param_shapes(cfg: ModelCfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.n_experts:
+        E = cfg.n_experts
+        return {
+            "router": ShapeInit((D, E), "scaled"),
+            "wi": ShapeInit((E, D, F), "scaled"),
+            "wg": ShapeInit((E, D, F), "scaled"),
+            "wo": ShapeInit((E, F, D), "scaled"),
+        }
+    if cfg.mlp == "gelu":
+        return {"wi": ShapeInit((D, F), "scaled"),
+                "wo": ShapeInit((F, D), "scaled"),
+                "bi": ShapeInit((F,), "zeros"),
+                "bo": ShapeInit((D,), "zeros")}
+    return {"wi": ShapeInit((D, F), "scaled"),
+            "wg": ShapeInit((D, F), "scaled"),
+            "wo": ShapeInit((F, D), "scaled")}
+
+
+def norm_param_shapes(cfg: ModelCfg) -> dict:
+    D = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": ShapeInit((D,), "ones"), "b": ShapeInit((D,), "zeros")}
+    return {"w": ShapeInit((D,), "ones")}
+
+
+def layer_param_shapes(cfg: ModelCfg, cross_attn: bool = False) -> dict:
+    p = {
+        "ln1": norm_param_shapes(cfg),
+        "attn": attn_param_shapes(cfg),
+        "ln2": norm_param_shapes(cfg),
+        "ffn": ffn_param_shapes(cfg),
+    }
+    if cross_attn:
+        p["lnx"] = norm_param_shapes(cfg)
+        p["xattn"] = attn_param_shapes(cfg)
+    return p
+
+
+def _stack_shapes(tree, n: int):
+    return jax.tree.map(
+        lambda s: ShapeInit((n,) + s.shape, s.kind, s.scale), tree,
+        is_leaf=lambda x: isinstance(x, ShapeInit))
+
+
+def lm_param_shapes(cfg: ModelCfg) -> dict:
+    D, V = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": ShapeInit((V, D), "normal", 0.02),
+        "layers": _stack_shapes(layer_param_shapes(cfg), cfg.n_layers),
+        "final_norm": norm_param_shapes(cfg),
+        "unembed": ShapeInit((D, V), "scaled"),
+    }
+
+
+# ---------------------------------------------------------------- pieces
+def _norm(p, x, cfg):
+    if cfg.norm == "layernorm":
+        return L.layernorm(x, p["w"], p["b"])
+    return L.rmsnorm(x, p["w"])
+
+
+def _qkv(p, x, cfg):
+    dt = x.dtype
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def _rope(cfg, positions):
+    """positions: (B, S) or (3, B, S) for M-RoPE; returns (cos, sin)."""
+    if cfg.mrope_sections:
+        return L.mrope_cos_sin(positions, cfg.hd, cfg.mrope_sections,
+                               cfg.rope_theta)
+    return L.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+
+
+def attention(p, x, cfg, cos, sin, *, causal=True, kv_chunk=1024):
+    q, k, v = _qkv(p, x, cfg)
+    if cos is not None:
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    out = L.flash_attention(q, k, v, causal=causal, window=cfg.swa_window,
+                            kv_chunk=kv_chunk)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+
+
+def _ffn(p, x, cfg):
+    if cfg.n_experts:
+        return L.moe_ffn(x, p["router"], p["wi"], p["wg"], p["wo"],
+                         top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor)
+    if cfg.mlp == "gelu":
+        return L.mlp_gelu(x, p["wi"], p["wo"], p.get("bi"), p.get("bo"))
+    return L.mlp_swiglu(x, p["wi"], p["wg"], p["wo"])
+
+
+def decoder_layer(p, h, cfg, cos, sin, *, causal=True, kv_chunk=1024):
+    a = attention(p["attn"], _norm(p["ln1"], h, cfg), cfg, cos, sin,
+                  causal=causal, kv_chunk=kv_chunk)
+    h = h + a
+    m = _ffn(p["ffn"], _norm(p["ln2"], h, cfg), cfg)
+    return h + m
+
+
+# ---------------------------------------------------------------- forward
+def lm_forward(params, tokens, cfg: ModelCfg, *, embeds=None, positions=None,
+               kv_chunk: int = 1024, remat: bool = True):
+    """Full-sequence forward to final hidden states (B, S, D)."""
+    if embeds is None:
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        B, S = tokens.shape
+    else:
+        h = embeds.astype(cfg.dtype)
+        B, S = embeds.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = _rope(cfg, positions)
+
+    h = actx.batch_act(h)
+
+    def body(h, lp):
+        h = decoder_layer(lp, h, cfg, cos, sin, kv_chunk=kv_chunk)
+        return actx.batch_act(h), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return _norm(params["final_norm"], h, cfg)
+
+
+def chunked_ce_loss(h, unembed, labels, mask=None, chunk: int = 512,
+                    valid_vocab: int | None = None):
+    """Cross-entropy without materializing (B, S, V): scan over S chunks.
+
+    h (B, S, D) final hidden; labels (B, S) int32; mask (B, S) optional.
+    valid_vocab: mask logits >= valid_vocab (padded-vocab rows) to -inf.
+    Returns mean loss over unmasked tokens (f32).
+    """
+    B, S, D = h.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else \
+            jnp.pad(jnp.ones((B, S), bool), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((B, S + pad), bool)
+    nc = (S + pad) // c
+    hs = h.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, c).transpose(1, 0, 2)
+    ms = mask.reshape(B, nc, c).transpose(1, 0, 2)
+
+    V = unembed.shape[-1]
+    vocab_ok = None
+    if valid_vocab is not None and valid_vocab < V:
+        vocab_ok = (jnp.arange(V) < valid_vocab)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        hc, lc, mc = inp
+        logits = jnp.einsum("bsd,dv->bsv", hc.astype(jnp.float32),
+                            unembed.astype(jnp.float32))
+        if vocab_ok is not None:
+            logits = jnp.where(vocab_ok[None, None, :], logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, batch, cfg: ModelCfg, *, kv_chunk: int = 1024,
+            ce_chunk: int = 512):
+    """batch: {tokens|embeds, labels, [positions], [mask]} -> scalar loss."""
+    h = lm_forward(params, batch.get("tokens"), cfg,
+                   embeds=batch.get("embeds"),
+                   positions=batch.get("positions"), kv_chunk=kv_chunk)
+    return chunked_ce_loss(h, params["unembed"], batch["labels"],
+                           batch.get("mask"), chunk=ce_chunk,
+                           valid_vocab=cfg.vocab)
+
+
+# ---------------------------------------------------------------- serving
+def init_kv_cache(cfg: ModelCfg, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def lm_prefill(params, tokens, cfg: ModelCfg, max_seq: int, *, embeds=None,
+               positions=None, kv_chunk: int = 1024, cache_dtype=jnp.bfloat16):
+    """Builds the KV cache and returns (last hidden, cache)."""
+    if embeds is None:
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        B, S = tokens.shape
+    else:
+        h = embeds.astype(cfg.dtype)
+        B, S = embeds.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = _rope(cfg, positions)
+
+    h = actx.batch_act(h)
+
+    def body(h, lp):
+        x = _norm(lp["ln1"], h, cfg)
+        q, k, v = _qkv(lp["attn"], x, cfg)
+        if cos is not None:
+            q = L.apply_rope(q, cos, sin)
+            k = L.apply_rope(k, cos, sin)
+        out = L.flash_attention(q, k, v, causal=True, window=cfg.swa_window,
+                                kv_chunk=kv_chunk)
+        out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+        h = h + jnp.einsum("bse,ed->bsd", out,
+                           lp["attn"]["wo"].astype(h.dtype))
+        h = h + _ffn(lp["ffn"], _norm(lp["ln2"], h, cfg), cfg)
+        h = actx.batch_act(h)
+        pad = max_seq - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+        return h, {"k": kc, "v": vc}
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    h, cache = jax.lax.scan(body, h, params["layers"])
+    return _norm(params["final_norm"], h, cfg), cache
+
+
+def _decode_attn_sharded(q, kc, vc, k_new, v_new, pos, cfg, ctx: SeqShardCtx):
+    """Decode attention with a sequence-sharded KV cache (flash-decoding).
+
+    q (B,1,H,hd) replicated over ctx.axis; kc/vc (B,S,KV,hd) sharded on S;
+    the new token's (k, v) are written into the owning shard, then each
+    shard computes partial softmax stats merged with one psum.
+    """
+    from jax.sharding import PartitionSpec as P_
+    S_total = kc.shape[1]
+    nsh = ctx.mesh.shape[ctx.axis]
+    shard = S_total // nsh
+    dp_axes = ctx.dp_axes if ctx.dp_axes else None
+
+    def body(q, kc, vc, k_new, v_new, pos):
+        idx = jax.lax.axis_index(ctx.axis)
+        lo = idx * shard
+        loc = jnp.clip(pos - lo, 0, shard - 1)
+        in_range = (pos >= lo) & (pos < lo + shard)
+        kup = L.dus_seq(kc, k_new, loc)
+        vup = L.dus_seq(vc, v_new, loc)
+        kc2 = jnp.where(in_range, kup, kc)
+        vc2 = jnp.where(in_range, vup, vc)
+        m, l, acc = L.flash_attention_partial(
+            q, kc2.astype(q.dtype), vc2.astype(q.dtype),
+            q_offset=pos, kv_offset=lo, kv_valid=pos + 1,
+            causal=True, window=cfg.swa_window)
+        out = L.merge_partial_softmax(m, l, acc, ctx.axis)
+        return out, kc2, vc2
+
+    spec_kv = P_(dp_axes, ctx.axis, None, None)
+    out, kc2, vc2 = jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P_(dp_axes, None, None, None), spec_kv, spec_kv,
+                  P_(dp_axes, None, None, None),
+                  P_(dp_axes, None, None, None), P_()),
+        out_specs=(P_(dp_axes, None, None, None, None), spec_kv, spec_kv),
+        check_vma=False,
+    )(q, kc, vc, k_new, v_new, pos)
+    B, KV, G, Sq, hd = out.shape
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, KV * G, hd)
+    return out.astype(q.dtype), kc2, vc2
+
+
+def lm_decode_step(params, token, pos, cache, cfg: ModelCfg, *,
+                   positions=None, seq_ctx: SeqShardCtx | None = None,
+                   kv_chunk: int = 1024):
+    """One decode step.  token (B, 1) int32 (or embeds (B,1,D)); pos traced
+    scalar; cache {k, v} (L, B, S, KV, hd).  Returns (logits, new cache)."""
+    if token.ndim == 2:
+        h = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)
+    else:
+        h = token.astype(cfg.dtype)
+    B = h.shape[0]
+    if positions is None:
+        positions = jnp.full((B, 1), pos)
+    cos, sin = _rope(cfg, positions)
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        x = _norm(lp["ln1"], h, cfg)
+        q, k_new, v_new = _qkv(lp["attn"], x, cfg)
+        if cos is not None:
+            q = L.apply_rope(q, cos, sin)
+            k_new = L.apply_rope(k_new, cos, sin)
+        if seq_ctx is not None:
+            out, kc, vc = _decode_attn_sharded(
+                q, kc, vc, k_new, v_new, pos, cfg, seq_ctx)
+        else:
+            kc = L.dus_seq(kc, k_new, pos)
+            vc = L.dus_seq(vc, v_new, pos)
+            out = L.flash_attention(
+                q, kc.astype(q.dtype), vc.astype(q.dtype), causal=True,
+                window=cfg.swa_window, q_offset=pos, kv_valid=pos + 1,
+                kv_chunk=kv_chunk)
+        out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+        h = h + jnp.einsum("bse,ed->bsd", out,
+                           lp["attn"]["wo"].astype(h.dtype))
+        h = h + _ffn(lp["ffn"], _norm(lp["ln2"], h, cfg), cfg)
+        return actx.batch_act(h), {"k": kc, "v": vc}
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"],
+                                          cache["k"], cache["v"]))
+    h = _norm(params["final_norm"], h, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                        params["unembed"].astype(jnp.float32))
+    V = logits.shape[-1]
+    if cfg.vocab < V:
+        logits = jnp.where(jnp.arange(V)[None, None, :] < cfg.vocab,
+                           logits, -1e30)
+    return logits, new_cache

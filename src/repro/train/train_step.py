@@ -1,0 +1,207 @@
+"""Sharded train/serve step builders (the units the dry-run lowers).
+
+``build_train_step``: value_and_grad of the model loss + AdamW update, jit'd
+with NamedShardings: params/opt FSDP+TP (ZeRO), batch over the data axes.
+Optional gradient accumulation runs microbatches under ``lax.scan`` (the
+compiled HLO stays one fused step).
+
+``build_serve_steps``: prefill and decode steps with KV-cache shardings;
+decode uses the sequence-sharded flash-decoding path when the arch's
+kv-heads don't divide the model axis (DESIGN.md Sec. 6).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import actx
+from ..models import shardings as SH
+from ..models.common import ModelCfg
+from ..models.model import Model, ShapeCell
+from ..models.transformer import SeqShardCtx
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+__all__ = ["MeshAxes", "mesh_axes_of", "build_train_step",
+           "build_serve_steps", "named", "TrainStepBundle"]
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    dp: tuple       # data-parallel axes, e.g. ("pod", "data")
+    model: str      # tensor/expert axis
+
+
+def mesh_axes_of(mesh: Mesh) -> MeshAxes:
+    names = tuple(mesh.axis_names)
+    dp = tuple(n for n in names if n != "model")
+    return MeshAxes(dp=dp, model="model" if "model" in names else names[-1])
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclass
+class TrainStepBundle:
+    step_fn: Any            # jitted (params, opt, batch) -> (params, opt, metrics)
+    param_sharding: Any
+    opt_sharding: Any
+    batch_sharding: Any
+    param_specs: Any
+
+
+def build_train_step(model: Model, mesh: Mesh, opt_cfg: AdamWConfig,
+                     *, microbatch: int = 0, donate: bool = True,
+                     seq_parallel: bool = False, strategy: str = "tp"):
+    """Returns a TrainStepBundle; step_fn is jit-compiled but not yet
+    lowered (the dry-run lowers it with ShapeDtypeStructs).
+
+    strategy:
+      "tp"    -- width dims over the model axis (TP/EP) + FSDP over data
+                 (the default; right for models that need model parallelism)
+      "fsdp"  -- no tensor parallelism: params sharded over ALL mesh axes
+                 (ZeRO-3); batch over the data axes.  Eliminates the
+                 per-layer TP boundary all-reduces -- the right choice for
+                 small models (see EXPERIMENTS.md Perf H2)."""
+    axes = mesh_axes_of(mesh)
+    cfg = model.cfg
+    shapes = model.param_shapes()
+    SH.set_mesh_sizes({a: mesh.shape[a] for a in mesh.axis_names})
+    if strategy == "fsdp":
+        all_axes = axes.dp + (axes.model,)
+        pspecs = SH.param_specs(cfg, shapes, fsdp=all_axes, mdl=None,
+                                mdl_size=1)
+    else:
+        pspecs = SH.param_specs(cfg, shapes, fsdp=axes.dp, mdl=axes.model,
+                                mdl_size=mesh.shape[axes.model])
+    p_shard = named(mesh, pspecs)
+    opt_specs = AdamWState(m=pspecs, v=pspecs, count=P())
+    o_shard = named(mesh, opt_specs)
+    loss_fn = model.loss_fn()
+
+    def loss_and_grad(params, batch):
+        if not microbatch:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        # gradient accumulation: split the local batch into microbatches
+        def micro(carry, mb):
+            tot, acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (tot + l, jax.tree.map(jnp.add, acc, g)), None
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+
+        mbatch = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (tot, acc), _ = jax.lax.scan(micro, (jnp.float32(0), zero), mbatch)
+        n = jnp.float32(microbatch)
+        return tot / n, jax.tree.map(lambda g: g / n, acc)
+
+    act_dp = axes.dp + (axes.model,) if strategy == "fsdp" else axes.dp
+
+    def step(params, opt_state, batch):
+        with actx.use(mesh, act_dp, axes.model,
+                      seq_parallel=seq_parallel):
+            loss, grads = loss_and_grad(params, batch)
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    batch_tree = model.input_specs(ShapeCell("x", "train", 8, 8))
+    bspecs = SH.batch_specs(cfg, batch_tree, dp=act_dp, mdl=axes.model)
+    b_shard = named(mesh, bspecs)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1) if donate else ())
+    return TrainStepBundle(jitted, p_shard, o_shard, b_shard, pspecs)
+
+
+def decode_kv_policy(cfg: ModelCfg, mesh: Mesh) -> str:
+    """'heads' when kv-heads divide the model axis, else 'seq'
+    (sequence-sharded cache + flash-decoding combine)."""
+    msize = mesh.shape[mesh_axes_of(mesh).model]
+    if cfg.family == "ssm":
+        return "state"
+    if cfg.n_kv_heads % msize == 0:
+        return "heads"
+    return "seq"
+
+
+def _effective_dp(mesh: Mesh, axes: MeshAxes, global_batch: int):
+    """Batch-dim axes: the data axes if they divide the batch, else
+    replicated (e.g. long_500k with global_batch=1)."""
+    dp_size = math.prod(mesh.shape[a] for a in axes.dp)
+    return axes.dp if global_batch % dp_size == 0 else None
+
+
+def build_serve_steps(model: Model, mesh: Mesh, cell: ShapeCell):
+    """jit bundle for one serve cell.  Returns (step_fn, in_shardings) where
+    step_fn is the prefill step (cell.kind == 'prefill') or the one-token
+    decode step (cell.kind == 'decode').
+
+    Serving uses RESIDENT (TP-only) weights -- typically cast to bf16 by
+    the caller; FSDP weight gathers per token are a latency disaster
+    (EXPERIMENTS.md Perf H4).  MoE expert tables stay data-sharded."""
+    axes = mesh_axes_of(mesh)
+    cfg = model.cfg
+    shapes = model.param_shapes()
+    SH.set_mesh_sizes({a: mesh.shape[a] for a in mesh.axis_names})
+    pspecs = SH.param_specs(cfg, shapes, fsdp=axes.dp, mdl=axes.model,
+                            mdl_size=mesh.shape[axes.model], serve=True)
+    p_shard = named(mesh, pspecs)
+    dp = _effective_dp(mesh, axes, cell.global_batch)
+
+    in_tree = model.input_specs(cell)
+    ispecs = SH.batch_specs(cfg, in_tree, dp=dp, mdl=axes.model)
+    i_shard = named(mesh, ispecs)
+
+    policy = decode_kv_policy(cfg, mesh)
+    cache_tree = model.cache_specs(cell)
+    cspecs = SH.cache_specs_sharding(cfg, cache_tree, dp=dp, mdl=axes.model,
+                                     seq_sharded=(policy == "seq"))
+    c_shard = named(mesh, cspecs)
+
+    if cell.kind == "prefill":
+        prefill_raw = model.prefill_fn(cell.seq)
+
+        def prefill_ctx(params, inputs):
+            with actx.use(mesh, dp, axes.model):
+                return prefill_raw(params, inputs)
+
+        prefill_jit = jax.jit(prefill_ctx,
+                              in_shardings=(p_shard, i_shard),
+                              out_shardings=(None, c_shard))
+        return prefill_jit, (p_shard, i_shard), c_shard, policy
+
+    seq_ctx = None
+    if policy == "seq":
+        seq_ctx = SeqShardCtx(mesh=mesh, axis=axes.model,
+                              dp_axes=dp if dp else ())
+    decode_raw = model.decode_fn(seq_ctx)
+
+    def decode_ctx(params, inputs, cache):
+        with actx.use(mesh, dp, axes.model):
+            return decode_raw(params, inputs, cache)
+
+    dp_axis = None if dp is None else (dp if len(dp) > 1 else dp[0])
+    logits_spec = NamedSharding(mesh, P(dp_axis, None, axes.model))
+    decode_jit = jax.jit(decode_ctx,
+                         in_shardings=(p_shard, i_shard, c_shard),
+                         out_shardings=(logits_spec, c_shard),
+                         donate_argnums=(2,))
+    return decode_jit, (p_shard, i_shard, c_shard), c_shard, policy

@@ -1,0 +1,92 @@
+"""HLO text analysis: collective-communication byte accounting.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse the
+optimized HLO: every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute op contributes its operand bytes (the data each
+participant moves).  This feeds the roofline's collective term.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "parse_shape_bytes", "count_ops"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[16,128,4096]{2,1,0}   or  (f32[8], u32[4,4])
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes in an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_type(line: str) -> str:
+    """The type annotation of an HLO instruction line (lhs of '= op')."""
+    m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\)|[\w\[\],{}\s/]+?))\s+[\w\-]+\(", line)
+    return m.group(1) if m else ""
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind byte totals from optimized HLO text.
+
+    Bytes counted are the *result* bytes of each collective instruction
+    (what lands on this participant); per-op counts are also returned.
+    ``fusion``/computation bodies are included since collectives never nest
+    inside fusions.
+    """
+    out = defaultdict(lambda: {"bytes": 0, "count": 0})
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(
+            r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        opname = m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-") \
+               or opname == c + "-start" or opname == c + "-done":
+                kind = c
+                break
+        if kind is None:
+            continue
+        if opname.endswith("-done"):
+            continue  # counted at -start
+        nbytes = parse_shape_bytes(m.group(1))
+        out[kind]["bytes"] += nbytes
+        out[kind]["count"] += 1
+    total = sum(v["bytes"] for v in out.values())
+    return {"total_bytes": total,
+            "by_kind": {k: dict(v) for k, v in out.items()}}
+
+
+def count_ops(hlo_text: str, opnames=("dot", "convolution")) -> dict:
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*.+?\s+([\w\-]+)\(",
+                     line)
+        if m:
+            counts[m.group(1)] += 1
+    return {k: counts.get(k, 0) for k in opnames} | {
+        k: v for k, v in counts.items() if k.startswith(_COLLECTIVES)}

@@ -1,0 +1,344 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, which massively
+undercounts scanned-layer programs (our whole compile-time-economy design).
+This module parses the optimized HLO text and accumulates
+
+  * dot FLOPs                 (2 * prod(result) * prod(contracting dims))
+  * bytes accessed            (operands + result per op, XLA-style)
+  * collective bytes          (ring-model per participant:
+                               all-gather/all-to-all/permute: result bytes;
+                               reduce-scatter: operand bytes;
+                               all-reduce: 2x operand bytes)
+
+recursively through ``while`` ops, scaling by ``known_trip_count`` from the
+backend_config (jax scans always carry it), and through fusion calls.
+Values are per-device per-execution (the SPMD module is the per-device
+program).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_META_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             "rng-bit-generator"}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_dims(type_str: str):
+    """First array shape in a type string -> (dtype, [dims]) or None."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_ELEMENTWISE = {"add", "subtract", "multiply", "divide", "maximum",
+                "minimum", "negate", "exponential", "log", "rsqrt", "sqrt",
+                "power", "tanh", "select", "compare", "and", "or", "xor",
+                "shift-left", "shift-right-logical", "clamp"}
+
+
+@dataclass
+class HloCost:
+    dot_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+    dot_count: float = 0.0
+    while_count: int = 0
+    elementwise_flops: float = 0.0   # result-element count of VPU-class ops
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(self.dot_flops * k, self.bytes_accessed * k,
+                       self.collective_bytes * k,
+                       {kk: v * k for kk, v in self.coll_by_kind.items()},
+                       self.dot_count * k, self.while_count,
+                       self.elementwise_flops * k)
+
+    def add(self, o: "HloCost") -> None:
+        self.dot_flops += o.dot_flops
+        self.bytes_accessed += o.bytes_accessed
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        self.dot_count += o.dot_count
+        self.while_count += o.while_count
+        self.elementwise_flops += o.elementwise_flops
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+
+
+def _split_computations(hlo: str) -> dict:
+    """name -> list of instruction lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line:
+            continue
+        if not line[0].isspace():
+            m = re.match(r"(?:ENTRY\s+)?(%?[\w.\-]+)\s*(?:\([^)]*\))?.*\{",
+                         line)
+            if m and ("->" in line or line.startswith("ENTRY")
+                      or line.rstrip().endswith("{")):
+                cur = m.group(1).lstrip("%")
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = comps[cur]
+            continue
+        if cur is not None and line.strip() != "}":
+            comps[cur].append(line)
+    return comps
+
+
+def _operands(rest: str) -> list[str]:
+    """Operand %names from the text after the opening paren."""
+    depth = 1
+    out = []
+    cur = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            cur.append(ch)
+    args = "".join(cur)
+    for m in re.finditer(r"%[\w.\-]+", args):
+        out.append(m.group(0))
+    return out
+
+
+def _attr(line: str, name: str):
+    m = re.search(name + r"=(%?[\w.\-]+)", line)
+    return m.group(1).lstrip("%") if m else None
+
+
+def _trip_count(line: str) -> float:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+    return float(m.group(1)) if m else 1.0
+
+
+def _dot_flops(line: str, result_type: str, symtab: dict,
+               operands: list[str]) -> float:
+    res = _shape_dims(result_type)
+    if res is None or not operands:
+        return 0.0
+    lhs_type = symtab.get(operands[0])
+    if lhs_type is None:
+        return 0.0
+    lhs = _shape_dims(lhs_type)
+    if lhs is None:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            contract *= lhs[1][int(d)]
+    _, rdims = res
+    n = 1
+    for d in rdims:
+        n *= d
+    return 2.0 * n * contract
+
+
+def _analyze_comp(name: str, comps: dict, cache: dict) -> HloCost:
+    if name in cache:
+        return cache[name]
+    cost = HloCost()
+    cache[name] = cost  # break cycles defensively
+    for line in comps.get(name, ()):
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _, rtype, op, rest = m.groups()
+        if op in _META_OPS:
+            continue
+        operands = _operands(rest)
+        symtab = _SYMTABS.get(name, {})
+        rbytes = _type_bytes(rtype)
+        obytes = sum(_type_bytes(symtab.get(o, "")) for o in operands)
+
+        if op == "while":
+            tc = _trip_count(line)
+            body = _attr(line, "body")
+            cond = _attr(line, "condition")
+            if body:
+                cost.add(_analyze_comp(body, comps, cache).scaled(tc))
+            if cond:
+                cost.add(_analyze_comp(cond, comps, cache).scaled(tc))
+            cost.while_count += 1
+            continue
+        if op == "fusion":
+            callee = _attr(line, "calls")
+            if callee:
+                sub = _analyze_comp(callee, comps, cache)
+                # flops recurse; bytes counted at the fusion boundary
+                cost.dot_flops += sub.dot_flops
+                cost.collective_bytes += sub.collective_bytes
+                cost.dot_count += sub.dot_count
+            cost.bytes_accessed += rbytes + obytes
+            cost.elementwise_flops += _analyze_comp(
+                callee, comps, cache).elementwise_flops if callee else 0
+            continue
+        if op in ("call", "conditional"):
+            callee = _attr(line, "to_apply") or _attr(line, "calls")
+            if callee:
+                cost.add(_analyze_comp(callee, comps, cache))
+            continue
+
+        kind = next((c for c in _COLL_KINDS
+                     if op == c or op.startswith(c + "-")), None)
+        if kind and not op.endswith("-done"):
+            if kind == "all-reduce":
+                nb = 2 * obytes
+            elif kind == "reduce-scatter":
+                nb = obytes
+            else:
+                nb = rbytes
+            cost.collective_bytes += nb
+            cost.coll_by_kind[kind] = cost.coll_by_kind.get(kind, 0) + nb
+            cost.bytes_accessed += rbytes + obytes
+            continue
+
+        if op in ("dot", "convolution"):
+            cost.dot_flops += _dot_flops(line, rtype, symtab, operands)
+            cost.dot_count += 1
+        if op in _ELEMENTWISE or op.startswith("reduce"):
+            sd = _shape_dims(rtype)
+            if sd:
+                n_el = 1
+                for d in sd[1]:
+                    n_el *= d
+                if op.startswith("reduce"):
+                    # reduce flops ~= input elements
+                    sin = _shape_dims(symtab.get(operands[0], "")) \
+                        if operands else None
+                    if sin:
+                        n_el = 1
+                        for d in sin[1]:
+                            n_el *= d
+                cost.elementwise_flops += n_el
+        cost.bytes_accessed += rbytes + obytes
+    cache[name] = cost
+    return cost
+
+
+_SYMTABS: dict = {}
+
+
+def analyze_hlo(hlo_text: str) -> HloCost:
+    global _SYMTABS
+    comps = _split_computations(hlo_text)
+    _SYMTABS = {}
+    for cname, lines in comps.items():
+        tab = {}
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                tab[m.group(1)] = m.group(2)
+        _SYMTABS[cname] = tab
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps))
+    return _analyze_comp(entry, comps, {})
+
+
+def top_contributors(hlo_text: str, top: int = 15):
+    """(kind, shape-signature, flops-or-bytes, trip-scaled count) ranked:
+    per-dot flops and per-collective bytes, trip-count aware.  The debugging
+    lens for 'where do the FLOPs/collective bytes actually go'."""
+    comps = _split_computations(hlo_text)
+    symtabs = {}
+    for cname, lines in comps.items():
+        tab = {}
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                tab[m.group(1)] = m.group(2)
+        symtabs[cname] = tab
+    # compute trip multiplier per computation by walking from entry
+    mult = {}
+
+    def walk(name, k):
+        mult[name] = mult.get(name, 0.0) + k
+        for line in comps.get(name, ()):
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            op = m.group(3)
+            if op == "while":
+                tc = _trip_count(line)
+                for attr in ("body", "condition"):
+                    c = _attr(line, attr)
+                    if c:
+                        walk(c, k * tc)
+            elif op in ("fusion", "call", "conditional"):
+                c = _attr(line, "calls") or _attr(line, "to_apply")
+                if c:
+                    walk(c, k)
+
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps))
+    real_entry = next((k for k in comps if comps[k] is comps[entry]
+                       and k != "__entry__"), entry)
+    walk(real_entry, 1.0)
+
+    items = []
+    for cname, lines in comps.items():
+        k = mult.get(cname, 0.0)
+        if k == 0.0:
+            continue
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            _, rtype, op, rest = m.groups()
+            operands = _operands(rest)
+            if op == "dot":
+                fl = _dot_flops(line, rtype, symtabs[cname], operands)
+                sig = rtype.strip() + " <- " + ",".join(
+                    symtabs[cname].get(o, "?") for o in operands[:2])
+                items.append(("dot", sig, fl * k, k))
+            else:
+                kind = next((c for c in _COLL_KINDS
+                             if op == c or op.startswith(c + "-")), None)
+                if kind and not op.endswith("-done"):
+                    ob = sum(_type_bytes(symtabs[cname].get(o, ""))
+                             for o in operands)
+                    rb = _type_bytes(rtype)
+                    nb = 2 * ob if kind == "all-reduce" else (
+                        ob if kind == "reduce-scatter" else rb)
+                    items.append((kind, rtype.strip()[:90], nb * k, k))
+    items.sort(key=lambda t: -t[2])
+    return items[:top]

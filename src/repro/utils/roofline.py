@@ -1,0 +1,104 @@
+"""Three-term roofline model for TPU v5e (target hardware).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+FLOPs / bytes come from ``compiled.cost_analysis()`` (whole-program, i.e.
+all devices together -- divided by the chip count here); collective bytes
+from utils/hlo.py (per-participant already -- NOT divided again).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+__all__ = ["HW_V5E", "Roofline", "roofline_from_analysis"]
+
+
+@dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops: float      # FLOP/s per chip (bf16)
+    hbm_bw: float          # bytes/s per chip
+    ici_bw: float          # bytes/s per link
+
+
+HW_V5E = HwSpec(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                ici_bw=50e9)
+
+
+@dataclass
+class Roofline:
+    flops: float               # whole-program HLO flops (all chips)
+    bytes_accessed: float      # whole-program HLO bytes (unfused upper bd)
+    collective_bytes: float    # per-participant collective bytes
+    chips: int
+    model_flops: float = 0.0   # 6 N D (dense) / 6 N_active D (MoE)
+    bytes_min: float = 0.0     # per-device argument+output traffic
+                               # (fusion-optimal lower bound)
+    hw: str = "tpu-v5e"
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * HW_V5E.peak_flops)
+
+    @property
+    def memory_s(self) -> float:
+        """Fusion-optimal bound: every input/output buffer touched once.
+        (the unfused-HLO upper bound is memory_s_hlo)"""
+        if self.bytes_min:
+            return self.bytes_min / HW_V5E.hbm_bw
+        return self.memory_s_hlo
+
+    @property
+    def memory_s_hlo(self) -> float:
+        return self.bytes_accessed / (self.chips * HW_V5E.hbm_bw)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / HW_V5E.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound: max of the three terms (perfect overlap)
+        is the roofline; we report the max term as the bound."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound."""
+        t = self.step_time_s
+        if not t:
+            return 0.0
+        return self.model_flops / (t * self.chips * HW_V5E.peak_flops)
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 memory_s_hlo=self.memory_s_hlo,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 step_time_s=self.step_time_s,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 mfu_bound=self.mfu_bound)
+        return d
+
+
+def roofline_from_analysis(cost: dict, coll_bytes: float, chips: int,
+                           model_flops: float,
+                           bytes_min: float = 0.0) -> Roofline:
+    return Roofline(
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=float(coll_bytes),
+        chips=chips, model_flops=model_flops, bytes_min=bytes_min)

@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Make src/ importable without installation.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# f64 is required for the permanent engines' precision semantics on CPU.
+# NOTE: device count is NOT forced here -- smoke tests must see 1 device;
+# multi-device behaviour is tested via subprocesses (test_distributed.py)
+# and the dry-run driver sets its own XLA_FLAGS before importing jax.
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)

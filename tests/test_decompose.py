@@ -1,0 +1,126 @@
+"""DM elimination + Forbert-Marx compression: permanent-preserving props."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decompose as D
+from repro.core import oracle
+
+RNG = np.random.default_rng(7)
+
+
+def _rand_sparse(n, density, rng=RNG):
+    return (rng.uniform(0.5, 1.5, (n, n))
+            * (rng.uniform(0, 1, (n, n)) < density))
+
+
+# ---------------------------------------------------------------- matching
+def test_matching_complete_on_dense():
+    adj = [list(range(6)) for _ in range(6)]
+    ml, mr = D.hopcroft_karp(adj, 6, 6)
+    assert -1 not in ml and sorted(ml) == list(range(6))
+
+
+def test_matching_detects_deficiency():
+    # two rows share a single column -> no perfect matching
+    adj = [[0], [0], [1]]
+    ml, _ = D.hopcroft_karp(adj, 3, 2)
+    assert sum(m != -1 for m in ml) == 2
+
+
+# ---------------------------------------------------------------- SCC
+def test_scc_cycle_and_chain():
+    # 0->1->2->0 cycle; 3->4 chain
+    adj = [[1], [2], [0], [4], []]
+    comp = D.strongly_connected_components(adj)
+    assert comp[0] == comp[1] == comp[2]
+    assert comp[3] != comp[4]
+    assert len({comp[0], comp[3], comp[4]}) == 3
+
+
+# ---------------------------------------------------------------- DM
+@pytest.mark.parametrize("n,density", [(6, 0.4), (8, 0.35), (10, 0.3),
+                                       (9, 0.5)])
+def test_dm_preserves_permanent(n, density):
+    A = _rand_sparse(n, density)
+    ref = oracle.perm_ryser_exact(A)
+    Ap, removed = D.dm_eliminate(A)
+    got = oracle.perm_ryser_exact(Ap)
+    np.testing.assert_allclose(got, ref, rtol=1e-12, atol=1e-300)
+
+
+def test_dm_triangular_keeps_only_diagonal():
+    L = np.tril(RNG.uniform(1, 2, (10, 10)))
+    Lp, removed = D.dm_eliminate(L)
+    assert np.allclose(Lp, np.diag(np.diag(L)))
+    assert removed == 45
+
+
+def test_dm_structurally_singular_is_zero():
+    A = np.zeros((5, 5))
+    A[:, :3] = 1.0
+    Ap, _ = D.dm_eliminate(A)
+    assert not Ap.any()
+
+
+def test_dm_never_removes_from_fully_indecomposable():
+    # a circulant with 3 nonzeros per row/col is fully indecomposable
+    n = 8
+    A = np.zeros((n, n))
+    for i in range(n):
+        for d in [0, 1, 2]:
+            A[i, (i + d) % n] = 1.0 + i + d
+    Ap, removed = D.dm_eliminate(A)
+    assert removed == 0
+
+
+# ---------------------------------------------------------------- FM
+@pytest.mark.parametrize("n,density", [(7, 0.35), (9, 0.4), (11, 0.3),
+                                       (8, 0.6)])
+def test_fm_preserves_permanent(n, density):
+    A = _rand_sparse(n, density)
+    ref = oracle.perm_ryser_exact(A)
+    leaves = D.fm_decompose(A)
+    tot = sum(l.coef * oracle.perm_ryser_exact(l.matrix) for l in leaves)
+    np.testing.assert_allclose(tot, ref, rtol=1e-9, atol=1e-12)
+
+
+def test_fm_leaves_have_min_degree_above_threshold():
+    A = _rand_sparse(12, 0.4)
+    for leaf in D.fm_decompose(A, max_min_nnz=4):
+        M = leaf.matrix
+        if M.shape[0] <= 2:
+            continue
+        mask = M != 0
+        assert min(mask.sum(axis=0).min(), mask.sum(axis=1).min()) > 4
+
+
+def test_fm_diagonal_collapses_fully():
+    d = RNG.uniform(1, 2, 6)
+    leaves = D.fm_decompose(np.diag(d))
+    tot = sum(l.coef * oracle.perm_ryser_exact(l.matrix) for l in leaves)
+    np.testing.assert_allclose(tot, np.prod(d), rtol=1e-12)
+    # should fold to pure coefficients (1x1 ones)
+    assert all(l.matrix.shape == (1, 1) for l in leaves)
+
+
+def test_fm_complex_entries():
+    A = _rand_sparse(8, 0.4).astype(np.complex128)
+    A += 1j * _rand_sparse(8, 0.4)
+    ref = oracle.perm_ryser_exact(A)
+    leaves = D.fm_decompose(A)
+    tot = sum(l.coef * oracle.perm_ryser_exact(l.matrix) for l in leaves)
+    np.testing.assert_allclose(tot, ref, rtol=1e-9)
+
+
+@given(st.integers(5, 9), st.floats(0.2, 0.7))
+@settings(max_examples=20, deadline=None)
+def test_property_dm_then_fm_preserves_permanent(n, density):
+    rng = np.random.default_rng(n * 1000 + int(density * 100))
+    A = _rand_sparse(n, density, rng)
+    ref = oracle.perm_ryser_exact(A)
+    Ap, _ = D.dm_eliminate(A)
+    leaves = D.fm_decompose(Ap)
+    tot = sum(l.coef * oracle.perm_ryser_exact(l.matrix) for l in leaves)
+    np.testing.assert_allclose(tot, ref, rtol=1e-9, atol=1e-12)

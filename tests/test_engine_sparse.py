@@ -1,0 +1,108 @@
+"""SparseMatrix storage, SpaRyser engine, and the Alg.-4 dispatcher."""
+
+import numpy as np
+import pytest
+
+from repro.core import engine, oracle
+from repro.core.sparyser import SparseMatrix, perm_sparyser_chunked
+
+RNG = np.random.default_rng(23)
+
+
+def _rand_sparse(n, density, rng=RNG):
+    A = rng.uniform(0.5, 1.5, (n, n)) * (rng.uniform(0, 1, (n, n)) < density)
+    return A
+
+
+# ------------------------------------------------------------- CRS/CCS
+def test_crs_ccs_roundtrip_paper_fig1_shape():
+    A = _rand_sparse(6, 0.4)
+    sp = SparseMatrix.from_dense(A)
+    assert sp.rptrs[0] == 0 and sp.rptrs[-1] == sp.nnz
+    assert sp.cptrs[0] == 0 and sp.cptrs[-1] == sp.nnz
+    np.testing.assert_allclose(sp.to_dense(), A)
+
+
+def test_padded_columns_cover_all_nonzeros():
+    A = _rand_sparse(8, 0.3)
+    sp = SparseMatrix.from_dense(A)
+    rows, vals = sp.padded_columns()
+    rebuilt = np.zeros((9, 8))
+    for j in range(8):
+        for r, v in zip(rows[j], vals[j]):
+            rebuilt[r, j] += v
+    np.testing.assert_allclose(rebuilt[:8], A)
+    assert not rebuilt[8].any() or np.allclose(rebuilt[8], 0)
+
+
+# ------------------------------------------------------------- SpaRyser
+@pytest.mark.parametrize("n,density", [(6, 0.4), (9, 0.3), (11, 0.25),
+                                       (12, 0.5)])
+def test_sparyser_matches_exact(n, density):
+    A = _rand_sparse(n, density)
+    ref = oracle.perm_ryser_exact(A)
+    got = perm_sparyser_chunked(SparseMatrix.from_dense(A), num_chunks=8)
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.parametrize("precision", ["dd", "kahan", "dq_acc"])
+def test_sparyser_precisions(precision):
+    A = _rand_sparse(10, 0.35)
+    ref = oracle.perm_ryser_exact(A)
+    got = perm_sparyser_chunked(SparseMatrix.from_dense(A), num_chunks=8,
+                                precision=precision)
+    np.testing.assert_allclose(got, ref, rtol=1e-8, atol=1e-12)
+
+
+# ------------------------------------------------------------- engine
+@pytest.mark.parametrize("n,density", [(8, 1.0), (10, 0.35), (11, 0.2),
+                                       (7, 0.6)])
+def test_engine_dispatch_correct(n, density):
+    A = _rand_sparse(n, density)
+    ref = oracle.perm_ryser_exact(A)
+    got, rep = engine.permanent(A, return_report=True)
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-12)
+    assert rep.n == n
+
+
+def test_engine_density_dispatch_rule():
+    dense = _rand_sparse(8, 0.95)
+    _, rep = engine.permanent(dense, preprocess=False, return_report=True)
+    assert all(d.startswith("dense") for d in rep.dispatch)
+    sparse = _rand_sparse(14, 0.18)
+    _, rep = engine.permanent(sparse, preprocess=False, return_report=True)
+    # every sizeable leaf should route to the sparse kernel (<30% density)
+    assert any(d.startswith("sparse") for d in rep.dispatch) or \
+        not rep.dispatch
+
+
+def test_engine_structurally_singular():
+    A = np.zeros((6, 6))
+    A[:, :4] = 1.0
+    assert engine.permanent(A) == 0.0
+
+
+def test_engine_complex():
+    A = _rand_sparse(7, 0.8) + 1j * _rand_sparse(7, 0.8)
+    ref = oracle.perm_ryser_exact(A)
+    got = engine.permanent(A)
+    np.testing.assert_allclose(got, ref, rtol=1e-9)
+
+
+def test_engine_binary_counts_matchings():
+    # permanent of biadjacency 0/1 matrix == #perfect matchings
+    A = np.array([[1, 1, 0], [0, 1, 1], [1, 0, 1]], dtype=float)
+    assert round(engine.permanent(A)) == 2
+
+
+def test_engine_pallas_backend():
+    A = _rand_sparse(9, 0.9)
+    ref = oracle.perm_ryser_exact(A)
+    got = engine.permanent(A, backend="pallas", preprocess=False)
+    np.testing.assert_allclose(got, ref, rtol=1e-8)
+
+
+def test_engine_identity_and_permutation():
+    assert round(engine.permanent(np.eye(8))) == 1
+    P = np.eye(8)[RNG.permutation(8)]
+    assert round(engine.permanent(P)) == 1

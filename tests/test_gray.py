@@ -1,0 +1,70 @@
+"""Gray-code machinery: unit + property tests (hypothesis)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gray as G
+
+
+def test_gray_table_matches_paper_table1():
+    # paper Table 1: 3-bit Gray codes and changed bits
+    codes = [G.gray(g) for g in range(8)]
+    assert codes == [0b000, 0b001, 0b011, 0b010, 0b110, 0b111, 0b101, 0b100]
+    changed = [G.ctz(g) for g in range(1, 8)]
+    assert changed == [0, 1, 0, 2, 0, 1, 0]
+
+
+def test_cbl_palindrome_and_recursion():
+    for nbits in range(1, 10):
+        cbl = [G.ctz(g) for g in range(1, 1 << nbits)]
+        assert cbl == cbl[::-1], "CBL must be a palindrome"
+        if nbits >= 2:
+            prev = [G.ctz(g) for g in range(1, 1 << (nbits - 1))]
+            assert cbl == prev + [nbits - 1] + prev[::-1]
+
+
+def test_changed_bit_schedule_uniform_across_aligned_chunks():
+    # the CEG property: for chunk size 2^k, local steps w = 1..2^k-1 have
+    # chunk-independent changed bits
+    for k in [1, 2, 3, 5]:
+        C = 1 << k
+        sched = G.changed_bit_schedule(k)
+        for base in [0, C, 4 * C, 31 * C]:
+            actual = [G.ctz(base + w) for w in range(1, C)]
+            assert list(sched) == actual
+
+
+@given(st.integers(min_value=1, max_value=2**62))
+@settings(max_examples=200, deadline=None)
+def test_step_sign_consistent_with_gray_flip(g):
+    j = G.ctz(g)
+    before = G.gray_bit(g - 1, j)
+    after = G.gray_bit(g, j)
+    assert before != after, "exactly bit j flips"
+    assert G.step_sign(g) == (1 if after == 1 else -1)
+
+
+@given(st.integers(min_value=0, max_value=2**62), st.integers(0, 62))
+@settings(max_examples=200, deadline=None)
+def test_gray_bits_matrix_matches_bigint(start, nbits_seed):
+    nbits = max(1, nbits_seed)
+    M = G.gray_bits_matrix(np.array([start], dtype=np.uint64), nbits)
+    for j in range(nbits):
+        assert M[j, 0] == G.gray_bit(start, j)
+
+
+def test_step_sign_jnp_matches_python():
+    gs = np.arange(1, 4097, dtype=np.uint64)
+    js = np.array([G.ctz(int(g)) for g in gs], dtype=np.uint64)
+    got = np.asarray(G.step_sign_jnp(jnp.asarray(gs), jnp.asarray(js)))
+    want = np.array([G.step_sign(int(g)) for g in gs])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_accum_sign_parity():
+    # popcount(gray(g)) parity == parity of g
+    for g in range(1, 1 << 12):
+        assert G.accum_sign(g) == (1 if bin(G.gray(g)).count("1") % 2 == 0
+                                   else -1)

@@ -1,0 +1,96 @@
+"""HLO cost analyzer: trip-count scaling, dot flops, collective bytes."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.utils.hlo import collective_bytes, parse_shape_bytes
+from repro.utils.hlo_cost import analyze_hlo
+from repro.utils.roofline import HW_V5E, Roofline
+
+
+def _hlo_of(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("f32[4,8]") == 128
+    assert parse_shape_bytes("bf16[2,3]{1,0}") == 12
+    assert parse_shape_bytes("(f32[2], u32[4])") == 24
+    assert parse_shape_bytes("pred[]") == 1
+
+
+def test_dot_flops_exact():
+    a = jnp.ones((32, 64), jnp.float32)
+    b = jnp.ones((64, 16), jnp.float32)
+    cost = analyze_hlo(_hlo_of(lambda a, b: a @ b, a, b))
+    assert cost.dot_flops == 2 * 32 * 64 * 16
+
+
+def test_scan_trip_count_multiplies_flops():
+    a = jnp.ones((8, 8), jnp.float32)
+
+    def f(a):
+        def body(c, _):
+            return c @ a, None
+        out, _ = jax.lax.scan(body, a, None, length=20)
+        return out
+
+    cost = analyze_hlo(_hlo_of(f, a))
+    # 20 iterations x (2 * 8^3); XLA may pre/peel one, allow slack
+    want = 20 * 2 * 8 ** 3
+    assert want * 0.9 <= cost.dot_flops <= want * 1.2, cost.dot_flops
+    assert cost.while_count >= 1
+
+
+def test_nested_scan_trip_counts_compose():
+    a = jnp.ones((4, 4), jnp.float32)
+
+    def f(a):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ a, None
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+        out, _ = jax.lax.scan(outer, a, None, length=3)
+        return out
+
+    cost = analyze_hlo(_hlo_of(f, a))
+    want = 15 * 2 * 4 ** 3
+    assert want * 0.9 <= cost.dot_flops <= want * 1.3
+
+
+def test_elementwise_flops_counted():
+    a = jnp.ones((128,), jnp.float32)
+    cost = analyze_hlo(_hlo_of(lambda a: a * 2 + 1, a))
+    assert cost.elementwise_flops >= 128  # at least the fused add/mul
+
+
+def test_collective_bytes_parser_on_synthetic_hlo():
+    hlo = """
+HloModule m
+
+ENTRY %main (p: f32[16,8]) -> f32[16,8] {
+  %p = f32[16,8]{1,0} parameter(0)
+  %ag = f32[64,8]{1,0} all-gather(%p), dimensions={0}
+  %ar = f32[16,8]{1,0} all-reduce(%p), to_apply=%add
+  ROOT %out = f32[16,8]{1,0} copy(%ar)
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["by_kind"]["all-gather"]["bytes"] == 64 * 8 * 4
+    assert out["by_kind"]["all-reduce"]["bytes"] == 16 * 8 * 4
+    assert out["by_kind"]["all-gather"]["count"] == 1
+
+
+def test_roofline_terms_and_dominant():
+    rl = Roofline(flops=197e12 * 256, bytes_accessed=0.0,
+                  collective_bytes=100e9, chips=256,
+                  model_flops=100e12 * 256, bytes_min=819e9)
+    assert abs(rl.compute_s - 1.0) < 1e-9
+    assert abs(rl.memory_s - 1.0) < 1e-9
+    assert abs(rl.collective_s - 2.0) < 1e-9
+    assert rl.dominant == "collective"
+    assert 0 < rl.mfu_bound < 1
+    assert abs(rl.useful_flops_ratio - 100 / 197) < 1e-9

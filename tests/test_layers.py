@@ -1,0 +1,203 @@
+"""Layer library: flash attention vs naive softmax, MoE dispatch, RoPE."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    kv_valid=None):
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k) / math.sqrt(hd)
+    qp = q_offset + jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp <= qp
+        if window:
+            mask &= kp > qp - window
+    if kv_valid is not None:
+        mask &= kp < kv_valid
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v)
+
+
+@pytest.mark.parametrize("Sq,Sk,H,KVH,kc", [(16, 16, 4, 4, 8),
+                                            (16, 16, 4, 2, 4),
+                                            (32, 32, 8, 1, 16),
+                                            (8, 24, 4, 4, 16)])
+def test_flash_matches_naive(Sq, Sk, H, KVH, kc):
+    rng = np.random.default_rng(0)
+    B, hd = 2, 16
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sk, KVH, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sk, KVH, hd)), jnp.float32)
+    causal = Sq == Sk
+    got = L.flash_attention(q, k, v, causal=causal, kv_chunk=kc)
+    want = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_sliding_window():
+    rng = np.random.default_rng(1)
+    B, S, H, hd = 1, 32, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    got = L.flash_attention(q, k, v, causal=True, window=8, kv_chunk=8)
+    want = naive_attention(q, k, v, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_decode_with_partial_cache():
+    rng = np.random.default_rng(2)
+    B, S, H, hd = 2, 24, 2, 8
+    pos = 13
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    got = L.flash_attention(q, k, v, causal=True, q_offset=pos,
+                            kv_valid=pos + 1, kv_chunk=8)
+    want = naive_attention(q, k, v, causal=True, q_offset=pos,
+                           kv_valid=pos + 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_partial_softmax_merge_equals_full():
+    """flash-decoding: sharded partial stats merged == unsharded result."""
+    rng = np.random.default_rng(3)
+    B, S, H, hd = 1, 32, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    full = L.flash_attention(q, k, v, causal=True, q_offset=S - 1,
+                             kv_valid=S, kv_chunk=8)
+    # two half-shards with explicit merge math
+    m1, l1, a1 = L.flash_attention_partial(
+        q, k[:, :16], v[:, :16], q_offset=S - 1, kv_offset=0, kv_valid=S)
+    m2, l2, a2 = L.flash_attention_partial(
+        q, k[:, 16:], v[:, 16:], q_offset=S - 1, kv_offset=16, kv_valid=S)
+    mg = jnp.maximum(m1, m2)
+    lg = l1 * jnp.exp(m1 - mg) + l2 * jnp.exp(m2 - mg)
+    ag = a1 * jnp.exp(m1 - mg)[..., None] + a2 * jnp.exp(m2 - mg)[..., None]
+    out = (ag / lg[..., None]).transpose(0, 3, 1, 2, 4).reshape(B, 1, H, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------- MoE
+def naive_moe(x, router_w, wi, wg, wo, top_k):
+    N, D = x.shape
+    E = router_w.shape[1]
+    probs = jax.nn.softmax(x @ router_w, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, top_k)
+    top_w = top_w / top_w.sum(-1, keepdims=True)
+    out = jnp.zeros_like(x)
+    for i in range(N):
+        acc = jnp.zeros((D,))
+        for j in range(top_k):
+            e = int(top_e[i, j])
+            h = x[i] @ wi[e]
+            g = jax.nn.silu(x[i] @ wg[e])
+            acc += top_w[i, j] * ((h * g) @ wo[e])
+        out = out.at[i].set(acc)
+    return out
+
+
+def test_moe_matches_naive_when_capacity_ample():
+    rng = np.random.default_rng(4)
+    B, S, D, F, E, k = 2, 8, 16, 32, 4, 2
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    rw = jnp.asarray(rng.normal(size=(D, E)), jnp.float32)
+    wi = jnp.asarray(rng.normal(size=(E, D, F)) * 0.1, jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(E, D, F)) * 0.1, jnp.float32)
+    wo = jnp.asarray(rng.normal(size=(E, F, D)) * 0.1, jnp.float32)
+    got = L.moe_ffn(x, rw, wi, wg, wo, top_k=k, capacity_factor=8.0)
+    want = naive_moe(x.reshape(-1, D), rw, wi, wg, wo, k).reshape(B, S, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_moe_capacity_drops_tokens_not_correctness():
+    rng = np.random.default_rng(5)
+    B, S, D, F, E = 1, 16, 8, 16, 2
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    rw = jnp.zeros((D, E), jnp.float32)  # uniform router -> balanced-ish
+    wi = jnp.asarray(rng.normal(size=(E, D, F)) * 0.1, jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(E, D, F)) * 0.1, jnp.float32)
+    wo = jnp.asarray(rng.normal(size=(E, F, D)) * 0.1, jnp.float32)
+    out = L.moe_ffn(x, rw, wi, wg, wo, top_k=1, capacity_factor=0.25)
+    assert np.isfinite(np.asarray(out)).all()
+    # with tiny capacity some outputs must be exactly zero (dropped)
+    assert (np.abs(np.asarray(out)).sum(-1) == 0).any()
+
+
+def test_moe_aux_losses():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+    rw = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    wi = jnp.asarray(rng.normal(size=(4, 16, 32)) * 0.1, jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(4, 16, 32)) * 0.1, jnp.float32)
+    wo = jnp.asarray(rng.normal(size=(4, 32, 16)) * 0.1, jnp.float32)
+    out, aux = L.moe_ffn(x, rw, wi, wg, wo, top_k=2, capacity_factor=2.0,
+                         return_aux=True)
+    assert float(aux["load_balance"]) >= 1.0 - 1e-6  # >= 1 by Cauchy-Schwarz
+    assert float(aux["router_z"]) > 0
+
+
+# ---------------------------------------------------------------- RoPE
+def test_rope_preserves_norm_and_relativity():
+    rng = np.random.default_rng(7)
+    B, S, H, hd = 1, 16, 2, 8
+    x = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = L.rope_cos_sin(pos, hd)
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+
+    def dot_at(p, d):
+        cq, sq = L.rope_cos_sin(jnp.full((1, 1), p), hd)
+        ck, sk = L.rope_cos_sin(jnp.full((1, 1), p + d), hd)
+        return float(jnp.sum(L.apply_rope(q, cq, sq)
+                             * L.apply_rope(k, ck, sk)))
+
+    assert abs(dot_at(0, 3) - dot_at(7, 3)) < 1e-4
+
+
+def test_mrope_sections():
+    B, S, hd = 1, 8, 16
+    pos3 = jnp.stack([jnp.broadcast_to(jnp.arange(S)[None], (B, S))] * 3)
+    cos, sin = L.mrope_cos_sin(pos3, hd, (2, 3, 3))
+    assert cos.shape == (B, S, hd // 2)
+    # identical position streams == plain rope
+    c2, s2 = L.rope_cos_sin(pos3[0], hd, theta=1e6)
+    np.testing.assert_allclose(np.asarray(cos), np.asarray(c2), rtol=1e-6)
+
+
+def test_grad_cast_dtype():
+    x = jnp.ones((4,), jnp.bfloat16)
+
+    def f(x):
+        return jnp.sum(L.grad_cast(x).astype(jnp.float32) ** 2)
+
+    g = jax.grad(f)(x)
+    assert g.dtype == jnp.bfloat16

@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward/train step + prefill/decode on CPU; shapes + finiteness asserted.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStructs)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, FULL_ATTENTION_ARCHS, get_config
+from repro.models.model import Model, ShapeCell, build
+
+RNG = np.random.default_rng(0)
+SMOKE_SEQ = 32
+SMOKE_BATCH = 2
+
+
+def _smoke_batch(model: Model, kind: str):
+    c = model.cfg
+    B, S, D = SMOKE_BATCH, SMOKE_SEQ, c.d_model
+    t = lambda shape: jnp.asarray(RNG.integers(0, c.vocab, shape), jnp.int32)
+    e = lambda shape: jnp.asarray(RNG.normal(size=shape) * 0.02, c.dtype)
+    if kind == "train":
+        if c.family == "vlm":
+            pos = np.broadcast_to(np.arange(S)[None, None], (3, B, S)).copy()
+            return {"embeds": e((B, S, D)),
+                    "positions": jnp.asarray(pos, jnp.int32),
+                    "labels": t((B, S))}
+        if c.family == "audio-encdec":
+            return {"enc_embeds": e((B, S, D)), "dec_tokens": t((B, S)),
+                    "labels": t((B, S))}
+        return {"tokens": t((B, S)), "labels": t((B, S))}
+    if kind == "prefill":
+        if c.family == "vlm":
+            pos = np.broadcast_to(np.arange(S)[None, None], (3, B, S)).copy()
+            return {"embeds": e((B, S, D)),
+                    "positions": jnp.asarray(pos, jnp.int32)}
+        if c.family == "audio-encdec":
+            return {"enc_embeds": e((B, S, D))}
+        return {"tokens": t((B, S))}
+    raise ValueError(kind)
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {a: build(get_config(a).reduced()) for a in ARCH_IDS}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_config_matches_assignment(arch):
+    """Exact published numbers from the assignment table."""
+    expect = {
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "mamba2-370m": (48, 1024, None, None, 0, 50280),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+    }[arch]
+    c = get_config(arch)
+    assert c.n_layers == expect[0] and c.d_model == expect[1]
+    if expect[2] is not None:
+        assert c.n_heads == expect[2] and c.n_kv_heads == expect[3]
+    assert c.d_ff == expect[4] and c.vocab == expect[5]
+    if arch == "mamba2-370m":
+        assert c.ssm_state == 128
+    if arch == "zamba2-1.2b":
+        assert c.ssm_state == 64
+    if arch == "phi3.5-moe-42b-a6.6b":
+        assert c.n_experts == 16 and c.top_k == 2
+    if arch == "mixtral-8x22b":
+        assert c.n_experts == 8 and c.top_k == 2 and c.swa_window > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(models, arch):
+    model = models[arch]
+    params = model.init_params(jax.random.PRNGKey(1))
+    batch = _smoke_batch(model, "train")
+    loss, grads = jax.value_and_grad(model.loss_fn())(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch} loss not finite"
+    gn = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, f"{arch} bad grad norm {gn}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_smoke(models, arch):
+    model = models[arch]
+    c = model.cfg
+    params = model.init_params(jax.random.PRNGKey(2))
+    batch = _smoke_batch(model, "prefill")
+    max_seq = SMOKE_SEQ + 4
+    h, cache = model.prefill_fn(max_seq)(params, batch)
+    assert np.isfinite(np.asarray(h, dtype=np.float32)).all()
+    decode = model.decode_fn()
+    tok = jnp.asarray(RNG.integers(0, c.vocab, (SMOKE_BATCH, 1)), jnp.int32)
+    inputs = {"token": tok, "pos": jnp.int32(SMOKE_SEQ)}
+    if c.family == "vlm":
+        inputs["positions"] = jnp.full((3, SMOKE_BATCH, 1), SMOKE_SEQ,
+                                       jnp.int32)
+    logits, new_cache = decode(params, inputs, cache)
+    assert logits.shape == (SMOKE_BATCH, 1, c.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch} logits NaN"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_and_cache_specs_defined(arch):
+    model = build(get_config(arch))
+    for name in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
+        from repro.models.model import SHAPES
+        cell = SHAPES[name]
+        if name == "long_500k" and arch in FULL_ATTENTION_ARCHS:
+            continue  # skipped cell (documented in DESIGN.md)
+        specs = model.input_specs(cell)
+        assert all(isinstance(s, jax.ShapeDtypeStruct)
+                   for s in jax.tree.leaves(specs))
+        if cell.kind == "decode":
+            cache = model.cache_specs(cell)
+            assert all(isinstance(s, jax.ShapeDtypeStruct)
+                       for s in jax.tree.leaves(cache))
+        assert model.model_flops(cell) > 0
+
+
+def test_param_counts_plausible():
+    """Full-config param counts should be in the advertised ballpark."""
+    expect = {
+        "command-r-35b": (30e9, 40e9),
+        "granite-34b": (30e9, 40e9),
+        "qwen2-vl-72b": (60e9, 80e9),
+        "mixtral-8x22b": (120e9, 150e9),   # total (not active)
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        "mamba2-370m": (0.3e9, 0.45e9),
+        "zamba2-1.2b": (1.0e9, 1.6e9),
+        "stablelm-3b": (2e9, 4e9),
+        "starcoder2-3b": (2.5e9, 3.6e9),
+        "seamless-m4t-large-v2": (1.4e9, 2.8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = build(get_config(arch)).n_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params_less_than_total():
+    m = build(get_config("mixtral-8x22b"))
+    assert m.n_active_params() < 0.45 * m.n_params()

@@ -1,0 +1,83 @@
+"""Compensated arithmetic: error-free transformation properties."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import precision as P
+
+# subnormals excluded: XLA may flush them, and error-free transformation
+# guarantees hold for normalized floats only
+finite = st.floats(min_value=-1e30, max_value=1e30,
+                   allow_nan=False, allow_infinity=False,
+                   allow_subnormal=False)
+
+
+@given(finite, finite)
+@settings(max_examples=300, deadline=None)
+def test_two_sum_error_free(a, b):
+    s, e = P.two_sum(jnp.float64(a), jnp.float64(b))
+    # exact identity: s + e == a + b in exact arithmetic
+    from fractions import Fraction
+    lhs = Fraction(float(s)) + Fraction(float(e))
+    rhs = Fraction(a) + Fraction(b)
+    assert lhs == rhs
+
+
+@given(st.floats(min_value=-1e15, max_value=1e15, allow_nan=False,
+                 allow_infinity=False, allow_subnormal=False),
+       st.floats(min_value=-1e15, max_value=1e15, allow_nan=False,
+                 allow_infinity=False, allow_subnormal=False))
+@settings(max_examples=300, deadline=None)
+def test_two_prod_error_free(a, b):
+    from hypothesis import assume
+    # the EFT requires the product (and its error) not to underflow
+    assume(a == 0 or b == 0 or abs(a * b) > 1e-250)
+    p, e = P.two_prod(jnp.float64(a), jnp.float64(b))
+    from fractions import Fraction
+    lhs = Fraction(float(p)) + Fraction(float(e))
+    rhs = Fraction(a) * Fraction(b)
+    assert lhs == rhs
+
+
+def test_twofloat_accumulation_beats_plain_sum():
+    # classic: sum of 1 + N tiny values that vanish in plain f64
+    tiny = 1e-20
+    N = 1000
+    plain = jnp.float64(1.0)
+    acc = P.tf_from(jnp.float64(1.0))
+    acc_fast = P.tf_from(jnp.float64(1.0))
+    kah = (jnp.float64(1.0), jnp.float64(0.0))
+    for _ in range(N):
+        plain = plain + tiny
+        acc = P.tf_add_acc(acc, jnp.float64(tiny))
+        acc_fast = P.tf_add_fast(acc_fast, jnp.float64(tiny))
+        kah = P.kahan_add(kah, jnp.float64(tiny))
+    exact = 1.0 + N * tiny
+    assert float(plain) == 1.0  # demonstrates the failure mode
+    assert abs(float(acc.hi) + float(acc.lo) - exact) < 1e-30
+    assert abs(float(acc_fast.hi) + float(acc_fast.lo) - exact) < 1e-30
+    # Kahan keeps the residual in its compensation term
+    assert abs((float(kah[0]) - float(kah[1])) - exact) < 1e-17
+
+
+def test_tf_mul_extends_precision():
+    a = P.tf_from(jnp.float64(1.0) + jnp.float64(2.0) ** -40)
+    b = jnp.float64(1.0) + jnp.float64(2.0) ** -40
+    prod = P.tf_mul(a, b)
+    from fractions import Fraction
+    exact = (Fraction(1) + Fraction(2) ** -40) ** 2
+    got = Fraction(float(prod.hi)) + Fraction(float(prod.lo))
+    assert abs(got - exact) < Fraction(2) ** -100
+
+
+def test_split_constant_by_dtype():
+    assert P._split_const(jnp.float64(0).dtype) == float((1 << 27) + 1)
+    assert P._split_const(jnp.float32(0).dtype) == float((1 << 12) + 1)
+
+
+@given(finite)
+@settings(max_examples=100, deadline=None)
+def test_tf_roundtrip(a):
+    t = P.tf_from(jnp.float64(a))
+    assert float(P.tf_value(t)) == a

@@ -1,0 +1,109 @@
+"""Dense Ryser engines vs exact oracles + precision-mode properties."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import oracle, ryser
+from repro.core.precision import PRECISION_MODES
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 14])
+def test_seq_matches_exact(n):
+    A = RNG.uniform(-1, 1, (n, n))
+    ref = oracle.perm_ryser_exact(A)
+    got = float(ryser.perm_ryser_seq(jnp.asarray(A)))
+    np.testing.assert_allclose(got, ref, rtol=1e-10, atol=1e-14)
+
+
+@pytest.mark.parametrize("n", [3, 4, 6, 9, 11, 13])
+@pytest.mark.parametrize("chunks", [2, 8, 64])
+def test_chunked_matches_exact(n, chunks):
+    A = RNG.uniform(-1, 1, (n, n))
+    ref = oracle.perm_ryser_exact(A)
+    got = float(ryser.perm_ryser_chunked(jnp.asarray(A), num_chunks=chunks))
+    np.testing.assert_allclose(got, ref, rtol=1e-10, atol=1e-14)
+
+
+@pytest.mark.parametrize("precision", PRECISION_MODES)
+def test_all_precision_modes_correct(precision):
+    A = RNG.uniform(-1, 1, (10, 10))
+    ref = oracle.perm_ryser_exact(A)
+    got = float(ryser.perm_ryser_chunked(jnp.asarray(A), num_chunks=16,
+                                         precision=precision))
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-13)
+
+
+def test_definition_small_n():
+    for n in range(1, 7):
+        A = RNG.uniform(-1, 1, (n, n))
+        d = oracle.perm_definition(A)
+        r = oracle.perm_ryser_exact(A)
+        np.testing.assert_allclose(d, r, rtol=1e-10, atol=1e-14)
+
+
+def test_binary_matrix_exact_integer():
+    for n in [6, 10, 13]:
+        A = (RNG.uniform(0, 1, (n, n)) < 0.5).astype(np.int64)
+        bi = oracle.perm_bigint(A)
+        got = float(ryser.perm_ryser_chunked(
+            jnp.asarray(A, dtype=jnp.float64), num_chunks=8))
+        assert round(got) == bi
+
+
+def test_complex_matrix():
+    n = 8
+    A = RNG.uniform(-1, 1, (n, n)) + 1j * RNG.uniform(-1, 1, (n, n))
+    ref = oracle.perm_ryser_exact(A)
+    got = complex(np.asarray(ryser.perm_ryser_chunked(
+        jnp.asarray(A), num_chunks=8, precision="kahan")))
+    np.testing.assert_allclose(got, ref, rtol=1e-9)
+
+
+def test_all_ones_closed_form():
+    # the paper's Sec. 5 validation family: perm(a * ones(n)) = n! a^n
+    for n, a in [(6, 1.0), (8, 0.5), (10, 2.0)]:
+        A = np.full((n, n), a)
+        ref = oracle.all_ones_permanent(n, a)
+        got = float(ryser.perm_ryser_chunked(jnp.asarray(A), num_chunks=8))
+        np.testing.assert_allclose(got, ref, rtol=1e-10)
+
+
+def test_transpose_invariance():
+    A = RNG.uniform(-1, 1, (9, 9))
+    a = float(ryser.perm_ryser_chunked(jnp.asarray(A)))
+    b = float(ryser.perm_ryser_chunked(jnp.asarray(A.T)))
+    np.testing.assert_allclose(a, b, rtol=1e-10)
+
+
+def test_row_scaling_linearity():
+    # perm is linear in each row
+    A = RNG.uniform(-1, 1, (8, 8))
+    B = A.copy()
+    B[3] *= 2.5
+    a = float(ryser.perm_ryser_chunked(jnp.asarray(A)))
+    b = float(ryser.perm_ryser_chunked(jnp.asarray(B)))
+    np.testing.assert_allclose(b, 2.5 * a, rtol=1e-9)
+
+
+@given(hnp.arrays(np.float64, (5, 5),
+                  elements=st.floats(min_value=-2, max_value=2,
+                                     allow_nan=False)))
+@settings(max_examples=30, deadline=None)
+def test_property_matches_exact_oracle(A):
+    ref = oracle.perm_ryser_exact(A)
+    got = float(ryser.perm_ryser_chunked(jnp.asarray(A), num_chunks=4))
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-10)
+
+
+def test_chunk_geometry_invariants():
+    for n in range(3, 30):
+        for req in [1, 2, 7, 64, 10**6]:
+            T, C, k = ryser.chunk_geometry(n, req)
+            assert T * C == 1 << (n - 1)
+            assert C == 1 << k and k >= 1
+            assert T & (T - 1) == 0

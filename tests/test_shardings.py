@@ -1,0 +1,117 @@
+"""Sharding rules: param specs (TP/FSDP/serve), batch/cache specs, actx."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import actx
+from repro.models import shardings as SH
+from repro.models.model import ShapeCell, build
+
+
+@pytest.fixture(autouse=True)
+def _mesh_sizes():
+    SH.set_mesh_sizes({"pod": 2, "data": 16, "model": 16})
+
+
+def _leaf(specs, *path):
+    node = specs
+    for k in path:
+        node = node[k]
+    return node
+
+
+def test_dense_param_specs_tp():
+    cfg = get_config("command-r-35b")
+    specs = SH.param_specs(cfg, build(cfg).param_shapes(),
+                           fsdp=("data",), mdl="model")
+    assert _leaf(specs, "embed") == P("model", "data")
+    assert _leaf(specs, "unembed") == P("data", "model")
+    # scanned stack: leading None
+    assert _leaf(specs, "layers", "attn", "wq") == P(None, "data", "model")
+    assert _leaf(specs, "layers", "attn", "wo") == P(None, "model", "data")
+    assert _leaf(specs, "layers", "ffn", "wi") == P(None, "data", "model")
+    assert _leaf(specs, "layers", "ln1", "w") == P(None, None)
+
+
+def test_moe_ep_vs_tp_fallback():
+    phi = get_config("phi3.5-moe-42b-a6.6b")   # 16 experts: EP
+    specs = SH.param_specs(phi, build(phi).param_shapes(),
+                           fsdp=("data",), mdl="model", mdl_size=16)
+    assert _leaf(specs, "layers", "ffn", "wi") == P(None, "model", "data",
+                                                    None)
+    mix = get_config("mixtral-8x22b")           # 8 experts: TP fallback
+    specs = SH.param_specs(mix, build(mix).param_shapes(),
+                           fsdp=("data",), mdl="model", mdl_size=16)
+    assert _leaf(specs, "layers", "ffn", "wi") == P(None, None, "data",
+                                                    "model")
+
+
+def test_serve_mode_keeps_weights_resident():
+    cfg = get_config("command-r-35b")
+    specs = SH.param_specs(cfg, build(cfg).param_shapes(),
+                           fsdp=("data",), mdl="model", serve=True)
+    # no data-axis (FSDP) sharding on dense weights in serve mode
+    assert _leaf(specs, "layers", "attn", "wq") == P(None, None, "model")
+    assert _leaf(specs, "layers", "ffn", "wo") == P(None, "model", None)
+    # but MoE expert tables keep the data axis (memory)
+    mix = get_config("mixtral-8x22b")
+    specs = SH.param_specs(mix, build(mix).param_shapes(),
+                           fsdp=("data",), mdl="model", serve=True)
+    assert "data" in tuple(_leaf(specs, "layers", "ffn", "wi"))
+
+
+def test_fsdp_strategy_specs():
+    cfg = get_config("stablelm-3b")
+    specs = SH.param_specs(cfg, build(cfg).param_shapes(),
+                           fsdp=("data", "model"), mdl=None, mdl_size=1)
+    wq = _leaf(specs, "layers", "attn", "wq")
+    assert wq == P(None, ("data", "model"), None)
+
+
+def test_divisibility_fallback_drops_axis():
+    cfg = get_config("stablelm-3b").reduced(d_model=24)  # 24 % 256 != 0
+    specs = SH.param_specs(cfg, build(cfg).param_shapes(),
+                           fsdp=("data", "model"), mdl=None, mdl_size=1)
+    # fsdp over 256 does not divide 24 -> replicated
+    assert _leaf(specs, "layers", "attn", "wq")[1] is None
+
+
+def test_batch_and_cache_specs():
+    cfg = get_config("command-r-35b")
+    model = build(cfg)
+    cell = ShapeCell("d", "decode", 32768, 128)
+    b = SH.batch_specs(cfg, model.input_specs(cell), dp=("data",))
+    assert b["token"] == P("data", None)
+    assert b["pos"] == P()
+    c = SH.cache_specs_sharding(cfg, model.cache_specs(cell), dp=("data",),
+                                seq_sharded=True)
+    assert c["k"] == P(None, "data", "model", None, None)
+    c2 = SH.cache_specs_sharding(cfg, model.cache_specs(cell), dp=None,
+                                 seq_sharded=False)
+    assert c2["k"] == P(None, None, None, "model", None)
+
+
+def test_actx_noop_without_context():
+    x = jnp.ones((4, 8, 16))
+    assert actx.batch_act(x) is x
+
+
+def test_actx_constrains_under_context():
+    mesh = jax.make_mesh((1,), ("data",))
+    x = jnp.ones((4, 8, 16))
+    with actx.use(mesh, ("data",), "data"):
+        y = actx.batch_act(x)
+    assert y.shape == x.shape  # constraint applied without error
+
+
+def test_actx_divisibility_per_dim_fallback():
+    mesh = jax.make_mesh((1,), ("data",))
+    # dim 3 not divisible by nothing (size-1 axes divide everything);
+    # exercise the per-dim path with a fake 2-device requirement
+    with actx.use(mesh, ("data",), "data"):
+        y = actx.constrain(jnp.ones((3, 5)), actx.DP, None)
+    assert y.shape == (3, 5)

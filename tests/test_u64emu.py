@@ -1,0 +1,78 @@
+"""uint32-pair 64-bit emulation vs Python bigints (property tests)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import u64emu as U
+
+u62 = st.integers(min_value=0, max_value=(1 << 62) - 1)
+
+
+def _pair(v):
+    return (jnp.uint32((v >> 32) & 0xFFFFFFFF), jnp.uint32(v & 0xFFFFFFFF))
+
+
+def _val(p):
+    return (int(p[0]) << 32) | int(p[1])
+
+
+@given(u62, st.integers(0, (1 << 32) - 1))
+@settings(max_examples=200, deadline=None)
+def test_add_u32(a, b):
+    assert _val(U.u64_add_u32(_pair(a), jnp.uint32(b))) == (a + b) % (1 << 64)
+
+
+@given(u62, u62)
+@settings(max_examples=200, deadline=None)
+def test_add(a, b):
+    assert _val(U.u64_add(_pair(a), _pair(b))) == (a + b) % (1 << 64)
+
+
+@given(st.integers(0, (1 << 40) - 1), st.integers(0, 23))
+@settings(max_examples=200, deadline=None)
+def test_shl(a, k):
+    assert _val(U.u64_shl(_pair(a), k)) == (a << k) % (1 << 64)
+
+
+@given(u62)
+@settings(max_examples=200, deadline=None)
+def test_gray(a):
+    assert _val(U.u64_gray(_pair(a))) == a ^ (a >> 1)
+
+
+@given(u62, st.integers(0, 62))
+@settings(max_examples=300, deadline=None)
+def test_bit(a, j):
+    got = int(U.u64_bit(_pair(a), jnp.uint32(j)))
+    assert got == (a >> j) & 1
+
+
+@given(st.integers(1, (1 << 62) - 1))
+@settings(max_examples=300, deadline=None)
+def test_ctz(a):
+    want = (a & -a).bit_length() - 1
+    assert int(U.u64_ctz(_pair(a))) == want
+
+
+def test_ctz32_all_bits():
+    v = jnp.asarray(np.uint32(1) << np.arange(32, dtype=np.uint32))
+    got = np.asarray(U.ctz32(v))
+    np.testing.assert_array_equal(got, np.arange(32))
+
+
+@given(u62, u62)
+@settings(max_examples=200, deadline=None)
+def test_leq(a, b):
+    assert bool(U.u64_leq(_pair(a), _pair(b))) == (a <= b)
+
+
+def test_vectorized_lane_math():
+    lanes = np.arange(4096, dtype=np.uint64) + (1 << 40)
+    hi = jnp.asarray((lanes >> 32).astype(np.uint32))
+    lo = jnp.asarray((lanes & 0xFFFFFFFF).astype(np.uint32))
+    g = U.u64_gray((hi, lo))
+    want = lanes ^ (lanes >> np.uint64(1))
+    got = (np.asarray(g[0], dtype=np.uint64) << np.uint64(32)) | \
+        np.asarray(g[1], dtype=np.uint64)
+    np.testing.assert_array_equal(got, want)
