@@ -1,0 +1,100 @@
+"""Batched-engine throughput: perms/sec vs batch size (1 -> 256).
+
+The SUperman headline is throughput, and the batch engine's whole point
+is amortizing compilation + dispatch over a request stack.  This
+benchmark times ``engine.permanent_batch`` on stacks of random n x n
+matrices across batch sizes and reports perms/sec against the scalar
+``engine.permanent`` loop baseline.
+
+Acceptance gate (ISSUE 1): batch 64 of 8x8 real matrices must match the
+scalar engine to rtol=1e-10 and deliver >= 5x the scalar perms/sec.
+
+    PYTHONPATH=src python -m benchmarks.batch_throughput [--n 8]
+    PYTHONPATH=src python -m benchmarks.run --only batch
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+BATCH_SIZES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def _time(fn, repeats: int):
+    fn()  # warmup / compile
+    t0 = time.time()
+    for _ in range(repeats):
+        fn()
+    return (time.time() - t0) / repeats
+
+
+def run(n: int = 8, batch_sizes=BATCH_SIZES, precision: str = "dq_acc",
+        backend: str = "jnp", repeats: int = 5, seed: int = 0):
+    from repro.core import engine
+
+    rng = np.random.default_rng(seed)
+    rows = []
+
+    # scalar baseline: a 64-call loop through the scalar engine
+    base_mats = rng.uniform(-1, 1, (64, n, n))
+    scalar_vals = None
+
+    def scalar_loop():
+        nonlocal scalar_vals
+        scalar_vals = np.array([engine.permanent(A, precision=precision,
+                                                 backend=backend)
+                                for A in base_mats])
+
+    scalar_s = _time(scalar_loop, max(1, repeats // 2))
+    scalar_pps = len(base_mats) / scalar_s
+    rows.append({"n": n, "batch": "scalar", "perms_per_s": f"{scalar_pps:.0f}",
+                 "speedup": "1.0"})
+
+    for B in batch_sizes:
+        mats = base_mats[:B] if B <= len(base_mats) \
+            else rng.uniform(-1, 1, (B, n, n))
+        batch_vals = None
+
+        def batched():
+            nonlocal batch_vals
+            batch_vals = engine.permanent_batch(mats, precision=precision,
+                                                backend=backend)
+
+        dt = _time(batched, repeats)
+        pps = B / dt
+        if B <= len(base_mats):  # correctness vs the scalar engine
+            np.testing.assert_allclose(batch_vals, scalar_vals[:B],
+                                       rtol=1e-10)
+        rows.append({"n": n, "batch": B, "perms_per_s": f"{pps:.0f}",
+                     "speedup": f"{pps / scalar_pps:.1f}"})
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8)
+    ap.add_argument("--precision", default="dq_acc")
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"))
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args()
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    rows = run(n=args.n, precision=args.precision, backend=args.backend,
+               repeats=args.repeats)
+    for r in rows:
+        print("batch_throughput," + ",".join(f"{k}={v}"
+                                             for k, v in r.items()))
+    at64 = next(r for r in rows if r["batch"] == 64)
+    ok = float(at64["speedup"]) >= 5.0
+    print(f"# batch=64 speedup {at64['speedup']}x vs scalar "
+          f"({'OK' if ok else 'BELOW 5x TARGET'})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

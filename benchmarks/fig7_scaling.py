@@ -27,6 +27,7 @@ _CHILD = textwrap.dedent("""
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P_
     from repro.core import distributed
+    from repro.utils.compat import shard_map
     from repro.utils.hlo_cost import analyze_hlo
     n, d = int(sys.argv[1]), int(sys.argv[2])
     rng = np.random.default_rng(1234)
@@ -51,8 +52,8 @@ _CHILD = textwrap.dedent("""
             import jax as _j
             h = _j.lax.psum(jnp.sum(parts.hi), "data")
             return h
-        return jax.shard_map(body, mesh=mesh, in_specs=(P_(), P_(("data",))),
-                             out_specs=P_())(A, s)
+        return shard_map(body, mesh=mesh, in_specs=(P_(), P_(("data",))),
+                         out_specs=P_())(A, s)
 
     comp = jax.jit(run).lower(jnp.asarray(A), dev_slices).compile()
     cost = analyze_hlo(comp.as_text())

@@ -1,15 +1,20 @@
 """Benchmark harness: one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only table3,table5] [--fast]
+    PYTHONPATH=src python -m benchmarks.run --check --only batch
 
 Prints ``name,...`` CSV rows per table (see each module's docstring for
 the mapping to the paper).  The roofline report additionally aggregates
-the dry-run artifacts if present.
+the dry-run artifacts if present.  ``--check`` runs the tier-1 test suite
+(scripts/tier1.sh) first and refuses to report perf numbers from a red
+tree.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
 import time
 
@@ -19,22 +24,46 @@ def print_rows(name, rows):
         print(f"{name}," + ",".join(f"{k}={v}" for k, v in r.items()))
 
 
+def _tier1_green() -> bool:
+    script = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                          "tier1.sh")
+    print("# --check: running tier-1 suite before benchmarking ...")
+    r = subprocess.run(["bash", script, "-x"], capture_output=True, text=True)
+    if r.returncode != 0:
+        sys.stderr.write(r.stdout[-3000:] + r.stderr[-1000:])
+        print("# tier-1 RED -- refusing to report benchmark numbers")
+        return False
+    print("# tier-1 green")
+    return True
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: table3,table4,table5,fig7,roofline")
+                    help="comma list: table3,table4,table5,fig7,batch,"
+                         "roofline")
     ap.add_argument("--fast", action="store_true",
                     help="smaller n (CI-sized)")
+    ap.add_argument("--check", action="store_true",
+                    help="run tier-1 tests first; abort if red")
     args = ap.parse_args(argv)
     only = set(filter(None, args.only.split(",")))
+
+    if args.check and not _tier1_green():
+        return 1
 
     import jax
     jax.config.update("jax_enable_x64", True)
 
-    from . import (fig7_scaling, roofline_report, table3_precision,
-                   table4_dense, table5_sparse)
+    from . import (batch_throughput, fig7_scaling, roofline_report,
+                   table3_precision, table4_dense, table5_sparse)
 
     t0 = time.time()
+    if not only or "batch" in only:
+        rows = batch_throughput.run(
+            n=8, batch_sizes=(1, 8, 64) if args.fast else
+            batch_throughput.BATCH_SIZES)
+        print_rows("batch_throughput", rows)
     if not only or "table3" in only:
         if args.fast:
             print_rows("table3", table3_precision.run(ns=(12, 16)))

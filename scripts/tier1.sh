@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Offline-safe tier-1 test runner: fast suite only (slow multi-device
+# subprocess tests are deselected).  Works without hypothesis installed
+# (tests/conftest.py installs a deterministic stub).
+#
+#   scripts/tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -q -m "not slow" "$@"

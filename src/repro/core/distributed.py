@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P_
 
+from ..utils.compat import shard_map
 from . import gray as G
 from . import precision as P
 from .ryser import chunk_geometry, nw_base_vector, _final_factor
@@ -212,10 +213,10 @@ def permanent_on_mesh(A, mesh: Mesh, *, precision: str = "dq_acc",
 
         # check_vma=False: interpret-mode pallas inside shard_map trips
         # the vma typing on its internal grid dynamic_slices
-        return jax.shard_map(body, mesh=mesh,
-                             in_specs=(P_(), P_(axes), P_(axes)),
-                             out_specs=(P_(), P_()),
-                             check_vma=False)(A, dev_slices, dev_live)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(P_(), P_(axes), P_(axes)),
+                         out_specs=(P_(), P_()),
+                         check_vma=False)(A, dev_slices, dev_live)
 
     hi, lo = run(A, dev_slices, dev_live)
     p0 = jnp.prod(nw_base_vector(A))
@@ -253,10 +254,10 @@ def slice_sums_on_mesh(A, mesh: Mesh, slice_ids: np.ndarray, *,
             h, l = P.two_sum(jnp.sum(parts.hi), jnp.sum(parts.lo))
             return h[None], l[None]
 
-        return jax.shard_map(body, mesh=mesh,
-                             in_specs=(P_(), P_(axes)),
-                             out_specs=(P_(axes), P_(axes)),
-                             check_vma=False)(A, dev_slices)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(P_(), P_(axes)),
+                         out_specs=(P_(axes), P_(axes)),
+                         check_vma=False)(A, dev_slices)
 
     his, los = run(A, dev_slices)
     return np.asarray(his), np.asarray(los)

@@ -1,6 +1,6 @@
 """SUperman engine: the paper's end-to-end dispatch (Alg. 4) as a library.
 
-``permanent(A, ...)`` is the public entry point.  Pipeline:
+``permanent(A, ...)`` is the public scalar entry point.  Pipeline:
 
   1. type sniffing        real / complex / binary-integer
   2. DM elimination       (Sec. 4.1, optional)   -- may zero the matrix
@@ -10,6 +10,17 @@
   5. precision mode       dd / dq_fast / dq_acc / qq / kahan (Sec. 5)
   6. backend              "jnp" chunked engines, "pallas" kernel, or
                           "distributed" (mesh shard_map, core.distributed)
+
+``permanent_batch(As, ...)`` is the batched entry point: it runs the same
+Alg.-4 pipeline over a whole request stack, but instead of one host
+round-trip per matrix it sniffs the dtype once, preprocesses every matrix,
+*buckets the resulting leaves by size*, and dispatches each bucket through
+one vmapped device program (``ryser.perm_ryser_batched`` /
+``sparyser.perm_sparyser_batched`` / the batch-grid Pallas kernel) --
+ragged stragglers (singleton buckets) fall back to the scalar path.  This
+is the throughput shape serving needs: boson-sampling pipelines ask for
+permanents of thousands of submatrices, and the paper's headline number is
+perms/sec, not per-call latency.
 
 Complex matrices run the dense path with native complex dtype (twofloat
 compensation is applied per real/imaginary component by the complex-safe
@@ -27,7 +38,8 @@ from . import decompose as D
 from . import ryser as R
 from . import sparyser as S
 
-__all__ = ["permanent", "PermanentReport", "DENSITY_SWITCH"]
+__all__ = ["permanent", "permanent_batch", "PermanentReport",
+           "DENSITY_SWITCH"]
 
 # Alg. 4: dense kernel when nonzero density >= 30%
 DENSITY_SWITCH = 0.30
@@ -69,6 +81,28 @@ def _leaf_value(M: np.ndarray, precision: str, num_chunks: int,
                                    precision=precision)
 
 
+def _preprocess_leaves(work: np.ndarray, report: PermanentReport,
+                       do_dm: bool, do_fm: bool):
+    """DM elimination + Forbert-Marx on one matrix (Sec. 4).
+
+    Returns the leaf list; [] when DM zeroed the matrix (perm == 0).
+    """
+    n = work.shape[0]
+    if do_dm and report.density < 0.5 and n >= 3:
+        work, removed = D.dm_eliminate(work)
+        report.dm_removed = removed
+        if not work.any():
+            report.fm_leaves = 0
+            return []
+    if do_fm and n >= 3:
+        leaves = D.fm_decompose(work)
+    else:
+        leaves = [D.Leaf(1.0, work)]
+    report.fm_leaves = len(leaves)
+    report.leaf_sizes = [l.matrix.shape[0] for l in leaves]
+    return leaves
+
+
 def permanent(A, *, precision: str = "dq_acc", preprocess: bool = True,
               dm: bool | None = None, fm: bool | None = None,
               num_chunks: int = 4096, backend: str = "jnp",
@@ -104,19 +138,10 @@ def permanent(A, *, precision: str = "dq_acc", preprocess: bool = True,
     do_dm = preprocess if dm is None else dm
     do_fm = preprocess if fm is None else fm
 
-    if do_dm and report.density < 0.5 and n >= 3:
-        work, removed = D.dm_eliminate(work)
-        report.dm_removed = removed
-        if not work.any():
-            report.value = 0.0 + 0.0j if is_complex else 0.0
-            return (report.value, report) if return_report else report.value
-
-    if do_fm and n >= 3:
-        leaves = D.fm_decompose(work)
-    else:
-        leaves = [D.Leaf(1.0, work)]
-    report.fm_leaves = len(leaves)
-    report.leaf_sizes = [l.matrix.shape[0] for l in leaves]
+    leaves = _preprocess_leaves(work, report, do_dm, do_fm)
+    if not leaves:
+        report.value = 0.0 + 0.0j if is_complex else 0.0
+        return (report.value, report) if return_report else report.value
 
     total = 0.0 + 0.0j if is_complex else 0.0
     for leaf in leaves:
@@ -127,3 +152,122 @@ def permanent(A, *, precision: str = "dq_acc", preprocess: bool = True,
                                          backend, report, distributed_ctx)
     report.value = total if is_complex else float(np.real(total))
     return (report.value, report) if return_report else report.value
+
+
+def permanent_batch(As, *, precision: str = "dq_acc", preprocess: bool = True,
+                    dm: bool | None = None, fm: bool | None = None,
+                    num_chunks: int = 4096, backend: str = "jnp",
+                    return_report: bool = False) -> np.ndarray:
+    """Compute perm(A) for a whole stack of matrices in bucketed batches.
+
+    The batched Alg.-4 dispatcher: the paper's pipeline (type sniff -> DM ->
+    FM -> dense/sparse dispatch) runs once over the full request stack, and
+    every group of same-size leaves becomes ONE vmapped device program
+    instead of a host round-trip per matrix:
+
+      * dtype is sniffed once for the whole batch (any complex entry
+        promotes the batch to complex128; ``qq`` then falls back to kahan
+        exactly like the scalar engine);
+      * each matrix is DM/FM-preprocessed individually; the resulting
+        leaves are tagged with their owner and *bucketed by size* (and
+        dense/sparse route, same DENSITY_SWITCH rule as ``permanent``);
+      * dense buckets run ``ryser.perm_ryser_batched`` (backend="jnp") or
+        the batch-grid Pallas kernel (backend="pallas", real only --
+        complex buckets always take the vmapped jnp path);
+      * sparse buckets run ``sparyser.perm_sparyser_batched`` (padded-CCS
+        stacks, one jit per (n, maxdeg) bucket);
+      * ragged stragglers -- buckets holding a single leaf -- fall back to
+        the scalar per-leaf path, so mixed-size inputs still work.
+
+    Args:
+      As: (B, n, n) array-like, or a sequence of square matrices (sizes
+        may differ -- bucketing handles ragged inputs).
+      precision / preprocess / dm / fm / num_chunks: as in ``permanent``.
+      backend: ``jnp`` or ``pallas`` (``distributed`` is scalar-only; use
+        ``core.distributed`` directly for mesh-wide single permanents).
+      return_report: also return a list of per-matrix PermanentReport.
+
+    Returns:
+      (B,) float64 array (complex128 when the batch is complex); with
+      ``return_report`` a ``(values, reports)`` tuple.
+    """
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"permanent_batch supports jnp|pallas, got {backend}")
+    mats = [np.asarray(M) for M in As]
+    for M in mats:
+        if M.ndim != 2 or M.shape[0] != M.shape[1]:
+            raise ValueError(f"square matrices required, got {M.shape}")
+    B = len(mats)
+    is_complex = any(np.iscomplexobj(M) for M in mats)
+    if is_complex and precision == "qq":
+        precision = "kahan"
+    dtype = np.complex128 if is_complex else np.float64
+    do_dm = preprocess if dm is None else dm
+    do_fm = preprocess if fm is None else fm
+
+    totals = np.zeros(B, dtype=np.complex128)
+    reports: list[PermanentReport] = []
+    dense_buckets: dict[int, list] = {}   # n -> [(owner, coef, matrix)]
+    sparse_buckets: dict[int, list] = {}
+
+    for i, M in enumerate(mats):
+        n = M.shape[0]
+        work = M.astype(dtype)
+        report = PermanentReport(n=n, nnz=int((work != 0).sum()),
+                                 precision=precision, backend=backend)
+        report.density = report.nnz / max(1, n * n)
+        reports.append(report)
+        for leaf in _preprocess_leaves(work, report, do_dm, do_fm):
+            m = leaf.matrix
+            ln = m.shape[0]
+            if m.shape == (1, 1) and m[0, 0] == 1:
+                totals[i] += leaf.coef
+                continue
+            if ln <= 2:
+                report.dispatch.append(f"dense(n={ln})")
+                v = m[0, 0] if ln == 1 else \
+                    m[0, 0] * m[1, 1] + m[0, 1] * m[1, 0]
+                totals[i] += leaf.coef * v
+                continue
+            density = float((m != 0).sum()) / (ln * ln)
+            bucket = dense_buckets if density >= DENSITY_SWITCH \
+                else sparse_buckets
+            bucket.setdefault(ln, []).append((i, leaf.coef, m))
+
+    for ln, items in sorted(dense_buckets.items()):
+        if len(items) == 1:                      # ragged straggler: scalar
+            i, coef, m = items[0]
+            totals[i] += coef * complex(_leaf_value(
+                m, precision, num_chunks, backend, reports[i], None))
+            continue
+        tag = f"dense_batch(n={ln},b={len(items)})"
+        stack = np.stack([m for _, _, m in items])
+        if backend == "pallas" and not is_complex and ln >= 4:
+            from ..kernels import ops as K
+            vals = np.asarray(K.permanent_pallas_batched(
+                stack, precision=precision))
+        else:
+            vals = np.asarray(R.perm_ryser_batched(
+                stack, num_chunks=num_chunks, precision=precision))
+        for (i, coef, _), v in zip(items, vals):
+            reports[i].dispatch.append(tag)
+            totals[i] += coef * v
+
+    for ln, items in sorted(sparse_buckets.items()):
+        if len(items) == 1:
+            i, coef, m = items[0]
+            totals[i] += coef * complex(_leaf_value(
+                m, precision, num_chunks, backend, reports[i], None))
+            continue
+        tag = f"sparse_batch(n={ln},b={len(items)})"
+        sps = [S.SparseMatrix.from_dense(m) for _, _, m in items]
+        vals = S.perm_sparyser_batched(sps, num_chunks=num_chunks,
+                                       precision=precision)
+        for (i, coef, _), v in zip(items, vals):
+            reports[i].dispatch.append(tag)
+            totals[i] += coef * v
+
+    out = totals if is_complex else np.real(totals)
+    for i in range(B):
+        reports[i].value = complex(out[i]) if is_complex else float(out[i])
+    return (out, reports) if return_report else out

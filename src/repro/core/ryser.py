@@ -36,6 +36,7 @@ __all__ = [
     "nw_base_vector",
     "perm_ryser_seq",
     "perm_ryser_chunked",
+    "perm_ryser_batched",
     "chunk_partial_sums",
     "chunk_geometry",
     "ryser_flops",
@@ -261,3 +262,44 @@ def perm_ryser_chunked(A, num_chunks: int = 4096, precision: str = "dq_acc"):
     if n == 2:
         return A[0, 0] * A[1, 1] + A[0, 1] * A[1, 0]
     return _chunked_jit(A, num_chunks, precision)
+
+
+# ---------------------------------------------------------------------------
+# Batched (vmapped Alg. 3): one device program for a stack of matrices
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("num_chunks", "precision"))
+def _batched_jit(As, num_chunks: int, precision: str):
+    n = As.shape[1]
+    T, C, _ = chunk_geometry(n, num_chunks)
+
+    def one(A):
+        partials = chunk_partial_sums(A, T, C, precision)
+        hi, e1 = P.two_sum(jnp.sum(partials.hi), jnp.sum(partials.lo))
+        p0 = jnp.prod(nw_base_vector(A))
+        total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
+        return P.tf_value(total) * _final_factor(n)
+
+    return jax.vmap(one)(As)
+
+
+def perm_ryser_batched(As, num_chunks: int = 4096, precision: str = "dq_acc"):
+    """Permanents of a stack of same-size matrices in ONE device program.
+
+    ``As`` is (B, n, n); returns (B,).  The chunked Alg.-3 body (all its
+    host-side CEG schedules are batch-invariant: they depend only on
+    (n, T, C)) is vmapped over the leading batch axis under a single jit,
+    so a whole stack costs one dispatch and one compilation per (B, n)
+    instead of B host round-trips -- the substrate for ``permanent_batch``
+    and the batched serving loop.  Matches ``perm_ryser_chunked`` per
+    element (identical chunk geometry and twofloat outer reduction).
+    """
+    As = jnp.asarray(As)
+    if As.ndim != 3 or As.shape[1] != As.shape[2]:
+        raise ValueError(f"(B, n, n) stack required, got {As.shape}")
+    n = As.shape[1]
+    if n == 1:
+        return As[:, 0, 0]
+    if n == 2:
+        return (As[:, 0, 0] * As[:, 1, 1] + As[:, 0, 1] * As[:, 1, 0])
+    return _batched_jit(As, num_chunks, precision)

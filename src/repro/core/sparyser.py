@@ -27,7 +27,8 @@ from . import gray as G
 from . import precision as P
 from .ryser import chunk_geometry, nw_base_vector, _final_factor
 
-__all__ = ["SparseMatrix", "perm_sparyser_chunked", "sparse_chunk_partial_sums"]
+__all__ = ["SparseMatrix", "perm_sparyser_chunked", "perm_sparyser_batched",
+           "sparse_chunk_partial_sums"]
 
 
 @dataclass(frozen=True)
@@ -116,19 +117,28 @@ def sparse_chunk_partial_sums(sp: SparseMatrix, T: int, C: int,
                               total_chunks: int | None = None) -> P.TwoFloat:
     """SpaRyser (Alg. 2) partial sums for a chunk range; mirrors
     ``ryser.chunk_partial_sums`` but updates x through the padded CCS."""
+    A = jnp.asarray(sp.to_dense())       # used only for init matmul (n x n)
+    rows_pad, vals_pad = sp.padded_columns()
+    return _sparse_partials_traced(A, jnp.asarray(rows_pad),
+                                   jnp.asarray(vals_pad), T, C, precision,
+                                   chunk_offset, total_chunks)
+
+
+def _sparse_partials_traced(A, rows_pad, vals_pad, T: int, C: int,
+                            precision: str, chunk_offset: int = 0,
+                            total_chunks: int | None = None) -> P.TwoFloat:
+    """Traced-core SpaRyser partials: the matrix enters only through the
+    (traced) dense ``A`` (init matmul), ``rows_pad`` and ``vals_pad``
+    (n, maxdeg) padded CCS arrays -- so the same program vmaps over a
+    stack of same-shape sparse matrices (``perm_sparyser_batched``)."""
     if total_chunks is None:
         total_chunks = T
-    n = sp.n
+    n = A.shape[0]
     k = int(math.log2(C))
     assert C == 1 << k and k >= 1
     space = 1 << (n - 1)
     assert total_chunks * C == space
-
-    A = jnp.asarray(sp.to_dense())       # used only for init matmul (n x n)
     dtype = A.dtype
-    rows_pad, vals_pad = sp.padded_columns()
-    rows_pad = jnp.asarray(rows_pad)     # (n, maxdeg)
-    vals_pad = jnp.asarray(vals_pad)     # (n, maxdeg)
 
     x_base = nw_base_vector(A)
 
@@ -221,3 +231,52 @@ def perm_sparyser_chunked(sp: SparseMatrix, num_chunks: int = 4096,
     p0 = jnp.prod(nw_base_vector(A))
     total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
     return np.asarray(P.tf_value(total)).item() * _final_factor(n)
+
+
+@partial(jax.jit, static_argnames=("T", "C", "precision"))
+def _sparse_batched_jit(A_stack, rows_stack, vals_stack, T: int, C: int,
+                        precision: str):
+    n = A_stack.shape[1]
+
+    def one(A, rows_pad, vals_pad):
+        parts = _sparse_partials_traced(A, rows_pad, vals_pad, T, C,
+                                        precision)
+        hi, e1 = P.two_sum(jnp.sum(parts.hi), jnp.sum(parts.lo))
+        p0 = jnp.prod(nw_base_vector(A))
+        total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
+        return P.tf_value(total) * _final_factor(n)
+
+    return jax.vmap(one)(A_stack, rows_stack, vals_stack)
+
+
+def perm_sparyser_batched(sps: list[SparseMatrix], num_chunks: int = 4096,
+                          precision: str = "dq_acc") -> np.ndarray:
+    """Permanents of a bucket of same-size sparse matrices, one dispatch.
+
+    All matrices must share ``n``; their padded CCS columns are padded
+    further to the bucket-wide max column degree (padding points at the
+    dummy row, so it is arithmetically inert) and the SpaRyser body is
+    vmapped over the stack.  The jitted program is specialized per
+    (n, maxdeg, T, C) -- the batched analogue of the per-pattern kernel
+    specialization, amortized over the whole bucket.
+    """
+    assert sps, "empty bucket"
+    n = sps[0].n
+    assert all(sp.n == n for sp in sps), "bucket must be same-size"
+    if n <= 2:
+        return np.array([perm_sparyser_chunked(sp) for sp in sps])
+    T, C, _ = chunk_geometry(n, num_chunks)
+    padded = [sp.padded_columns() for sp in sps]
+    maxdeg = max(r.shape[1] for r, _ in padded)
+    B = len(sps)
+    dtype = np.result_type(*(v.dtype for _, v in padded))
+    rows_stack = np.full((B, n, maxdeg), n, dtype=np.int32)
+    vals_stack = np.zeros((B, n, maxdeg), dtype=dtype)
+    for b, (r, v) in enumerate(padded):
+        rows_stack[b, :, :r.shape[1]] = r
+        vals_stack[b, :, :v.shape[1]] = v
+    A_stack = jnp.asarray(np.stack([sp.to_dense().astype(dtype)
+                                    for sp in sps]))
+    out = _sparse_batched_jit(A_stack, jnp.asarray(rows_stack),
+                              jnp.asarray(vals_stack), T, C, precision)
+    return np.asarray(out)

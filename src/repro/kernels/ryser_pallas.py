@@ -44,9 +44,11 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from ..core import gray as G
+from ..utils.compat import shape_dtype_struct
 from . import u64emu as U
 
-__all__ = ["ryser_pallas_call", "kernel_geometry"]
+__all__ = ["ryser_pallas_call", "ryser_pallas_call_batched",
+           "kernel_geometry"]
 
 
 def kernel_geometry(n: int, *, lanes: int = 128, steps_per_chunk: int = 64,
@@ -143,23 +145,23 @@ def _cumsig_host(sched, n_pad: int) -> np.ndarray:
     return C0
 
 
-def _ryser_kernel(base_hi_ref, base_lo_ref, A_ref, xb_ref, c0_ref, out_ref, *,
-                  n: int, n_pad: int, TB: int, C: int, Wu: int,
-                  space: int, precision: str, mode: str, dtype):
-    """One grid step: TB chunks x C Gray steps; writes (1, 2) partial."""
-    i = pl.program_id(0)
+def _ryser_block(i, A, xb, c0, dev_base, *,
+                 n: int, n_pad: int, TB: int, C: int, Wu: int,
+                 space: int, precision: str, mode: str, dtype):
+    """One grid block: TB chunks x C Gray steps; returns (hi, lo) scalars.
+
+    Shared between the single-matrix kernel (grid over blocks) and the
+    batch-grid kernel (grid over (batch, block)); ``i`` is the block id
+    along the chunk axis and ``dev_base`` the u32-pair device chunk base.
+    """
     k = int(math.log2(C))
     kw = int(math.log2(Wu))
     M = C // Wu
-    A = A_ref[...]                                   # (n_pad, n_pad)
-    xb = xb_ref[...]                                 # (n_pad, 1)
 
     # ---- chunk ids & start steps (u64 lane math) ----
     # (1, TB) iota then reshape: Mosaic requires >= 2D iota on TPU
     lane = jax.lax.broadcasted_iota(jnp.uint32, (1, TB), 1).reshape(TB)
     block_first = (i * TB).astype(jnp.uint32)
-    dev_base = (base_hi_ref[0, 0].astype(jnp.uint32),
-                base_lo_ref[0, 0].astype(jnp.uint32))
     chunk64 = U.u64_add_u32((jnp.broadcast_to(dev_base[0], (TB,)),
                              jnp.broadcast_to(dev_base[1], (TB,))),
                             block_first + lane)
@@ -184,7 +186,7 @@ def _ryser_kernel(base_hi_ref, base_lo_ref, A_ref, xb_ref, c0_ref, out_ref, *,
     # schedule-matrix kernel input: cumulative signed one-hots (batched)
     # or A-premultiplied signed columns (schedmat)
     if mode in ("batched", "schedmat"):
-        C0 = c0_ref[...]                             # (n_pad, Wu-1)
+        C0 = c0                                      # (n_pad, Wu-1)
         mid_idx = next((ix for ix, st in enumerate(sched) if st[2]), None)
 
     def macro_body(m, carry):
@@ -261,8 +263,29 @@ def _ryser_kernel(base_hi_ref, base_lo_ref, A_ref, xb_ref, c0_ref, out_ref, *,
         X, acc = jax.lax.fori_loop(0, M, macro_body, (X, acc0))
 
     hi, lo = _accum_value(acc, precision)
-    out_ref[0, 0] = jnp.sum(hi)
-    out_ref[0, 1] = jnp.sum(lo)
+    return jnp.sum(hi), jnp.sum(lo)
+
+
+def _ryser_kernel(base_hi_ref, base_lo_ref, A_ref, xb_ref, c0_ref, out_ref,
+                  **geom):
+    """Single-matrix kernel: grid = (num_blocks,); writes (1, 2) partials."""
+    dev_base = (base_hi_ref[0, 0].astype(jnp.uint32),
+                base_lo_ref[0, 0].astype(jnp.uint32))
+    hi, lo = _ryser_block(pl.program_id(0), A_ref[...], xb_ref[...],
+                          c0_ref[...], dev_base, **geom)
+    out_ref[0, 0] = hi
+    out_ref[0, 1] = lo
+
+
+def _ryser_kernel_batched(A_ref, xb_ref, c0_ref, out_ref, **geom):
+    """Batch-grid kernel: grid = (B, num_blocks); one launch covers the
+    whole stack.  Block b of the A/xb stacks is selected by the BlockSpec;
+    the chunk base is 0 (each matrix owns its full iteration space)."""
+    zero = jnp.uint32(0)
+    hi, lo = _ryser_block(pl.program_id(1), A_ref[0], xb_ref[0],
+                          c0_ref[...], (zero, zero), **geom)
+    out_ref[0, 0, 0] = hi
+    out_ref[0, 0, 1] = lo
 
 
 def ryser_pallas_call(A_pad, x_base_pad, dev_chunk_base, *,
@@ -312,8 +335,45 @@ def ryser_pallas_call(A_pad, x_base_pad, dev_chunk_base, *,
             pl.BlockSpec(c0.shape, lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
-        out_shape=(jax.ShapeDtypeStruct((num_blocks, 2), dtype, vma=vma)
-                   if vma is not None
-                   else jax.ShapeDtypeStruct((num_blocks, 2), dtype)),
+        out_shape=shape_dtype_struct((num_blocks, 2), dtype, vma=vma),
         interpret=interpret,
     )(base_hi, base_lo, A_pad, x_base_pad, c0)
+
+
+def ryser_pallas_call_batched(A_pads, x_base_pads, *,
+                              n: int, TB: int, C: int, Wu: int,
+                              num_blocks: int, precision: str = "dq_acc",
+                              mode: str = "batched", interpret: bool = True):
+    """Launch ONE kernel over a (B, n_pad, n_pad) stack: grid is
+    (batch, block), so a single ``pallas_call`` covers every matrix's full
+    2^{n-1} step space.  Returns (B, num_blocks, 2) (hi, lo) partials
+    (base g=0 terms NOT included).
+
+    ``schedmat`` mode premultiplies the schedule by A and is therefore
+    per-matrix; the batch grid shares one schedule input, so only the
+    A-independent ``baseline``/``batched`` modes are supported here.
+    """
+    if mode not in ("baseline", "batched"):
+        raise ValueError(f"batch grid supports baseline|batched, got {mode}")
+    B, n_pad, _ = A_pads.shape
+    dtype = A_pads.dtype
+    space = 1 << (n - 1)
+    sched = _signed_const_schedule(Wu)
+    c0 = jnp.asarray(_cumsig_host(sched, n_pad), dtype)
+
+    kernel = functools.partial(
+        _ryser_kernel_batched, n=n, n_pad=n_pad, TB=TB, C=C, Wu=Wu,
+        space=space, precision=precision, mode=mode, dtype=dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, num_blocks),
+        in_specs=[
+            pl.BlockSpec((1, n_pad, n_pad), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, n_pad, 1), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec(c0.shape, lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 2), lambda b, i: (b, i, 0)),
+        out_shape=shape_dtype_struct((B, num_blocks, 2), dtype),
+        interpret=interpret,
+    )(A_pads, x_base_pads, c0)

@@ -1,11 +1,17 @@
-"""Serving driver: batched prefill + greedy decode loop.
+"""Serving driver: LM decode loop + batched permanent serving.
 
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b \
         --prompt-len 64 --gen 32 --batch 4 [--reduced]
+    PYTHONPATH=src python -m repro.launch.serve --mode permanent \
+        --perm-n 10 --batch 32 --requests 256
 
-Builds the serve bundle (KV sharding policy chosen per arch/mesh), prefills
-a synthetic prompt batch, then decodes greedily.  Runnable on CPU with
-``--reduced``; on a real pod the same code paths serve the full configs.
+LM mode builds the serve bundle (KV sharding policy chosen per arch/mesh),
+prefills a synthetic prompt batch, then decodes greedily.  Permanent mode
+drains a synthetic request stream through ``engine.permanent_batch`` in
+batches, so compilation and dispatch are amortized across requests -- the
+throughput shape (perms/sec) the SUperman paper headlines.  Runnable on
+CPU with ``--reduced``; on a real pod the same code paths serve the full
+configs.
 """
 
 from __future__ import annotations
@@ -22,7 +28,7 @@ from ..models.model import ShapeCell, build
 from ..train.train_step import build_serve_steps
 from .mesh import make_local_mesh
 
-__all__ = ["serve_main", "run_serving"]
+__all__ = ["serve_main", "run_serving", "run_permanent_serving"]
 
 
 def run_serving(arch: str, *, prompt_len: int = 64, gen: int = 32,
@@ -97,15 +103,88 @@ def run_serving(arch: str, *, prompt_len: int = 64, gen: int = 32,
             "kv_policy": policy}
 
 
+def run_permanent_serving(*, n: int = 10, batch: int = 32,
+                          requests: int = 128, density: float = 1.0,
+                          precision: str = "dq_acc", backend: str = "jnp",
+                          seed: int = 0):
+    """Drain a synthetic permanent-request stream through the batch engine.
+
+    ``requests`` random n x n matrices (dense, or sparse when
+    ``density < 1``) are served in batches of ``batch`` via
+    ``engine.permanent_batch`` -- one compiled device program per bucket,
+    reused across batches, so steady-state cost is dispatch + compute
+    instead of per-request tracing.  Returns perms/sec and per-batch
+    latency stats; the first batch (compile) is reported separately.
+    """
+    from ..core import engine
+
+    if batch < 1 or requests < 1:
+        raise ValueError(f"need batch >= 1 and requests >= 1, got "
+                         f"batch={batch} requests={requests}")
+    rng = np.random.default_rng(seed)
+    if density < 1.0:
+        mats = [rng.uniform(0.5, 1.5, (n, n))
+                * (rng.uniform(0, 1, (n, n)) < density)
+                for _ in range(requests)]
+    else:
+        mats = [rng.uniform(-1, 1, (n, n)) for _ in range(requests)]
+
+    values = np.zeros(requests, dtype=np.complex128)
+    lat = []                     # (seconds, served requests) per batch
+    t_all = time.time()
+    for b0 in range(0, requests, batch):
+        chunk = mats[b0:b0 + batch]
+        nreq = len(chunk)
+        if nreq < batch:
+            # pad the ragged tail to the compiled batch shape -- a smaller
+            # stack would trace a fresh program for one final dispatch
+            chunk = chunk + [chunk[-1]] * (batch - nreq)
+        t0 = time.time()
+        vals = engine.permanent_batch(chunk, precision=precision,
+                                      backend=backend)
+        values[b0:b0 + nreq] = vals[:nreq]
+        lat.append((time.time() - t0, nreq))
+    total_s = time.time() - t_all
+    steady = lat[1:] if len(lat) > 1 else lat
+    steady_s = sum(s for s, _ in steady)
+    steady_n = sum(c for _, c in steady)
+    return {"values": np.real(values), "total_s": total_s,
+            "compile_batch_s": lat[0][0],
+            "steady_batch_s": steady_s / len(steady),
+            "perms_per_s": steady_n / steady_s if steady_s else 0.0,
+            "batches": len(lat)}
+
+
 def serve_main(argv=None) -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("lm", "permanent"), default="lm")
     ap.add_argument("--arch", choices=ARCH_IDS, default="starcoder2-3b")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--perm-n", type=int, default=10,
+                    help="permanent mode: matrix size")
+    ap.add_argument("--requests", type=int, default=128,
+                    help="permanent mode: request stream length")
+    ap.add_argument("--density", type=float, default=1.0,
+                    help="permanent mode: nnz density of request matrices")
+    ap.add_argument("--precision", default="dq_acc")
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"))
     args = ap.parse_args(argv)
+    if args.mode == "permanent":
+        jax.config.update("jax_enable_x64", True)
+        out = run_permanent_serving(
+            n=args.perm_n, batch=args.batch, requests=args.requests,
+            density=args.density, precision=args.precision,
+            backend=args.backend)
+        print(f"[serve] permanents: {args.requests} reqs x n={args.perm_n} "
+              f"batch={args.batch} backend={args.backend}")
+        print(f"[serve] compile batch {out['compile_batch_s']:.3f}s, steady "
+              f"{out['steady_batch_s'] * 1e3:.1f}ms/batch -> "
+              f"{out['perms_per_s']:.0f} perms/s")
+        return 0
     out = run_serving(args.arch, prompt_len=args.prompt_len, gen=args.gen,
                       batch=args.batch, reduced=args.reduced)
     print(f"[serve] kv_policy={out['kv_policy']} "

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..utils.compat import shard_map
 from .common import ModelCfg, ShapeInit, init_tree
 from . import layers as L
 from . import actx
@@ -334,7 +335,7 @@ def _decode_attn_sharded(q, kc, vc, k_new, v_new, pos, cfg, ctx: SeqShardCtx):
         return out, kc2, vc2
 
     spec_kv = P_(dp_axes, ctx.axis, None, None)
-    out, kc2, vc2 = jax.shard_map(
+    out, kc2, vc2 = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P_(dp_axes, None, None, None), spec_kv, spec_kv,
                   P_(dp_axes, None, None, None),

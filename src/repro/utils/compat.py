@@ -1,0 +1,56 @@
+"""JAX cross-version compatibility shims.
+
+The repo targets the modern JAX API surface (``jax.shard_map``, varying
+manual axes on ``ShapeDtypeStruct``), but must also run on JAX 0.4.x where
+``shard_map`` lives in ``jax.experimental.shard_map`` and takes
+``check_rep`` instead of ``check_vma`` (the kwarg was renamed when the
+rep-typing system became vma-typing).  Every ``shard_map`` call site in
+the repo goes through :func:`shard_map` below so the choice is made in
+exactly one place.
+
+Exports:
+
+* ``shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+  -- dispatches to ``jax.shard_map`` when present, else to the legacy
+  ``jax.experimental.shard_map.shard_map`` with ``check_vma`` translated
+  to ``check_rep``.
+* ``shape_dtype_struct(shape, dtype, vma=None)`` -- ``ShapeDtypeStruct``
+  that forwards ``vma`` (varying manual axes) only on JAX versions whose
+  constructor accepts it; older versions simply don't track vma, which is
+  equivalent to running with ``check_vma=False``.
+* ``HAS_NATIVE_SHARD_MAP`` -- True when ``jax.shard_map`` exists.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "shape_dtype_struct", "HAS_NATIVE_SHARD_MAP"]
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-portable ``shard_map``.
+
+    Mirrors the modern ``jax.shard_map`` keyword API.  On JAX 0.4.x the
+    call is routed to ``jax.experimental.shard_map.shard_map`` and
+    ``check_vma`` becomes ``check_rep`` (same semantics: disable the
+    per-output replication/vma typing check).
+    """
+    if HAS_NATIVE_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma)
+
+
+def shape_dtype_struct(shape, dtype, vma=None):
+    """``jax.ShapeDtypeStruct`` forwarding ``vma`` only where supported."""
+    if vma is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    try:
+        return jax.ShapeDtypeStruct(shape, dtype, vma=vma)
+    except TypeError:  # JAX 0.4.x: no vma typing on avals
+        return jax.ShapeDtypeStruct(shape, dtype)

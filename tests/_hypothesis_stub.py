@@ -1,0 +1,178 @@
+"""Offline fallback for the ``hypothesis`` property-testing library.
+
+The property-test modules import ``hypothesis`` at module scope; on
+machines without it (offline CI images) they error at *collection*,
+taking the whole tier-1 run down.  This stub implements the tiny slice
+of the hypothesis API the test-suite actually uses -- ``given``,
+``settings``, ``assume``, ``strategies.integers/floats`` and
+``hypothesis.extra.numpy.arrays`` -- replaying a *deterministic* set of
+examples per test (range boundaries first, then seeded pseudo-random
+draws), so the properties still get exercised on fixed inputs.
+
+``tests/conftest.py`` calls :func:`install` only when the real library
+is missing; when hypothesis is installed this module is inert.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import sys
+import types
+import zlib
+
+import numpy as np
+
+# Cap on replayed examples per test (the real library's max_examples is
+# honored up to this bound; property bodies here can be expensive).
+MAX_EXAMPLES = int(os.environ.get("HYPOTHESIS_STUB_MAX_EXAMPLES", "10"))
+
+
+class _Rejected(Exception):
+    """Raised by assume(False); the current example is skipped."""
+
+
+def assume(condition):
+    if not condition:
+        raise _Rejected
+    return True
+
+
+class _Strategy:
+    """A deterministic example source: fixed boundary values, then seeded
+    pseudo-random draws."""
+
+    def __init__(self, boundary, draw):
+        self._boundary = boundary
+        self._draw = draw
+
+    def example(self, rnd: random.Random, idx: int):
+        if idx < len(self._boundary):
+            return self._boundary[idx]
+        return self._draw(rnd)
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2 ** 62) if min_value is None else int(min_value)
+    hi = (2 ** 62) - 1 if max_value is None else int(max_value)
+    boundary = [lo, hi, (lo + hi) // 2]
+    if lo <= 0 <= hi:
+        boundary.append(0)
+    if lo <= 1 <= hi:
+        boundary.append(1)
+    seen = set()
+    boundary = [b for b in boundary if not (b in seen or seen.add(b))]
+    return _Strategy(boundary, lambda rnd: rnd.randint(lo, hi))
+
+
+def floats(min_value=None, max_value=None, *, allow_nan=None,
+           allow_infinity=None, allow_subnormal=None, width=64):
+    lo = -1e308 if min_value is None else float(min_value)
+    hi = 1e308 if max_value is None else float(max_value)
+    boundary = [lo, hi, (lo + hi) / 2.0]
+    for v in (0.0, 1.0, -1.0, 0.5):
+        if lo <= v <= hi:
+            boundary.append(v)
+    seen = set()
+    boundary = [b for b in boundary if not (b in seen or seen.add(b))]
+
+    def draw(rnd: random.Random):
+        if rnd.random() < 0.5:
+            return rnd.uniform(lo, hi)
+        # magnitude-scaled draw: exercises exponents a uniform draw over a
+        # wide range would never hit (all draws are normalized floats)
+        span = max(abs(lo), abs(hi), 1.0)
+        mag = 10.0 ** rnd.uniform(-12, np.log10(span))
+        val = mag if rnd.random() < 0.5 else -mag
+        return min(max(val, lo), hi)
+
+    return _Strategy(boundary, draw)
+
+
+def _np_arrays(dtype, shape, *, elements=None, fill=None, unique=False):
+    """hypothesis.extra.numpy.arrays lookalike (elements strategy only)."""
+    dtype = np.dtype(dtype)
+    shape = tuple(shape) if not isinstance(shape, int) else (shape,)
+    size = int(np.prod(shape)) if shape else 1
+    elems = elements if elements is not None else floats(-1.0, 1.0)
+
+    def draw(rnd: random.Random):
+        flat = [elems.example(rnd, len(elems._boundary) + i + rnd.randrange(4))
+                for i in range(size)]
+        return np.asarray(flat, dtype=dtype).reshape(shape)
+
+    # boundary example: all entries at each boundary value of the elements
+    boundary = [np.full(shape, b, dtype=dtype) for b in elems._boundary[:2]]
+    return _Strategy(boundary, draw)
+
+
+def settings(*args, max_examples=None, deadline=None, **kwargs):
+    """Decorator recording max_examples; composes with given() either way."""
+    def deco(func):
+        func._hyp_settings = {"max_examples": max_examples}
+        return func
+    if args and callable(args[0]):  # bare @settings
+        return deco(args[0])
+    return deco
+
+
+def given(*strategies_args, **strategies_kwargs):
+    if strategies_kwargs:
+        raise NotImplementedError(
+            "hypothesis stub supports positional @given strategies only")
+
+    def deco(func):
+        def wrapper():
+            cfg = getattr(wrapper, "_hyp_settings", None) \
+                or getattr(func, "_hyp_settings", None) or {}
+            want = cfg.get("max_examples") or MAX_EXAMPLES
+            want = min(want, MAX_EXAMPLES)
+            rnd = random.Random(zlib.crc32(func.__qualname__.encode()))
+            ran = 0
+            for idx in range(want * 8):  # head-room for assume() rejections
+                if ran >= want:
+                    break
+                try:
+                    args = [s.example(rnd, idx) for s in strategies_args]
+                    func(*args)
+                    ran += 1
+                except _Rejected:
+                    continue
+            assert ran > 0, f"all stub examples rejected for {func.__name__}"
+
+        wrapper.__name__ = func.__name__
+        wrapper.__qualname__ = func.__qualname__
+        wrapper.__doc__ = func.__doc__
+        wrapper.__module__ = func.__module__
+        wrapper._hyp_inner = func
+        return wrapper
+
+    return deco
+
+
+def install():
+    """Register stub ``hypothesis`` modules in sys.modules."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = "offline stub (tests/_hypothesis_stub.py)"
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    hyp.strategies = st
+
+    extra = types.ModuleType("hypothesis.extra")
+    hnp = types.ModuleType("hypothesis.extra.numpy")
+    hnp.arrays = _np_arrays
+    extra.numpy = hnp
+    hyp.extra = extra
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+    sys.modules["hypothesis.extra"] = extra
+    sys.modules["hypothesis.extra.numpy"] = hnp

@@ -3,6 +3,16 @@ import sys
 
 # Make src/ importable without installation.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# Offline fallback: the property-test modules import hypothesis at module
+# scope; without this shim they error at collection on machines where the
+# library can't be installed.  The stub replays deterministic examples.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+    _hypothesis_stub.install()
 
 # f64 is required for the permanent engines' precision semantics on CPU.
 # NOTE: device count is NOT forced here -- smoke tests must see 1 device;

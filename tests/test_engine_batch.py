@@ -1,0 +1,193 @@
+"""Batched permanent engine vs naive oracle and the scalar engine.
+
+Covers the tentpole paths: vmapped chunked Ryser, batched SpaRyser,
+batch-grid Pallas kernel, and the bucketed ``permanent_batch`` dispatcher
+(real / complex / binary stacks, mixed dense+sparse in one call, ragged
+sizes, batch-of-one equivalence).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engine, oracle, ryser, sparyser
+from repro.kernels import ops
+
+RNG = np.random.default_rng(20260725)
+
+
+def _rand_sparse(n, density, rng=RNG):
+    return rng.uniform(0.5, 1.5, (n, n)) * (rng.uniform(0, 1, (n, n)) < density)
+
+
+# ---------------------------------------------------------------------------
+# core.ryser.perm_ryser_batched
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,B", [(1, 3), (2, 4), (5, 6), (8, 8), (10, 3)])
+def test_ryser_batched_matches_oracle(n, B):
+    As = RNG.uniform(-1, 1, (B, n, n))
+    got = np.asarray(ryser.perm_ryser_batched(jnp.asarray(As), num_chunks=64))
+    ref = np.array([oracle.perm_ryser_exact(A) for A in As])
+    np.testing.assert_allclose(got, ref, rtol=1e-10, atol=1e-12)
+
+
+def test_ryser_batched_equals_scalar_chunked():
+    As = RNG.uniform(-1, 1, (5, 9, 9))
+    got = np.asarray(ryser.perm_ryser_batched(jnp.asarray(As), num_chunks=32))
+    for b in range(5):
+        one = float(ryser.perm_ryser_chunked(jnp.asarray(As[b]),
+                                             num_chunks=32))
+        assert got[b] == one, "batched must reuse the scalar chunk body"
+
+
+@pytest.mark.parametrize("precision", ["dd", "dq_fast", "dq_acc", "kahan"])
+def test_ryser_batched_precision_modes(precision):
+    As = RNG.uniform(-1, 1, (4, 8, 8))
+    got = np.asarray(ryser.perm_ryser_batched(jnp.asarray(As), num_chunks=16,
+                                              precision=precision))
+    ref = np.array([oracle.perm_ryser_exact(A) for A in As])
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-13)
+
+
+def test_ryser_batched_complex_stack():
+    As = RNG.uniform(-1, 1, (4, 7, 7)) + 1j * RNG.uniform(-1, 1, (4, 7, 7))
+    got = np.asarray(ryser.perm_ryser_batched(jnp.asarray(As)))
+    ref = np.array([oracle.perm_ryser_exact(A) for A in As])
+    np.testing.assert_allclose(got, ref, rtol=1e-9)
+
+
+def test_ryser_batched_rejects_non_stack():
+    with pytest.raises(ValueError):
+        ryser.perm_ryser_batched(jnp.zeros((3, 4, 5)))
+
+
+# ---------------------------------------------------------------------------
+# core.sparyser.perm_sparyser_batched
+# ---------------------------------------------------------------------------
+
+def test_sparyser_batched_matches_oracle():
+    mats = [_rand_sparse(9, 0.25) for _ in range(6)]
+    sps = [sparyser.SparseMatrix.from_dense(M) for M in mats]
+    got = sparyser.perm_sparyser_batched(sps, num_chunks=64)
+    ref = np.array([oracle.perm_ryser_exact(M) for M in mats])
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-12)
+
+
+def test_sparyser_batched_mixed_degrees_pad_to_bucket_max():
+    # very different column degrees in one bucket: padding must stay inert
+    mats = [_rand_sparse(8, d) for d in (0.15, 0.5, 0.9)]
+    sps = [sparyser.SparseMatrix.from_dense(M) for M in mats]
+    got = sparyser.perm_sparyser_batched(sps, num_chunks=16)
+    ref = np.array([oracle.perm_ryser_exact(M) for M in mats])
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# kernels.ops.permanent_pallas_batched (batch-grid kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["baseline", "batched"])
+def test_pallas_batched_matches_oracle(mode):
+    As = RNG.uniform(-1, 1, (5, 8, 8))
+    got = np.asarray(ops.permanent_pallas_batched(
+        jnp.asarray(As), mode=mode, lanes=8, steps_per_chunk=8, window=4))
+    ref = np.array([oracle.perm_ryser_exact(A) for A in As])
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-12)
+
+
+def test_pallas_batched_equals_scalar_kernel():
+    As = RNG.uniform(-1, 1, (3, 9, 9))
+    got = np.asarray(ops.permanent_pallas_batched(
+        jnp.asarray(As), lanes=8, steps_per_chunk=8, window=4))
+    for b in range(3):
+        one = float(ops.permanent_pallas(As[b], mode="batched", lanes=8,
+                                         steps_per_chunk=8, window=4))
+        np.testing.assert_allclose(got[b], one, rtol=1e-12)
+
+
+def test_pallas_batched_rejects_complex_and_schedmat():
+    Cs = jnp.asarray(RNG.uniform(-1, 1, (2, 5, 5)) + 1j)
+    with pytest.raises(ValueError):
+        ops.permanent_pallas_batched(Cs)
+    with pytest.raises(ValueError):
+        ops.permanent_pallas_batched(jnp.zeros((2, 5, 5)), mode="schedmat")
+
+
+# ---------------------------------------------------------------------------
+# engine.permanent_batch (the public bucketed dispatcher)
+# ---------------------------------------------------------------------------
+
+def test_batch_real_stack_matches_scalar_engine():
+    As = RNG.uniform(-1, 1, (12, 8, 8))
+    got = engine.permanent_batch(As)
+    ref = np.array([engine.permanent(A) for A in As])
+    assert got.dtype == np.float64
+    np.testing.assert_allclose(got, ref, rtol=1e-10)
+
+
+def test_batch_complex_stack():
+    Cs = [RNG.normal(size=(7, 7)) + 1j * RNG.normal(size=(7, 7))
+          for _ in range(5)]
+    got = engine.permanent_batch(Cs)
+    ref = np.array([engine.permanent(C) for C in Cs])
+    assert got.dtype == np.complex128
+    np.testing.assert_allclose(got, ref, rtol=1e-9)
+
+
+def test_batch_binary_stack_exact_integers():
+    Bs = (RNG.uniform(0, 1, (6, 10, 10)) < 0.5).astype(np.int64)
+    got = engine.permanent_batch(Bs)
+    ref = np.array([float(oracle.perm_bigint(b)) for b in Bs])
+    np.testing.assert_allclose(np.round(got), ref)
+
+
+def test_batch_mixed_density_one_call():
+    # dense + sparse dispatch inside a single permanent_batch call
+    mats = [RNG.uniform(-1, 1, (8, 8)) for _ in range(4)]
+    mats += [_rand_sparse(9, 0.22) for _ in range(4)]
+    got, reports = engine.permanent_batch(mats, return_report=True)
+    ref = np.array([engine.permanent(M) for M in mats])
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-12)
+    tags = ",".join(t for r in reports for t in r.dispatch)
+    assert "dense_batch" in tags
+
+
+def test_batch_of_one_equals_scalar():
+    A = RNG.uniform(-1, 1, (10, 10))
+    assert engine.permanent_batch([A])[0] == engine.permanent(A)
+    Ssp = _rand_sparse(9, 0.2)
+    np.testing.assert_allclose(engine.permanent_batch([Ssp])[0],
+                               engine.permanent(Ssp), rtol=1e-12)
+
+
+def test_batch_ragged_sizes_fall_back_to_scalar():
+    mats = [RNG.uniform(-1, 1, (n, n)) for n in (4, 6, 8, 8, 1, 2)]
+    got = engine.permanent_batch(mats)
+    ref = np.array([engine.permanent(M) for M in mats])
+    np.testing.assert_allclose(got, ref, rtol=1e-10)
+
+
+def test_batch_pallas_backend():
+    As = RNG.uniform(-1, 1, (6, 8, 8))
+    got = engine.permanent_batch(As, backend="pallas", preprocess=False)
+    ref = np.array([engine.permanent(A, backend="pallas", preprocess=False)
+                    for A in As])
+    np.testing.assert_allclose(got, ref, rtol=1e-9)
+
+
+def test_batch_dm_zeroed_matrix_gives_zero():
+    # a matrix with an empty row has permanent 0; DM must short-circuit it
+    A = RNG.uniform(-1, 1, (6, 6)) * (RNG.uniform(0, 1, (6, 6)) < 0.3)
+    A[2, :] = 0.0
+    mats = [A, RNG.uniform(-1, 1, (6, 6))]
+    got = engine.permanent_batch(mats)
+    assert got[0] == 0.0
+    np.testing.assert_allclose(got[1], engine.permanent(mats[1]), rtol=1e-10)
+
+
+def test_batch_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        engine.permanent_batch([np.zeros((3, 4))])
+    with pytest.raises(ValueError):
+        engine.permanent_batch(np.zeros((2, 3, 3)), backend="distributed")
