@@ -41,7 +41,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table3,table4,table5,fig7,batch,"
-                         "roofline")
+                         "solver_cache,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="smaller n (CI-sized)")
     ap.add_argument("--check", action="store_true",
@@ -56,7 +56,8 @@ def main(argv=None) -> int:
     jax.config.update("jax_enable_x64", True)
 
     from . import (batch_throughput, fig7_scaling, roofline_report,
-                   table3_precision, table4_dense, table5_sparse)
+                   solver_cache, table3_precision, table4_dense,
+                   table5_sparse)
 
     t0 = time.time()
     if not only or "batch" in only:
@@ -64,6 +65,14 @@ def main(argv=None) -> int:
             n=8, batch_sizes=(1, 8, 64) if args.fast else
             batch_throughput.BATCH_SIZES)
         print_rows("batch_throughput", rows)
+    if not only or "solver_cache" in only:
+        rows = solver_cache.run(
+            n=12, requests=256, unique=8 if args.fast else 16,
+            repeats=1 if args.fast else 3)
+        print_rows("solver_cache", rows)
+        if args.check and not solver_cache.check(rows):
+            print("# solver_cache gate RED -- cache speedup below 2x")
+            return 1
     if not only or "table3" in only:
         if args.fast:
             print_rows("table3", table3_precision.run(ns=(12, 16)))

@@ -2,10 +2,15 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Covers the public API surface in ~80 lines: dense/sparse/complex
-permanents, precision modes, preprocessing, the Pallas TPU kernel
-(interpret-mode on CPU), batched throughput via ``permanent_batch``,
-and exactness checks against closed forms.
+The public API is the plan/execute lifecycle of ``PermanentSolver``:
+``solver.plan(A)`` reifies the paper's Alg.-4 dispatch (type sniff ->
+DM/FM preprocessing -> dense/sparse routing -> size bucketing) as an
+inspectable, serializable ``ExecutionPlan``; ``solver.execute(plan)``
+dispatches it through the backend registry (jnp / pallas / distributed)
+and the solver's content-hash result cache; ``solver.submit()`` /
+``flush()`` run the async request queue serving uses.  The legacy
+``engine.permanent`` / ``permanent_batch`` free functions remain as
+stateless one-shot wrappers.
 """
 
 import jax
@@ -16,41 +21,67 @@ import numpy as np  # noqa: E402
 
 from repro.core import engine  # noqa: E402
 from repro.core.oracle import all_ones_permanent  # noqa: E402
+from repro.core.solver import PermanentSolver, SolverConfig  # noqa: E402
 
 rng = np.random.default_rng(0)
 
-# --- 1. dense real matrix -------------------------------------------------
+# --- 1. the plan/execute lifecycle -----------------------------------------
+solver = PermanentSolver(SolverConfig(precision="dq_acc", backend="jnp"))
+
 A = rng.uniform(-1, 1, (16, 16))
-val = engine.permanent(A)
+plan = solver.plan(A)               # pure planning: no device work yet
+print(f"plan: {plan.summary()}")
+val = solver.execute(plan)          # dispatch through the backend registry
 print(f"perm(random 16x16)            = {val:+.12e}")
 
-# --- 2. precision modes (paper Table 3) -----------------------------------
-B = np.full((16, 16), 0.5)
-exact = all_ones_permanent(16, 0.5)
-for mode in ("dd", "dq_acc", "kahan"):
-    v = engine.permanent(B, precision=mode)
-    print(f"perm(0.5 * ones) [{mode:7s}]   rel.err = "
-          f"{abs(v - exact) / exact:.2e}")
-
-# --- 3. sparse matrix with preprocessing (paper Sec. 4) -------------------
+# --- 2. plans are inspectable and serializable -----------------------------
 S = rng.uniform(0.5, 1.5, (20, 20)) * (rng.uniform(0, 1, (20, 20)) < 0.25)
-v, report = engine.permanent(S, return_report=True)
+splan = solver.plan(S)
+blob = splan.to_json()              # leaves, routes, buckets, cost estimate
+print(f"sparse 20x20 plan: {len(blob['leaves'])} leaves, "
+      f"{len(blob['buckets'])} buckets, "
+      f"est {blob['estimated_steps']:.3g} Ryser steps")
+v, report = solver.execute(splan, return_report=True)
 print(f"perm(sparse 20x20)            = {v:+.12e}")
 print(f"  DM removed {report.dm_removed} nonzeros; "
       f"Forbert-Marx left {report.fm_leaves} leaves "
       f"(sizes {report.leaf_sizes[:5]} ...)")
 
-# --- 4. complex matrix (boson-sampling style) ------------------------------
-C = rng.normal(size=(12, 12)) + 1j * rng.normal(size=(12, 12))
-v = engine.permanent(C)
-print(f"perm(complex 12x12)           = {v:+.6e}")
+# --- 3. the result cache: repeated submatrices skip the device -------------
+# Boson-sampling pipelines resample overlapping submatrices; the solver
+# memoizes post-DM/FM leaves by content hash.
+solver.execute(solver.plan(A))      # same matrix again -> pure cache hit
+cs = solver.stats()["cache"]
+print(f"cache after re-solve: {cs['hits']} hits / {cs['misses']} misses "
+      f"(hit rate {cs['hit_rate']:.0%})")
 
-# --- 5. the Pallas TPU kernel (interpret-mode on CPU) ----------------------
+# --- 4. the async request queue: serving traffic ---------------------------
+# submit() accumulates requests in size buckets; a bucket flushes when it
+# reaches queue_max_batch or its oldest request ages past the deadline.
+qsolver = PermanentSolver(SolverConfig(queue_max_batch=4,
+                                       queue_max_delay_s=0.5))
+reqs = [qsolver.submit(rng.uniform(-1, 1, (8, 8))) for _ in range(10)]
+qsolver.flush()                     # drain the ragged tail
+print(f"queued 10 requests -> {qsolver.flushes} batched flushes; "
+      f"first value {reqs[0].result():+.6e}")
+
+# --- 5. precision modes (paper Table 3) -----------------------------------
+B = np.full((16, 16), 0.5)
+exact = all_ones_permanent(16, 0.5)
+for mode in ("dd", "dq_acc", "kahan"):
+    psolver = PermanentSolver(precision=mode)
+    v = psolver.execute(psolver.plan(B))
+    print(f"perm(0.5 * ones) [{mode:7s}]   rel.err = "
+          f"{abs(v - exact) / exact:.2e}")
+
+# --- 6. complex matrices and the Pallas TPU kernel -------------------------
+C = rng.normal(size=(12, 12)) + 1j * rng.normal(size=(12, 12))
+print(f"perm(complex 12x12)           = {engine.permanent(C):+.6e}")
 v_pallas = engine.permanent(A, backend="pallas", preprocess=False)
 print(f"pallas vs jnp                 = {v_pallas:+.12e} "
       f"(delta {abs(v_pallas - val):.2e})")
 
-# --- 6. 0/1 matrices count perfect matchings -------------------------------
+# --- 7. legacy one-shot wrappers + batched stacks --------------------------
 M = np.array([[1, 1, 0, 0],
               [1, 1, 1, 0],
               [0, 1, 1, 1],
@@ -58,11 +89,6 @@ M = np.array([[1, 1, 0, 0],
 print(f"perfect matchings of the path-ish graph = "
       f"{round(engine.permanent(M))}")
 
-# --- 7. batched stacks: one device program per size bucket -----------------
-# A boson-sampling-style workload asks for permanents of MANY submatrices;
-# permanent_batch buckets same-size leaves after DM/FM preprocessing and
-# dispatches each bucket as a single vmapped program (sizes may be ragged,
-# dense and sparse can mix in one call).
 import time  # noqa: E402
 
 stack = rng.uniform(-1, 1, (64, 8, 8))

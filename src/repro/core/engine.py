@@ -1,106 +1,44 @@
-"""SUperman engine: the paper's end-to-end dispatch (Alg. 4) as a library.
+"""SUperman engine: legacy free-function facade over the plan/execute API.
 
-``permanent(A, ...)`` is the public scalar entry point.  Pipeline:
+The Alg.-4 pipeline (type sniff -> DM -> FM -> dense/sparse dispatch ->
+precision/backend) now lives in the plan/execute split:
 
-  1. type sniffing        real / complex / binary-integer
-  2. DM elimination       (Sec. 4.1, optional)   -- may zero the matrix
-  3. Forbert-Marx         (Sec. 4.2, optional)   -- leaves with minNnz > 4
-  4. per-leaf dispatch    density >= 30% -> dense ParRyser;
-                          sparsity > 70% -> ParSpaRyser     (Alg. 4 l.12-15)
-  5. precision mode       dd / dq_fast / dq_acc / qq / kahan (Sec. 5)
-  6. backend              "jnp" chunked engines, "pallas" kernel, or
-                          "distributed" (mesh shard_map, core.distributed)
+* ``core.planner``  -- ``SolverConfig`` + ``build_plan`` reify dispatch
+  decisions as an inspectable, serializable ``ExecutionPlan``;
+* ``core.executor`` -- backend strategy registry (``jnp`` / ``pallas`` /
+  ``distributed``) + the bucket dispatcher;
+* ``core.cache``    -- content-hash result cache on post-DM/FM leaves;
+* ``core.solver``   -- the stateful ``PermanentSolver`` session (plan /
+  execute / submit / flush).
 
-``permanent_batch(As, ...)`` is the batched entry point: it runs the same
-Alg.-4 pipeline over a whole request stack, but instead of one host
-round-trip per matrix it sniffs the dtype once, preprocesses every matrix,
-*buckets the resulting leaves by size*, and dispatches each bucket through
-one vmapped device program (``ryser.perm_ryser_batched`` /
-``sparyser.perm_sparyser_batched`` / the batch-grid Pallas kernel) --
-ragged stragglers (singleton buckets) fall back to the scalar path.  This
-is the throughput shape serving needs: boson-sampling pipelines ask for
-permanents of thousands of submatrices, and the paper's headline number is
-perms/sec, not per-call latency.
-
-Complex matrices run the dense path with native complex dtype (twofloat
-compensation is applied per real/imaginary component by the complex-safe
-accumulators; `qq` is unsupported for complex and falls back to kahan).
+``permanent(A, ...)`` and ``permanent_batch(As, ...)`` remain the
+drop-in, stateless entry points: each call builds a one-shot plan and
+executes it uncached, preserving the historical kwargs, return types,
+report tags and numerics exactly.  New code that wants plan inspection,
+cached re-execution, or the async request queue should hold a
+``PermanentSolver`` instead.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Any
 
 import numpy as np
 
-from . import decompose as D
-from . import ryser as R
-from . import sparyser as S
+from .executor import execute_plan
+from .planner import (DENSITY_SWITCH, PermanentReport, SolverConfig,
+                      build_plan)
+from .solver import PermanentSolver
 
 __all__ = ["permanent", "permanent_batch", "PermanentReport",
-           "DENSITY_SWITCH"]
-
-# Alg. 4: dense kernel when nonzero density >= 30%
-DENSITY_SWITCH = 0.30
+           "PermanentSolver", "SolverConfig", "DENSITY_SWITCH"]
 
 
-@dataclass
-class PermanentReport:
-    """Everything the engine did, for logging / EXPERIMENTS.md."""
-    value: complex | float = 0.0
-    n: int = 0
-    nnz: int = 0
-    density: float = 1.0
-    dm_removed: int = 0
-    fm_leaves: int = 0
-    leaf_sizes: list[int] = field(default_factory=list)
-    dispatch: list[str] = field(default_factory=list)
-    precision: str = "dq_acc"
-    backend: str = "jnp"
-
-
-def _leaf_value(M: np.ndarray, precision: str, num_chunks: int,
-                backend: str, report: PermanentReport,
-                distributed_ctx: Any | None):
-    n = M.shape[0]
-    density = float((M != 0).sum()) / max(1, n * n)
-    if n <= 2 or density >= DENSITY_SWITCH:
-        report.dispatch.append(f"dense(n={n})")
-        if backend == "pallas" and n >= 4 and not np.iscomplexobj(M):
-            from ..kernels import ops as K
-            return complex(K.permanent_pallas(M, precision=precision)).real
-        if backend == "distributed" and distributed_ctx is not None:
-            return distributed_ctx.permanent(M, precision=precision)
-        val = R.perm_ryser_chunked(M, num_chunks=num_chunks,
-                                   precision=precision)
-        return np.asarray(val).item()
-    report.dispatch.append(f"sparse(n={n})")
-    sp = S.SparseMatrix.from_dense(M)
-    return S.perm_sparyser_chunked(sp, num_chunks=num_chunks,
-                                   precision=precision)
-
-
-def _preprocess_leaves(work: np.ndarray, report: PermanentReport,
-                       do_dm: bool, do_fm: bool):
-    """DM elimination + Forbert-Marx on one matrix (Sec. 4).
-
-    Returns the leaf list; [] when DM zeroed the matrix (perm == 0).
-    """
-    n = work.shape[0]
-    if do_dm and report.density < 0.5 and n >= 3:
-        work, removed = D.dm_eliminate(work)
-        report.dm_removed = removed
-        if not work.any():
-            report.fm_leaves = 0
-            return []
-    if do_fm and n >= 3:
-        leaves = D.fm_decompose(work)
-    else:
-        leaves = [D.Leaf(1.0, work)]
-    report.fm_leaves = len(leaves)
-    report.leaf_sizes = [l.matrix.shape[0] for l in leaves]
-    return leaves
+def _config(precision: str, preprocess: bool, dm: bool | None,
+            fm: bool | None, num_chunks: int, backend: str) -> SolverConfig:
+    return SolverConfig(precision=precision, backend=backend,
+                        preprocess=preprocess, dm=dm, fm=fm,
+                        num_chunks=num_chunks, cache=False)
 
 
 def permanent(A, *, precision: str = "dq_acc", preprocess: bool = True,
@@ -125,32 +63,12 @@ def permanent(A, *, precision: str = "dq_acc", preprocess: bool = True,
     A = np.asarray(A)
     if A.ndim != 2 or A.shape[0] != A.shape[1]:
         raise ValueError(f"square matrix required, got {A.shape}")
-    n = A.shape[0]
-    is_complex = np.iscomplexobj(A)
-    if is_complex and precision == "qq":
-        precision = "kahan"
-    work = A.astype(np.complex128 if is_complex else np.float64)
-
-    report = PermanentReport(n=n, nnz=int((work != 0).sum()),
-                             precision=precision, backend=backend)
-    report.density = report.nnz / max(1, n * n)
-
-    do_dm = preprocess if dm is None else dm
-    do_fm = preprocess if fm is None else fm
-
-    leaves = _preprocess_leaves(work, report, do_dm, do_fm)
-    if not leaves:
-        report.value = 0.0 + 0.0j if is_complex else 0.0
-        return (report.value, report) if return_report else report.value
-
-    total = 0.0 + 0.0j if is_complex else 0.0
-    for leaf in leaves:
-        if leaf.matrix.shape == (1, 1) and leaf.matrix[0, 0] == 1:
-            total += leaf.coef
-            continue
-        total += leaf.coef * _leaf_value(leaf.matrix, precision, num_chunks,
-                                         backend, report, distributed_ctx)
-    report.value = total if is_complex else float(np.real(total))
+    cfg = _config(precision, preprocess, dm, fm, num_chunks, backend)
+    plan = build_plan([A], cfg, batched=False)
+    totals, reports, _ = execute_plan(plan, distributed_ctx=distributed_ctx)
+    report = reports[0]
+    report.value = complex(totals[0]) if plan.is_complex \
+        else float(np.real(totals[0]))
     return (report.value, report) if return_report else report.value
 
 
@@ -160,10 +78,9 @@ def permanent_batch(As, *, precision: str = "dq_acc", preprocess: bool = True,
                     return_report: bool = False) -> np.ndarray:
     """Compute perm(A) for a whole stack of matrices in bucketed batches.
 
-    The batched Alg.-4 dispatcher: the paper's pipeline (type sniff -> DM ->
-    FM -> dense/sparse dispatch) runs once over the full request stack, and
-    every group of same-size leaves becomes ONE vmapped device program
-    instead of a host round-trip per matrix:
+    The batched Alg.-4 dispatcher: one plan over the full request stack,
+    every group of same-size leaves ONE vmapped device program instead of
+    a host round-trip per matrix:
 
       * dtype is sniffed once for the whole batch (any complex entry
         promotes the batch to complex128; ``qq`` then falls back to kahan
@@ -173,7 +90,8 @@ def permanent_batch(As, *, precision: str = "dq_acc", preprocess: bool = True,
         dense/sparse route, same DENSITY_SWITCH rule as ``permanent``);
       * dense buckets run ``ryser.perm_ryser_batched`` (backend="jnp") or
         the batch-grid Pallas kernel (backend="pallas", real only --
-        complex buckets always take the vmapped jnp path);
+        complex buckets fall back to the vmapped jnp path and report the
+        downgrade as ``dense_batch(...,pallas->jnp)``);
       * sparse buckets run ``sparyser.perm_sparyser_batched`` (padded-CCS
         stacks, one jit per (n, maxdeg) bucket);
       * ragged stragglers -- buckets holding a single leaf -- fall back to
@@ -197,77 +115,10 @@ def permanent_batch(As, *, precision: str = "dq_acc", preprocess: bool = True,
     for M in mats:
         if M.ndim != 2 or M.shape[0] != M.shape[1]:
             raise ValueError(f"square matrices required, got {M.shape}")
-    B = len(mats)
-    is_complex = any(np.iscomplexobj(M) for M in mats)
-    if is_complex and precision == "qq":
-        precision = "kahan"
-    dtype = np.complex128 if is_complex else np.float64
-    do_dm = preprocess if dm is None else dm
-    do_fm = preprocess if fm is None else fm
-
-    totals = np.zeros(B, dtype=np.complex128)
-    reports: list[PermanentReport] = []
-    dense_buckets: dict[int, list] = {}   # n -> [(owner, coef, matrix)]
-    sparse_buckets: dict[int, list] = {}
-
-    for i, M in enumerate(mats):
-        n = M.shape[0]
-        work = M.astype(dtype)
-        report = PermanentReport(n=n, nnz=int((work != 0).sum()),
-                                 precision=precision, backend=backend)
-        report.density = report.nnz / max(1, n * n)
-        reports.append(report)
-        for leaf in _preprocess_leaves(work, report, do_dm, do_fm):
-            m = leaf.matrix
-            ln = m.shape[0]
-            if m.shape == (1, 1) and m[0, 0] == 1:
-                totals[i] += leaf.coef
-                continue
-            if ln <= 2:
-                report.dispatch.append(f"dense(n={ln})")
-                v = m[0, 0] if ln == 1 else \
-                    m[0, 0] * m[1, 1] + m[0, 1] * m[1, 0]
-                totals[i] += leaf.coef * v
-                continue
-            density = float((m != 0).sum()) / (ln * ln)
-            bucket = dense_buckets if density >= DENSITY_SWITCH \
-                else sparse_buckets
-            bucket.setdefault(ln, []).append((i, leaf.coef, m))
-
-    for ln, items in sorted(dense_buckets.items()):
-        if len(items) == 1:                      # ragged straggler: scalar
-            i, coef, m = items[0]
-            totals[i] += coef * complex(_leaf_value(
-                m, precision, num_chunks, backend, reports[i], None))
-            continue
-        tag = f"dense_batch(n={ln},b={len(items)})"
-        stack = np.stack([m for _, _, m in items])
-        if backend == "pallas" and not is_complex and ln >= 4:
-            from ..kernels import ops as K
-            vals = np.asarray(K.permanent_pallas_batched(
-                stack, precision=precision))
-        else:
-            vals = np.asarray(R.perm_ryser_batched(
-                stack, num_chunks=num_chunks, precision=precision))
-        for (i, coef, _), v in zip(items, vals):
-            reports[i].dispatch.append(tag)
-            totals[i] += coef * v
-
-    for ln, items in sorted(sparse_buckets.items()):
-        if len(items) == 1:
-            i, coef, m = items[0]
-            totals[i] += coef * complex(_leaf_value(
-                m, precision, num_chunks, backend, reports[i], None))
-            continue
-        tag = f"sparse_batch(n={ln},b={len(items)})"
-        sps = [S.SparseMatrix.from_dense(m) for _, _, m in items]
-        vals = S.perm_sparyser_batched(sps, num_chunks=num_chunks,
-                                       precision=precision)
-        for (i, coef, _), v in zip(items, vals):
-            reports[i].dispatch.append(tag)
-            totals[i] += coef * v
-
-    out = totals if is_complex else np.real(totals)
-    for i in range(B):
-        reports[i].value = complex(out[i]) if is_complex else float(out[i])
+    cfg = _config(precision, preprocess, dm, fm, num_chunks, backend)
+    plan = build_plan(mats, cfg, batched=True)
+    totals, reports, _ = execute_plan(plan)
+    out = totals if plan.is_complex else np.real(totals)
+    for i, r in enumerate(reports):
+        r.value = complex(out[i]) if plan.is_complex else float(out[i])
     return (out, reports) if return_report else out

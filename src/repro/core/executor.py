@@ -1,0 +1,371 @@
+"""Execute side of the plan/execute split: backend registry + dispatcher.
+
+``engine._leaf_value``'s if/elif backend chain is replaced by strategy
+objects: each :class:`Backend` knows how to run one dense/sparse leaf and
+(optionally) a whole same-size bucket; ``register_backend`` adds new
+strategies without touching the dispatcher (the ``jnp`` / ``pallas`` /
+``distributed`` trio registers itself at import).
+
+:func:`execute_plan` walks an :class:`~repro.core.planner.ExecutionPlan`:
+
+* scalar plans dispatch leaf by leaf in plan order (bit-identical to the
+  legacy ``engine.permanent`` loop);
+* batched plans fold n <= 2 leaves inline, consult the result cache per
+  leaf, then run every multi-leaf (route, n) bucket as ONE vmapped device
+  program -- cache hits and ragged singletons never enter a bucket;
+* every leaf result is normalized to a Python scalar before accumulation
+  (both dense and sparse routes -- no 0-d array surprises downstream),
+  and backend downgrades are recorded in the dispatch tags (a complex
+  bucket under ``backend="pallas"`` reports ``dense_batch(...,pallas->jnp)``
+  instead of silently borrowing jnp numbers).
+
+Returns per-matrix totals plus :class:`PermanentReport`s and an
+:class:`ExecStats` with device-dispatch / cache accounting.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from . import ryser as R
+from . import sparyser as S
+from .cache import ResultCache
+from .planner import (ROUTE_DENSE, ROUTE_INLINE, ROUTE_SPARSE, ExecutionPlan,
+                      LeafTask, PermanentReport)
+
+__all__ = ["Backend", "JnpBackend", "PallasBackend", "DistributedBackend",
+           "register_backend", "get_backend", "available_backends",
+           "ExecStats", "execute_plan"]
+
+
+def _scalar(v) -> complex | float:
+    """Normalize any engine return (0-d jax/numpy array, numpy scalar,
+    Python number) to a Python scalar so downstream ``complex(...)``
+    coercions never see 0-d array surprises."""
+    return np.asarray(v).item()
+
+
+@dataclass
+class ExecStats:
+    """What one execute_plan call actually did (for tests/benchmarks)."""
+    device_dispatches: int = 0       # scalar leaf calls + bucket programs
+    batched_leaves: int = 0          # leaves served by bucket programs
+    scalar_leaves: int = 0           # leaves served one at a time
+    inline_leaves: int = 0           # n <= 2 closed forms
+    cache_hits: int = 0
+    cache_misses: int = 0
+    downgrades: list[str] = field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# Backend strategy registry
+# ---------------------------------------------------------------------------
+
+class Backend:
+    """One execution strategy for permanent leaves.
+
+    ``dense``/``sparse`` run a single leaf and must return a Python
+    scalar.  ``dense_batch``/``sparse_batch`` run a same-size bucket in
+    one device program and return a (B,) ndarray, or ``None`` to signal
+    "unsupported for this bucket" -- the dispatcher then falls back to
+    the ``jnp`` strategy and tags the downgrade.
+    """
+
+    name = "?"
+
+    def dense(self, M: np.ndarray, *, precision: str, num_chunks: int,
+              ctx: Any | None = None) -> complex | float:
+        raise NotImplementedError
+
+    def sparse(self, sp, *, precision: str, num_chunks: int,
+               ctx: Any | None = None) -> complex | float:
+        # Alg. 4's SpaRyser has no kernel/mesh variant yet: every backend
+        # shares the chunked jnp path (normalized to a Python scalar).
+        return _scalar(S.perm_sparyser_chunked(sp, num_chunks=num_chunks,
+                                               precision=precision))
+
+    def dense_batch(self, stack: np.ndarray, *, precision: str,
+                    num_chunks: int) -> np.ndarray | None:
+        return None
+
+    def sparse_batch(self, sps: list, *, precision: str,
+                     num_chunks: int) -> np.ndarray | None:
+        return None
+
+
+class JnpBackend(Backend):
+    """Chunked / vmapped XLA engines (the default)."""
+
+    name = "jnp"
+
+    def dense(self, M, *, precision, num_chunks, ctx=None):
+        return _scalar(R.perm_ryser_chunked(M, num_chunks=num_chunks,
+                                            precision=precision))
+
+    def dense_batch(self, stack, *, precision, num_chunks):
+        return np.asarray(R.perm_ryser_batched(stack, num_chunks=num_chunks,
+                                               precision=precision))
+
+    def sparse_batch(self, sps, *, precision, num_chunks):
+        return np.asarray(S.perm_sparyser_batched(sps, num_chunks=num_chunks,
+                                                  precision=precision))
+
+
+class PallasBackend(JnpBackend):
+    """TPU kernel (interpret-mode on CPU); real matrices with n >= 4.
+
+    Complex leaves and tiny matrices fall back to the jnp engines --
+    scalar falls back silently (legacy contract), batched falls back with
+    a ``pallas->jnp`` downgrade tag emitted by the dispatcher.
+    """
+
+    name = "pallas"
+
+    def _supported(self, M_or_stack) -> bool:
+        n = M_or_stack.shape[-1]
+        return n >= 4 and not np.iscomplexobj(M_or_stack)
+
+    def dense(self, M, *, precision, num_chunks, ctx=None):
+        if self._supported(M):
+            from ..kernels import ops as K
+            return complex(K.permanent_pallas(M, precision=precision)).real
+        return super().dense(M, precision=precision, num_chunks=num_chunks)
+
+    def dense_batch(self, stack, *, precision, num_chunks):
+        if self._supported(stack):
+            from ..kernels import ops as K
+            return np.asarray(K.permanent_pallas_batched(
+                stack, precision=precision))
+        return None                  # dispatcher falls back + tags downgrade
+
+    def sparse_batch(self, sps, *, precision, num_chunks):
+        return None                  # no sparse kernel: jnp fallback, tagged
+
+
+class DistributedBackend(JnpBackend):
+    """Mesh-wide shard_map (core.distributed); scalar dense only.
+
+    Needs a ``DistributedPermanent`` context passed through
+    ``execute_plan(..., distributed_ctx=...)``; without one it behaves
+    like ``jnp`` (legacy contract).  Bucket programs are not supported --
+    batch entry points reject this backend up front.
+    """
+
+    name = "distributed"
+
+    def dense(self, M, *, precision, num_chunks, ctx=None):
+        if ctx is not None:
+            return _scalar(ctx.permanent(M, precision=precision))
+        return super().dense(M, precision=precision, num_chunks=num_chunks)
+
+    def dense_batch(self, stack, *, precision, num_chunks):
+        return None
+
+    def sparse_batch(self, sps, *, precision, num_chunks):
+        return None
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, name: str | None = None) -> Backend:
+    """Register a strategy object under ``name`` (default: backend.name)."""
+    _BACKENDS[name or backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; registered: "
+                         f"{sorted(_BACKENDS)}") from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+register_backend(JnpBackend())
+register_backend(PallasBackend())
+register_backend(DistributedBackend())
+
+_FALLBACK = "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Plan execution
+# ---------------------------------------------------------------------------
+
+def _cache_key(leaf: LeafTask, plan: ExecutionPlan) -> tuple:
+    return ResultCache.key(leaf.key, leaf.route, plan.precision,
+                           plan.config.backend, plan.config.num_chunks)
+
+
+def _run_leaf(leaf: LeafTask, plan: ExecutionPlan, backend: Backend,
+              report: PermanentReport, stats: ExecStats,
+              ctx: Any | None) -> complex | float:
+    """One leaf through the scalar strategy path (plan-order dispatch)."""
+    n = leaf.n
+    cfg = plan.config
+    if leaf.route == ROUTE_SPARSE:
+        report.dispatch.append(f"sparse(n={n})")
+        sp = S.SparseMatrix.from_dense(leaf.matrix)
+        val = backend.sparse(sp, precision=plan.precision,
+                             num_chunks=cfg.num_chunks, ctx=ctx)
+    else:
+        report.dispatch.append(f"dense(n={n})")
+        val = backend.dense(leaf.matrix, precision=plan.precision,
+                            num_chunks=cfg.num_chunks, ctx=ctx)
+    stats.device_dispatches += 1
+    stats.scalar_leaves += 1
+    return val
+
+
+def _inline_value(m: np.ndarray) -> complex | float:
+    return m[0, 0] if m.shape[0] == 1 else \
+        m[0, 0] * m[1, 1] + m[0, 1] * m[1, 0]
+
+
+def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
+                 distributed_ctx: Any | None = None):
+    """Dispatch every leaf of ``plan`` and accumulate per-matrix totals.
+
+    Returns ``(totals, reports, stats)`` where ``totals`` is a (B,)
+    complex128 array (callers extract the real part for real plans),
+    ``reports`` one PermanentReport per planned matrix, and ``stats`` the
+    dispatch/cache accounting.
+    """
+    cfg = plan.config
+    backend = get_backend(cfg.backend)
+    fallback = get_backend(_FALLBACK)
+    stats = ExecStats()
+    B = plan.num_matrices
+    totals = np.zeros(B, dtype=np.complex128)
+    reports = [PermanentReport(n=e.n, nnz=e.nnz, density=e.density,
+                               dm_removed=e.dm_removed,
+                               fm_leaves=e.fm_leaves,
+                               leaf_sizes=list(e.leaf_sizes),
+                               precision=plan.precision, backend=cfg.backend)
+               for e in plan.entries]
+    for e in plan.entries:
+        totals[e.index] += e.const
+
+    def lookup(leaf: LeafTask):
+        if cache is None:
+            return None, None
+        key = _cache_key(leaf, plan)
+        val = cache.get(key)
+        if val is None:
+            stats.cache_misses += 1
+        else:
+            stats.cache_hits += 1
+        return key, val
+
+    if not plan.batched:
+        # scalar mode: strict plan-order per-leaf dispatch (legacy
+        # ``permanent`` numerics, tag for tag)
+        for leaf in plan.leaves:
+            key, val = lookup(leaf)
+            if val is not None:
+                reports[leaf.owner].dispatch.append(
+                    f"cache({leaf.route},n={leaf.n})")
+            else:
+                val = _run_leaf(leaf, plan, backend, reports[leaf.owner],
+                                stats, distributed_ctx)
+                if key is not None:
+                    cache.put(key, val)
+            totals[leaf.owner] += leaf.coef * val
+        return totals, reports, stats
+
+    # batched mode: inline folds, cache probe, then bucket programs.
+    # With a cache attached, duplicate leaves inside one cold batch are
+    # scheduled once: followers resolve from the cache after their
+    # bucket runs (boson-sampling streams repeat submatrices *within* a
+    # request batch, not just across calls).
+    pending: dict[tuple[str, int], list[int]] = {}
+    computed: dict[tuple, complex | float] = {}   # this call's results
+    followers: list[LeafTask] = []
+    for (route, n), idxs in plan.buckets.items():
+        for j in idxs:
+            leaf = plan.leaves[j]
+            if route == ROUTE_INLINE:
+                reports[leaf.owner].dispatch.append(f"dense(n={n})")
+                totals[leaf.owner] += leaf.coef * _inline_value(leaf.matrix)
+                stats.inline_leaves += 1
+                continue
+            if cache is not None:
+                key = _cache_key(leaf, plan)
+                if key in computed:
+                    followers.append(leaf)
+                    continue
+                val = cache.get(key)
+                if val is not None:
+                    stats.cache_hits += 1
+                    reports[leaf.owner].dispatch.append(
+                        f"cache({route},n={n})")
+                    totals[leaf.owner] += leaf.coef * val
+                    continue
+                stats.cache_misses += 1
+                computed[key] = None      # scheduled; filled after its bucket
+            pending.setdefault((route, n), []).append(j)
+
+    for (route, n), idxs in sorted(pending.items()):
+        leaves = [plan.leaves[j] for j in idxs]
+        if len(leaves) == 1:         # ragged straggler: scalar path
+            leaf = leaves[0]
+            val = _run_leaf(leaf, plan, backend, reports[leaf.owner],
+                            stats, distributed_ctx)
+            if cache is not None:
+                key = _cache_key(leaf, plan)
+                cache.put(key, val)
+                computed[key] = val
+            totals[leaf.owner] += leaf.coef * complex(val)
+            continue
+        tag = f"{route}_batch(n={n},b={len(leaves)})"
+        if route == ROUTE_DENSE:
+            stack = np.stack([l.matrix for l in leaves])
+            vals = backend.dense_batch(stack, precision=plan.precision,
+                                       num_chunks=cfg.num_chunks)
+            if vals is None:         # e.g. complex bucket under pallas
+                vals = fallback.dense_batch(stack, precision=plan.precision,
+                                            num_chunks=cfg.num_chunks)
+                tag = f"{route}_batch(n={n},b={len(leaves)}," \
+                      f"{cfg.backend}->{_FALLBACK})"
+                stats.downgrades.append(tag)
+        else:
+            sps = [S.SparseMatrix.from_dense(l.matrix) for l in leaves]
+            vals = backend.sparse_batch(sps, precision=plan.precision,
+                                        num_chunks=cfg.num_chunks)
+            if vals is None:
+                vals = fallback.sparse_batch(sps, precision=plan.precision,
+                                             num_chunks=cfg.num_chunks)
+                tag = f"{route}_batch(n={n},b={len(leaves)}," \
+                      f"{cfg.backend}->{_FALLBACK})"
+                stats.downgrades.append(tag)
+        stats.device_dispatches += 1
+        stats.batched_leaves += len(leaves)
+        vals = np.asarray(vals)
+        for leaf, v in zip(leaves, vals):
+            v = _scalar(v)
+            reports[leaf.owner].dispatch.append(tag)
+            if cache is not None:
+                key = _cache_key(leaf, plan)
+                cache.put(key, v)
+                computed[key] = v
+            totals[leaf.owner] += leaf.coef * v
+
+    for leaf in followers:                 # duplicates of scheduled leaves
+        # resolve from this call's own results, not the shared cache -- an
+        # LRU smaller than the batch may already have evicted the entry
+        val = computed[_cache_key(leaf, plan)]
+        assert val is not None, "scheduled leaf must have been computed"
+        cache.hits += 1                    # in-flight dedup is still a hit
+        stats.cache_hits += 1
+        reports[leaf.owner].dispatch.append(
+            f"cache({leaf.route},n={leaf.n})")
+        totals[leaf.owner] += leaf.coef * val
+    return totals, reports, stats

@@ -1,0 +1,310 @@
+"""Plan side of the SUperman plan/execute split (Alg. 4 as data).
+
+The paper's dispatch pipeline -- type sniff -> DM elimination -> Forbert-
+Marx compression -> dense/sparse routing -> size bucketing -- used to be
+re-derived inside every ``permanent`` call.  This module runs it ONCE and
+reifies the result as an :class:`ExecutionPlan`: an inspectable,
+JSON-serializable description of exactly what the executor will do (which
+leaves exist, how they route, which buckets share a device program, what
+the Ryser-step cost estimate is) before any device work happens.
+
+* :class:`SolverConfig` -- one frozen dataclass replacing the engine's
+  kwarg sprawl (precision, backend, preprocessing, chunking, cache and
+  queue policy).
+* :class:`LeafTask` -- one post-DM/FM leaf: owner matrix index, additive
+  coefficient, the leaf matrix, its dense/sparse route and a lazy
+  content hash (the result-cache key material).
+* :class:`ExecutionPlan` -- leaves + per-matrix summaries + size buckets
+  + cost estimate.  ``plan == plan`` compares content fingerprints, so
+  planning is checkably deterministic; ``to_json()`` serializes the
+  dispatch decisions for logging or offline inspection.
+* :func:`build_plan` -- the only constructor; ``PermanentSolver.plan`` /
+  ``plan_batch`` and the legacy ``engine.permanent*`` wrappers all call
+  it.
+
+Planning is pure host-side NumPy: no jit, no device, no state.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass, field, replace
+from typing import Any
+
+import numpy as np
+
+from . import decompose as D
+
+__all__ = [
+    "DENSITY_SWITCH",
+    "SolverConfig",
+    "PermanentReport",
+    "LeafTask",
+    "MatrixPlan",
+    "ExecutionPlan",
+    "build_plan",
+]
+
+# Alg. 4: dense kernel when nonzero density >= 30%
+DENSITY_SWITCH = 0.30
+
+ROUTE_DENSE = "dense"
+ROUTE_SPARSE = "sparse"
+ROUTE_INLINE = "inline"        # n <= 2 closed form, no device program
+
+
+@dataclass(frozen=True)
+class SolverConfig:
+    """Everything that used to be seven keyword arguments.
+
+    Dispatch knobs (``precision``/``backend``/``preprocess``/``dm``/``fm``/
+    ``num_chunks``) mirror the legacy ``permanent`` kwargs exactly; the
+    remaining fields configure the stateful solver layers (result cache,
+    async request queue).
+    """
+    precision: str = "dq_acc"        # dd | dq_fast | dq_acc | qq | kahan
+    backend: str = "jnp"             # jnp | pallas | distributed
+    preprocess: bool = True          # master switch for DM + FM (Sec. 4)
+    dm: bool | None = None           # override DM elimination
+    fm: bool | None = None           # override Forbert-Marx compression
+    num_chunks: int = 4096           # Alg. 3 tau (rounded to power of two)
+    cache: bool = True               # content-hash result cache on leaves
+    cache_entries: int = 4096        # LRU capacity of the result cache
+    queue_max_batch: int = 32        # flush a size bucket at this depth
+    queue_max_delay_s: float = 0.05  # ... or when its oldest request ages out
+
+    def replace(self, **kw) -> "SolverConfig":
+        return replace(self, **kw)
+
+    def effective_precision(self, is_complex: bool) -> str:
+        # qq is unsupported for complex and falls back to kahan (engine
+        # contract since the scalar pipeline)
+        if is_complex and self.precision == "qq":
+            return "kahan"
+        return self.precision
+
+
+@dataclass
+class PermanentReport:
+    """Everything the engine did for one matrix, for logging."""
+    value: complex | float = 0.0
+    n: int = 0
+    nnz: int = 0
+    density: float = 1.0
+    dm_removed: int = 0
+    fm_leaves: int = 0
+    leaf_sizes: list[int] = field(default_factory=list)
+    dispatch: list[str] = field(default_factory=list)
+    precision: str = "dq_acc"
+    backend: str = "jnp"
+
+
+@dataclass
+class LeafTask:
+    """coef * perm(matrix) is one additive contribution to owner's result."""
+    owner: int                       # index into the planned matrix list
+    coef: complex | float
+    matrix: np.ndarray               # post-DM/FM leaf (float64 / complex128)
+    route: str                       # dense | sparse | inline
+    _key: str | None = None
+
+    @property
+    def n(self) -> int:
+        return self.matrix.shape[0]
+
+    @property
+    def key(self) -> str:
+        """Content hash of the leaf matrix (result-cache key material)."""
+        if self._key is None:
+            h = hashlib.sha1()
+            h.update(self.matrix.dtype.str.encode())
+            h.update(str(self.matrix.shape).encode())
+            h.update(np.ascontiguousarray(self.matrix).tobytes())
+            self._key = h.hexdigest()
+        return self._key
+
+
+@dataclass
+class MatrixPlan:
+    """Per-input-matrix planning summary (feeds PermanentReport)."""
+    index: int
+    n: int
+    nnz: int
+    density: float
+    dm_removed: int = 0
+    fm_leaves: int = 0
+    leaf_sizes: list[int] = field(default_factory=list)
+    const: complex | float = 0.0     # folded 1x1/2x2 contributions
+
+
+@dataclass
+class ExecutionPlan:
+    """The reified Alg.-4 dispatch for one matrix or one batch.
+
+    ``leaves`` hold the device work; ``buckets`` group leaf indices by
+    (route, n) -- in batched plans each multi-leaf bucket becomes ONE
+    vmapped device program.  ``estimated_steps`` is the summed Ryser
+    step-space size (n * 2^(n-1) per dense leaf, density-scaled for
+    sparse), a dispatch-free cost proxy.
+    """
+    config: SolverConfig
+    batched: bool                    # bucketed batch dispatch vs per-leaf
+    is_complex: bool
+    precision: str                   # effective (qq->kahan on complex)
+    entries: list[MatrixPlan]
+    leaves: list[LeafTask]
+    buckets: dict[tuple[str, int], list[int]]
+    estimated_steps: float
+
+    @property
+    def num_matrices(self) -> int:
+        return len(self.entries)
+
+    def fingerprint(self) -> tuple:
+        """Content identity: equal fingerprints -> identical execution."""
+        return (
+            self.config, self.batched, self.is_complex, self.precision,
+            tuple((l.owner, complex(l.coef), l.route, l.key)
+                  for l in self.leaves),
+            tuple(sorted((r, n, tuple(idx))
+                         for (r, n), idx in self.buckets.items())),
+            tuple((e.index, e.n, e.nnz, e.dm_removed, e.fm_leaves,
+                   complex(e.const)) for e in self.entries),
+        )
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, ExecutionPlan):
+            return NotImplemented
+        return self.fingerprint() == other.fingerprint()
+
+    def to_json(self) -> dict:
+        """JSON-serializable dispatch description (no matrix payloads)."""
+        def _num(x):
+            x = complex(x)
+            return x.real if x.imag == 0 else [x.real, x.imag]
+        return {
+            "config": asdict(self.config),
+            "batched": self.batched,
+            "is_complex": self.is_complex,
+            "precision": self.precision,
+            "matrices": [
+                {"index": e.index, "n": e.n, "nnz": e.nnz,
+                 "density": e.density, "dm_removed": e.dm_removed,
+                 "fm_leaves": e.fm_leaves, "leaf_sizes": e.leaf_sizes,
+                 "const": _num(e.const)}
+                for e in self.entries],
+            "leaves": [
+                {"owner": l.owner, "n": l.n, "route": l.route,
+                 "coef": _num(l.coef), "key": l.key}
+                for l in self.leaves],
+            "buckets": [
+                {"route": r, "n": n, "size": len(idx), "leaves": list(idx)}
+                for (r, n), idx in sorted(self.buckets.items())],
+            "estimated_steps": self.estimated_steps,
+        }
+
+    def json(self, **kw) -> str:
+        return json.dumps(self.to_json(), **kw)
+
+    def summary(self) -> str:
+        """One-line human summary for CLIs and logs."""
+        b = len(self.entries)
+        routes = {}
+        for l in self.leaves:
+            routes[l.route] = routes.get(l.route, 0) + 1
+        rtxt = " ".join(f"{r}={c}" for r, c in sorted(routes.items())) \
+            or "const-only"
+        return (f"plan[{'batch' if self.batched else 'scalar'}] "
+                f"matrices={b} leaves={len(self.leaves)} ({rtxt}) "
+                f"buckets={len(self.buckets)} "
+                f"est_steps={self.estimated_steps:.3g} "
+                f"precision={self.precision} backend={self.config.backend}")
+
+
+def _preprocess_leaves(work: np.ndarray, mplan: MatrixPlan,
+                       do_dm: bool, do_fm: bool) -> list[D.Leaf]:
+    """DM elimination + Forbert-Marx on one matrix (Sec. 4).
+
+    Returns the leaf list; [] when DM zeroed the matrix (perm == 0).
+    """
+    n = work.shape[0]
+    if do_dm and mplan.density < 0.5 and n >= 3:
+        work, removed = D.dm_eliminate(work)
+        mplan.dm_removed = removed
+        if not work.any():
+            mplan.fm_leaves = 0
+            return []
+    if do_fm and n >= 3:
+        leaves = D.fm_decompose(work)
+    else:
+        leaves = [D.Leaf(1.0, work)]
+    mplan.fm_leaves = len(leaves)
+    mplan.leaf_sizes = [l.matrix.shape[0] for l in leaves]
+    return leaves
+
+
+def _route(m: np.ndarray, batched: bool) -> str:
+    n = m.shape[0]
+    if batched and n <= 2:
+        return ROUTE_INLINE          # closed form, folded at execute time
+    density = float((m != 0).sum()) / max(1, n * n)
+    if n <= 2 or density >= DENSITY_SWITCH:
+        return ROUTE_DENSE
+    return ROUTE_SPARSE
+
+
+def _leaf_cost(m: np.ndarray, route: str) -> float:
+    n = m.shape[0]
+    if route == ROUTE_INLINE or n <= 2:
+        return float(n)
+    steps = n * float(2 ** (n - 1))
+    if route == ROUTE_SPARSE:
+        steps *= float((m != 0).sum()) / (n * n)
+    return steps
+
+
+def build_plan(mats: list[np.ndarray], config: SolverConfig, *,
+               batched: bool) -> ExecutionPlan:
+    """Run type sniff + DM/FM + routing + bucketing over ``mats``.
+
+    ``batched=False`` preserves the scalar engine's per-leaf dispatch
+    order exactly (every leaf is its own unit of work); ``batched=True``
+    is the bucketed dispatcher shape (n <= 2 leaves fold inline, same-size
+    same-route leaves share a bucket).
+    """
+    mats = [np.asarray(M) for M in mats]
+    for M in mats:
+        if M.ndim != 2 or M.shape[0] != M.shape[1]:
+            raise ValueError(f"square matrices required, got {M.shape}")
+    is_complex = any(np.iscomplexobj(M) for M in mats)
+    precision = config.effective_precision(is_complex)
+    dtype = np.complex128 if is_complex else np.float64
+    do_dm = config.preprocess if config.dm is None else config.dm
+    do_fm = config.preprocess if config.fm is None else config.fm
+
+    entries: list[MatrixPlan] = []
+    leaves: list[LeafTask] = []
+    for i, M in enumerate(mats):
+        n = M.shape[0]
+        work = M.astype(dtype)
+        nnz = int((work != 0).sum())
+        mplan = MatrixPlan(index=i, n=n, nnz=nnz,
+                           density=nnz / max(1, n * n))
+        entries.append(mplan)
+        for leaf in _preprocess_leaves(work, mplan, do_dm, do_fm):
+            m = leaf.matrix
+            if m.shape == (1, 1) and m[0, 0] == 1:
+                mplan.const += leaf.coef
+                continue
+            leaves.append(LeafTask(owner=i, coef=leaf.coef, matrix=m,
+                                   route=_route(m, batched)))
+
+    buckets: dict[tuple[str, int], list[int]] = {}
+    for j, leaf in enumerate(leaves):
+        buckets.setdefault((leaf.route, leaf.n), []).append(j)
+    cost = sum(_leaf_cost(l.matrix, l.route) for l in leaves)
+    return ExecutionPlan(config=config, batched=batched,
+                         is_complex=is_complex, precision=precision,
+                         entries=entries, leaves=leaves, buckets=buckets,
+                         estimated_steps=cost)

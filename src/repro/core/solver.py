@@ -1,0 +1,209 @@
+"""`PermanentSolver`: the stateful plan/execute session object.
+
+The paper's Alg. 4 is a pipeline; this module exposes it as a lifecycle
+instead of a free function:
+
+    config = SolverConfig(precision="dq_acc", backend="jnp")
+    solver = PermanentSolver(config)
+
+    plan = solver.plan(A)            # type sniff + DM/FM + routing; no
+    print(plan.summary())            # device work -- inspect or serialize
+    value = solver.execute(plan)     # dispatch through the backend registry
+
+    plans = solver.plan_batch(As)    # bucketed batch plan ...
+    values = solver.execute(plans)   # ... one device program per bucket
+
+**Plan** (`plan` / `plan_batch`) is pure and deterministic: equal inputs
+produce ``==`` plans, and ``plan.to_json()`` serializes every dispatch
+decision (leaves, routes, buckets, cost estimate) for offline inspection.
+**Execute** walks the plan through ``core.executor``'s backend registry
+and the solver's content-hash :class:`~repro.core.cache.ResultCache` --
+repeated post-DM/FM leaves (boson-sampling pipelines resample overlapping
+submatrices) skip the device entirely; ``solver.stats()`` reports the
+hit/miss and dispatch accounting.
+
+**Queue** (`submit` / `flush` / `poll`) decouples request arrival from
+batch dispatch: submitted matrices accumulate in size-keyed buckets and
+are flushed through a bucketed batch plan when a bucket reaches
+``config.queue_max_batch`` (size trigger) or its oldest request ages past
+``config.queue_max_delay_s`` (deadline trigger, checked on ``submit``/
+``poll``).  ``submit`` returns a :class:`PermanentRequest` future whose
+``result()`` forces a flush if needed -- mixed traffic fills batches
+instead of fragmenting them (ROADMAP: async request queue).
+
+The legacy ``engine.permanent`` / ``engine.permanent_batch`` free
+functions are thin stateless wrappers over this machinery.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from .cache import ResultCache
+from .executor import ExecStats, execute_plan
+from .planner import ExecutionPlan, PermanentReport, SolverConfig, build_plan
+
+__all__ = ["PermanentSolver", "PermanentRequest", "SolverConfig"]
+
+
+class PermanentRequest:
+    """Future for one queued permanent; resolved by a solver flush."""
+
+    def __init__(self, solver: "PermanentSolver", matrix: np.ndarray):
+        self._solver = solver
+        self.matrix = matrix
+        self.n = matrix.shape[0]
+        self.done = False
+        self.value: complex | float | None = None
+        self.report: PermanentReport | None = None
+
+    def result(self) -> complex | float:
+        """The permanent; flushes the owning solver's queue if pending."""
+        if not self.done:
+            self._solver.flush()
+        assert self.done, "flush must resolve every queued request"
+        return self.value
+
+    def _resolve(self, value, report) -> None:
+        self.value = value
+        self.report = report
+        self.done = True
+
+
+class PermanentSolver:
+    """Stateful plan/execute session: backend dispatch + cache + queue."""
+
+    def __init__(self, config: SolverConfig | None = None, *,
+                 distributed_ctx: Any | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 **overrides):
+        config = config or SolverConfig()
+        if overrides:
+            config = config.replace(**overrides)
+        self.config = config
+        self.distributed_ctx = distributed_ctx
+        self.cache = ResultCache(config.cache_entries) if config.cache \
+            else None
+        self._clock = clock
+        # size-keyed request queue: n -> (first-enqueue time, requests)
+        self._queue: dict[int, tuple[float, list[PermanentRequest]]] = {}
+        self._stats = ExecStats()
+        self.flushes = 0
+
+    # -- plan ---------------------------------------------------------------
+
+    def plan(self, A) -> ExecutionPlan:
+        """Scalar plan for one matrix (per-leaf dispatch order)."""
+        A = np.asarray(A)
+        if A.ndim != 2 or A.shape[0] != A.shape[1]:
+            raise ValueError(f"square matrix required, got {A.shape}")
+        return build_plan([A], self.config, batched=False)
+
+    def plan_batch(self, As: Sequence) -> ExecutionPlan:
+        """Bucketed batch plan: same-size same-route leaves share one
+        device program."""
+        if self.config.backend not in ("jnp", "pallas"):
+            raise ValueError(f"batch plans support jnp|pallas, got "
+                             f"{self.config.backend}")
+        return build_plan(list(As), self.config, batched=True)
+
+    # -- execute ------------------------------------------------------------
+
+    def execute(self, plan: ExecutionPlan, *, return_report: bool = False):
+        """Dispatch a plan; scalar plans return a Python scalar, batch
+        plans a (B,) ndarray (complex128 when the plan is complex)."""
+        totals, reports, stats = execute_plan(
+            plan, cache=self.cache, distributed_ctx=self.distributed_ctx)
+        self._merge_stats(stats)
+        out = totals if plan.is_complex else np.real(totals)
+        for i, r in enumerate(reports):
+            r.value = complex(out[i]) if plan.is_complex else float(out[i])
+        if not plan.batched and plan.num_matrices == 1:
+            value = reports[0].value
+            return (value, reports[0]) if return_report else value
+        return (out, reports) if return_report else out
+
+    # -- async request queue ------------------------------------------------
+
+    def submit(self, A) -> PermanentRequest:
+        """Queue one matrix; returns a future resolved at the next flush.
+
+        Triggers an immediate flush of the matrix's size bucket when it
+        reaches ``queue_max_batch``; also polls deadline triggers for
+        every bucket (oldest request older than ``queue_max_delay_s``).
+        """
+        A = np.asarray(A)
+        if A.ndim != 2 or A.shape[0] != A.shape[1]:
+            raise ValueError(f"square matrix required, got {A.shape}")
+        if self.config.backend not in ("jnp", "pallas"):
+            # fail fast: flushes go through plan_batch, which would only
+            # reject the backend after the request had been queued
+            raise ValueError(f"queued requests support jnp|pallas, got "
+                             f"{self.config.backend}")
+        req = PermanentRequest(self, A)
+        t0, reqs = self._queue.setdefault(A.shape[0],
+                                          (self._clock(), []))
+        reqs.append(req)
+        if len(reqs) >= self.config.queue_max_batch:
+            self._flush_bucket(A.shape[0])
+        self.poll()
+        return req
+
+    @property
+    def pending(self) -> int:
+        return sum(len(reqs) for _, reqs in self._queue.values())
+
+    def poll(self) -> int:
+        """Flush every bucket whose deadline has passed; returns the
+        number of requests flushed."""
+        now = self._clock()
+        due = [n for n, (t0, reqs) in self._queue.items()
+               if reqs and now - t0 >= self.config.queue_max_delay_s]
+        return sum(self._flush_bucket(n) for n in due)
+
+    def flush(self) -> int:
+        """Flush every queued bucket regardless of triggers; returns the
+        number of requests flushed."""
+        return sum(self._flush_bucket(n) for n in list(self._queue))
+
+    def _flush_bucket(self, n: int) -> int:
+        _, reqs = self._queue.get(n, (0.0, []))
+        if not reqs:
+            self._queue.pop(n, None)
+            return 0
+        # plan + execute BEFORE dequeuing: if either raises, the bucket
+        # stays queued and the pending futures remain resolvable
+        plan = self.plan_batch([r.matrix for r in reqs])
+        _, reports = self.execute(plan, return_report=True)
+        self._queue.pop(n, None)
+        for req, report in zip(reqs, reports):
+            req._resolve(report.value, report)
+        self.flushes += 1
+        return len(reqs)
+
+    # -- accounting ---------------------------------------------------------
+
+    def _merge_stats(self, s: ExecStats) -> None:
+        t = self._stats
+        t.device_dispatches += s.device_dispatches
+        t.batched_leaves += s.batched_leaves
+        t.scalar_leaves += s.scalar_leaves
+        t.inline_leaves += s.inline_leaves
+        t.cache_hits += s.cache_hits
+        t.cache_misses += s.cache_misses
+        t.downgrades.extend(s.downgrades)
+
+    def stats(self) -> dict:
+        """Dispatch + cache + queue accounting for the session."""
+        out = {"device_dispatches": self._stats.device_dispatches,
+               "batched_leaves": self._stats.batched_leaves,
+               "scalar_leaves": self._stats.scalar_leaves,
+               "inline_leaves": self._stats.inline_leaves,
+               "downgrades": list(self._stats.downgrades),
+               "flushes": self.flushes,
+               "pending": self.pending}
+        out["cache"] = self.cache.stats() if self.cache else None
+        return out

@@ -8,6 +8,10 @@
 
 Matrix sources: --matrix <.npy>, --n <random dense>, --sparse-n/--density
 (random sparse), --family allones|fibonacci (known-permanent families).
+
+Non-distributed runs go through the plan/execute API: the CLI prints the
+``ExecutionPlan`` summary (leaves, routes, buckets, step estimate) before
+dispatching, and ``--plan-json`` dumps the whole serialized plan.
 """
 
 from __future__ import annotations
@@ -17,9 +21,9 @@ import time
 
 import numpy as np
 
-from ..core import engine
 from ..core.distributed import DistributedPermanent
 from ..core.oracle import all_ones_permanent
+from ..core.solver import PermanentSolver, SolverConfig
 from .mesh import make_local_mesh
 
 __all__ = ["permanent_main"]
@@ -62,6 +66,9 @@ def permanent_main(argv=None) -> int:
     ap.add_argument("--no-preprocess", action="store_true")
     ap.add_argument("--checkpoint", help="resumable job state (.npz)")
     ap.add_argument("--chunks", type=int, default=4096)
+    ap.add_argument("--plan-json", action="store_true",
+                    help="dump the full ExecutionPlan as JSON before "
+                         "executing")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -81,10 +88,14 @@ def permanent_main(argv=None) -> int:
                 f"[superman] {s.fraction_done():6.1%} done", flush=True))
         report = None
     else:
-        val, report = engine.permanent(
-            A, precision=args.precision, backend=args.backend,
-            preprocess=not args.no_preprocess, num_chunks=args.chunks,
-            return_report=True)
+        solver = PermanentSolver(SolverConfig(
+            precision=args.precision, backend=args.backend,
+            preprocess=not args.no_preprocess, num_chunks=args.chunks))
+        plan = solver.plan(A)
+        print(f"[superman] {plan.summary()}")
+        if args.plan_json:
+            print(plan.json(indent=2))
+        val, report = solver.execute(plan, return_report=True)
     dt = time.time() - t0
 
     print(f"[superman] perm(A) = {val:+.17e}   ({dt:.2f}s)")

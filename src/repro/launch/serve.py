@@ -7,11 +7,13 @@
 
 LM mode builds the serve bundle (KV sharding policy chosen per arch/mesh),
 prefills a synthetic prompt batch, then decodes greedily.  Permanent mode
-drains a synthetic request stream through ``engine.permanent_batch`` in
-batches, so compilation and dispatch are amortized across requests -- the
-throughput shape (perms/sec) the SUperman paper headlines.  Runnable on
-CPU with ``--reduced``; on a real pod the same code paths serve the full
-configs.
+drains a synthetic request stream through a ``PermanentSolver``'s async
+request queue: submissions accumulate in size buckets and flush on
+size/deadline triggers, repeated submatrices resolve from the solver's
+result cache, and compilation/dispatch are amortized across requests --
+the throughput shape (perms/sec) the SUperman paper headlines.  Runnable
+on CPU with ``--reduced``; on a real pod the same code paths serve the
+full configs.
 """
 
 from __future__ import annotations
@@ -106,53 +108,74 @@ def run_serving(arch: str, *, prompt_len: int = 64, gen: int = 32,
 def run_permanent_serving(*, n: int = 10, batch: int = 32,
                           requests: int = 128, density: float = 1.0,
                           precision: str = "dq_acc", backend: str = "jnp",
-                          seed: int = 0):
-    """Drain a synthetic permanent-request stream through the batch engine.
+                          repeat_pool: int = 0, deadline_s: float = 0.05,
+                          cache: bool = True, seed: int = 0):
+    """Drain a synthetic permanent-request stream through the solver queue.
 
     ``requests`` random n x n matrices (dense, or sparse when
-    ``density < 1``) are served in batches of ``batch`` via
-    ``engine.permanent_batch`` -- one compiled device program per bucket,
-    reused across batches, so steady-state cost is dispatch + compute
-    instead of per-request tracing.  Returns perms/sec and per-batch
-    latency stats; the first batch (compile) is reported separately.
+    ``density < 1``; drawn from a pool of ``repeat_pool`` distinct
+    matrices when > 0, the boson-sampling resampling shape) are submitted
+    one by one to a ``PermanentSolver``'s async queue.  Size-bucketed
+    accumulation flushes each bucket at depth ``batch`` (or after
+    ``deadline_s``), so batches fill from the arrival stream instead of
+    being hand-rolled; repeated submatrices resolve from the solver's
+    content-hash result cache without touching the device.  Returns
+    perms/sec and per-flush latency stats; the first flush (compile) is
+    reported separately.
     """
-    from ..core import engine
+    from ..core.solver import PermanentSolver, SolverConfig
 
     if batch < 1 or requests < 1:
         raise ValueError(f"need batch >= 1 and requests >= 1, got "
                          f"batch={batch} requests={requests}")
     rng = np.random.default_rng(seed)
-    if density < 1.0:
-        mats = [rng.uniform(0.5, 1.5, (n, n))
-                * (rng.uniform(0, 1, (n, n)) < density)
-                for _ in range(requests)]
-    else:
-        mats = [rng.uniform(-1, 1, (n, n)) for _ in range(requests)]
 
-    values = np.zeros(requests, dtype=np.complex128)
-    lat = []                     # (seconds, served requests) per batch
+    def draw():
+        if density < 1.0:
+            return rng.uniform(0.5, 1.5, (n, n)) \
+                * (rng.uniform(0, 1, (n, n)) < density)
+        return rng.uniform(-1, 1, (n, n))
+
+    if repeat_pool > 0:
+        pool = [draw() for _ in range(repeat_pool)]
+        mats = [pool[i] for i in rng.integers(0, repeat_pool, requests)]
+    else:
+        mats = [draw() for _ in range(requests)]
+
+    solver = PermanentSolver(SolverConfig(
+        precision=precision, backend=backend, cache=cache,
+        queue_max_batch=batch, queue_max_delay_s=deadline_s))
+    lat = []                     # (seconds, served requests) per flush
+    reqs = []
     t_all = time.time()
-    for b0 in range(0, requests, batch):
-        chunk = mats[b0:b0 + batch]
-        nreq = len(chunk)
-        if nreq < batch:
-            # pad the ragged tail to the compiled batch shape -- a smaller
-            # stack would trace a fresh program for one final dispatch
-            chunk = chunk + [chunk[-1]] * (batch - nreq)
+    for M in mats:
+        served_before = solver.flushes
         t0 = time.time()
-        vals = engine.permanent_batch(chunk, precision=precision,
-                                      backend=backend)
-        values[b0:b0 + nreq] = vals[:nreq]
-        lat.append((time.time() - t0, nreq))
+        reqs.append(solver.submit(M))
+        if solver.flushes > served_before:   # this submit triggered a flush
+            lat.append((time.time() - t0, batch))
+    tail = solver.pending
+    tail_s = 0.0
+    if tail:
+        t0 = time.time()
+        solver.flush()
+        tail_s = time.time() - t0
     total_s = time.time() - t_all
+    values = np.array([r.result() for r in reqs], dtype=np.complex128)
+    # steady state excludes the first flush (compile) and the ragged tail
+    # (a never-before-seen bucket width pays a one-off retrace)
     steady = lat[1:] if len(lat) > 1 else lat
     steady_s = sum(s for s, _ in steady)
     steady_n = sum(c for _, c in steady)
+    stats = solver.stats()
     return {"values": np.real(values), "total_s": total_s,
-            "compile_batch_s": lat[0][0],
-            "steady_batch_s": steady_s / len(steady),
+            "compile_batch_s": lat[0][0] if lat else tail_s,
+            "steady_batch_s": steady_s / max(1, len(steady)),
+            "tail_s": tail_s,
             "perms_per_s": steady_n / steady_s if steady_s else 0.0,
-            "batches": len(lat)}
+            "batches": len(lat) + (1 if tail else 0),
+            "cache": stats["cache"],
+            "device_dispatches": stats["device_dispatches"]}
 
 
 def serve_main(argv=None) -> int:
@@ -170,6 +193,13 @@ def serve_main(argv=None) -> int:
                     help="permanent mode: request stream length")
     ap.add_argument("--density", type=float, default=1.0,
                     help="permanent mode: nnz density of request matrices")
+    ap.add_argument("--repeat-pool", type=int, default=0,
+                    help="permanent mode: draw requests from this many "
+                         "distinct matrices (0 = all distinct)")
+    ap.add_argument("--deadline-ms", type=float, default=50.0,
+                    help="permanent mode: queue flush deadline")
+    ap.add_argument("--no-cache", dest="cache", action="store_false",
+                    help="permanent mode: disable the result cache")
     ap.add_argument("--precision", default="dq_acc")
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"))
     args = ap.parse_args(argv)
@@ -178,12 +208,18 @@ def serve_main(argv=None) -> int:
         out = run_permanent_serving(
             n=args.perm_n, batch=args.batch, requests=args.requests,
             density=args.density, precision=args.precision,
-            backend=args.backend)
+            backend=args.backend, repeat_pool=args.repeat_pool,
+            deadline_s=args.deadline_ms / 1e3, cache=args.cache)
         print(f"[serve] permanents: {args.requests} reqs x n={args.perm_n} "
               f"batch={args.batch} backend={args.backend}")
         print(f"[serve] compile batch {out['compile_batch_s']:.3f}s, steady "
               f"{out['steady_batch_s'] * 1e3:.1f}ms/batch -> "
               f"{out['perms_per_s']:.0f} perms/s")
+        if out["cache"]:
+            print(f"[serve] cache: {out['cache']['hits']} hits / "
+                  f"{out['cache']['misses']} misses "
+                  f"(hit rate {out['cache']['hit_rate']:.1%}), "
+                  f"{out['device_dispatches']} device dispatches")
         return 0
     out = run_serving(args.arch, prompt_len=args.prompt_len, gen=args.gen,
                       batch=args.batch, reduced=args.reduced)

@@ -1,0 +1,330 @@
+"""PermanentSolver plan/execute lifecycle: plans, cache, queue, wrappers.
+
+Covers the ISSUE-2 acceptance surface: plan determinism and
+serializability, cache hit/miss accounting (same matrix twice -> one
+device dispatch), queue flush on both size and deadline triggers, the
+leaf scalar-normalization and pallas->jnp downgrade-tag bugfixes, and
+wrapper equivalence (``permanent`` == plan+execute).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.cache import ResultCache
+from repro.core.executor import available_backends, get_backend
+from repro.core.planner import SolverConfig, build_plan
+from repro.core.solver import PermanentSolver
+
+RNG = np.random.default_rng(20260726)
+
+
+def _rand_sparse(n, density, rng=RNG):
+    return rng.uniform(0.5, 1.5, (n, n)) * (rng.uniform(0, 1, (n, n)) < density)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# plans: determinism, inspection, serialization
+# ---------------------------------------------------------------------------
+
+def test_plan_determinism():
+    A = _rand_sparse(10, 0.3)
+    solver = PermanentSolver()
+    p1, p2 = solver.plan(A), solver.plan(A)
+    assert p1 == p2
+    assert p1.json(sort_keys=True) == p2.json(sort_keys=True)
+    assert p1 != solver.plan(A + 1.0)
+
+
+def test_plan_batch_determinism_and_buckets():
+    mats = [RNG.uniform(-1, 1, (8, 8)) for _ in range(3)]
+    solver = PermanentSolver(preprocess=False)
+    p1, p2 = solver.plan_batch(mats), solver.plan_batch(mats)
+    assert p1 == p2
+    assert p1.batched and not solver.plan(mats[0]).batched
+    # three same-size dense leaves share one bucket
+    assert p1.buckets == {("dense", 8): [0, 1, 2]}
+    assert p1.estimated_steps == 3 * 8 * 2 ** 7
+
+
+def test_plan_is_json_serializable():
+    A = _rand_sparse(12, 0.25)
+    plan = PermanentSolver().plan(A)
+    blob = json.loads(plan.json())
+    assert blob["matrices"][0]["n"] == 12
+    assert len(blob["leaves"]) == len(plan.leaves)
+    assert all(b["route"] in ("dense", "sparse", "inline")
+               for b in blob["buckets"])
+    assert "plan[scalar]" in plan.summary()
+
+
+def test_plan_validates_shapes():
+    solver = PermanentSolver()
+    with pytest.raises(ValueError):
+        solver.plan(np.zeros((3, 4)))
+    with pytest.raises(ValueError):
+        solver.plan_batch([np.zeros((3, 4))])
+    with pytest.raises(ValueError):
+        PermanentSolver(backend="distributed").plan_batch([np.eye(3)])
+
+
+# ---------------------------------------------------------------------------
+# wrapper equivalence: permanent/permanent_batch == plan + execute
+# ---------------------------------------------------------------------------
+
+def test_wrapper_equivalence_scalar():
+    A = RNG.uniform(-1, 1, (10, 10))
+    solver = PermanentSolver()
+    assert engine.permanent(A) == solver.execute(solver.plan(A))
+
+
+def test_wrapper_equivalence_sparse_and_complex():
+    solver = PermanentSolver()
+    Ssp = _rand_sparse(10, 0.2)
+    np.testing.assert_allclose(solver.execute(solver.plan(Ssp)),
+                               engine.permanent(Ssp), rtol=1e-12)
+    C = RNG.normal(size=(7, 7)) + 1j * RNG.normal(size=(7, 7))
+    np.testing.assert_allclose(solver.execute(solver.plan(C)),
+                               engine.permanent(C), rtol=1e-12)
+
+
+def test_wrapper_equivalence_batch():
+    mats = [RNG.uniform(-1, 1, (8, 8)) for _ in range(4)] \
+        + [_rand_sparse(9, 0.22) for _ in range(3)]
+    solver = PermanentSolver()
+    got = solver.execute(solver.plan_batch(mats))
+    np.testing.assert_allclose(got, engine.permanent_batch(mats), rtol=1e-12)
+
+
+def test_execute_return_report_shapes():
+    solver = PermanentSolver()
+    A = RNG.uniform(-1, 1, (6, 6))
+    val, report = solver.execute(solver.plan(A), return_report=True)
+    assert report.value == val and report.n == 6
+    vals, reports = solver.execute(solver.plan_batch([A, A]),
+                                   return_report=True)
+    assert len(reports) == 2 and vals.shape == (2,)
+
+
+# ---------------------------------------------------------------------------
+# result cache: hit/miss accounting, device-dispatch elision
+# ---------------------------------------------------------------------------
+
+def test_cache_same_matrix_twice_one_device_dispatch():
+    A = RNG.uniform(-1, 1, (9, 9))
+    solver = PermanentSolver()
+    v1 = solver.execute(solver.plan(A))
+    after_first = solver.stats()["device_dispatches"]
+    assert after_first >= 1
+    v2 = solver.execute(solver.plan(A))
+    st = solver.stats()
+    assert v2 == v1
+    assert st["device_dispatches"] == after_first, \
+        "second execute must be served from the result cache"
+    assert st["cache"]["hits"] >= 1
+    assert st["cache"]["misses"] >= 1
+
+
+def test_cache_hits_across_batch_members():
+    A = RNG.uniform(-1, 1, (8, 8))
+    B = RNG.uniform(-1, 1, (8, 8))
+    solver = PermanentSolver(preprocess=False)
+    vals = solver.execute(solver.plan_batch([A, B, A, A]))
+    # one bucket over the two unique leaves after cache dedup is not
+    # attempted (first pass is cold), but a second pass is all hits
+    solver2_dispatches = solver.stats()["device_dispatches"]
+    vals2 = solver.execute(solver.plan_batch([A, B, A, A]))
+    np.testing.assert_allclose(vals2, vals, rtol=1e-15)
+    st = solver.stats()
+    assert st["device_dispatches"] == solver2_dispatches
+    assert vals[0] == vals[2] == vals[3]
+
+
+def test_cache_respects_precision_and_backend():
+    key_a = ResultCache.key("abc", "dense", "dq_acc", "jnp", 64)
+    key_b = ResultCache.key("abc", "dense", "kahan", "jnp", 64)
+    key_c = ResultCache.key("abc", "dense", "dq_acc", "pallas", 64)
+    assert len({key_a, key_b, key_c}) == 3
+
+
+def test_cache_lru_eviction_and_stats():
+    cache = ResultCache(max_entries=2)
+    cache.put(("a",), 1.0)
+    cache.put(("b",), 2.0)
+    assert cache.get(("a",)) == 1.0       # refresh "a"
+    cache.put(("c",), 3.0)                # evicts "b"
+    assert cache.get(("b",)) is None
+    assert cache.get(("a",)) == 1.0
+    st = cache.stats()
+    assert st["evictions"] == 1 and st["entries"] == 2
+    assert st["hits"] == 2 and st["misses"] == 1
+
+
+def test_batch_duplicates_survive_tiny_cache():
+    # dedup of duplicate leaves must resolve from the call's own results,
+    # even when the LRU is smaller than the batch's distinct-leaf count
+    A = RNG.uniform(-1, 1, (7, 7))
+    B = RNG.uniform(-1, 1, (7, 7))
+    solver = PermanentSolver(preprocess=False, cache_entries=1)
+    got = solver.execute(solver.plan_batch([A, A, B]))
+    ref = engine.permanent_batch([A, A, B], preprocess=False)
+    np.testing.assert_allclose(got, ref, rtol=1e-12)
+    assert got[0] == got[1]
+
+
+def test_cache_disabled_solver_never_caches():
+    A = RNG.uniform(-1, 1, (8, 8))
+    solver = PermanentSolver(cache=False)
+    solver.execute(solver.plan(A))
+    solver.execute(solver.plan(A))
+    st = solver.stats()
+    assert st["cache"] is None
+    assert st["device_dispatches"] == 2
+
+
+# ---------------------------------------------------------------------------
+# async request queue: size + deadline flush triggers
+# ---------------------------------------------------------------------------
+
+def test_queue_flushes_on_size_trigger():
+    clock = FakeClock()
+    solver = PermanentSolver(queue_max_batch=4, queue_max_delay_s=1e9,
+                             clock=clock)
+    mats = [RNG.uniform(-1, 1, (7, 7)) for _ in range(4)]
+    reqs = [solver.submit(M) for M in mats[:3]]
+    assert not any(r.done for r in reqs), "below queue_max_batch: no flush"
+    reqs.append(solver.submit(mats[3]))
+    assert all(r.done for r in reqs), "4th submit must flush the bucket"
+    assert solver.pending == 0 and solver.flushes == 1
+    ref = engine.permanent_batch(mats)
+    np.testing.assert_allclose([r.result() for r in reqs], ref, rtol=1e-12)
+
+
+def test_queue_flushes_on_deadline_trigger():
+    clock = FakeClock()
+    solver = PermanentSolver(queue_max_batch=100, queue_max_delay_s=0.5,
+                             clock=clock)
+    r1 = solver.submit(RNG.uniform(-1, 1, (6, 6)))
+    assert not r1.done and solver.pending == 1
+    assert solver.poll() == 0, "deadline not reached yet"
+    clock.t = 0.6
+    assert solver.poll() == 1
+    assert r1.done and solver.pending == 0
+
+
+def test_queue_deadline_checked_on_submit():
+    clock = FakeClock()
+    solver = PermanentSolver(queue_max_batch=100, queue_max_delay_s=0.5,
+                             clock=clock)
+    r1 = solver.submit(RNG.uniform(-1, 1, (6, 6)))
+    clock.t = 0.7
+    r2 = solver.submit(RNG.uniform(-1, 1, (5, 5)))
+    # submitting polls deadlines: the aged 6x6 bucket flushed; the fresh
+    # 5x5 bucket did not
+    assert r1.done and not r2.done
+    assert solver.pending == 1
+    solver.flush()
+    assert r2.done
+
+
+def test_queue_size_buckets_are_independent():
+    clock = FakeClock()
+    solver = PermanentSolver(queue_max_batch=2, queue_max_delay_s=1e9,
+                             clock=clock)
+    a = solver.submit(RNG.uniform(-1, 1, (6, 6)))
+    b = solver.submit(RNG.uniform(-1, 1, (7, 7)))
+    assert not a.done and not b.done
+    c = solver.submit(RNG.uniform(-1, 1, (6, 6)))
+    assert a.done and c.done and not b.done, \
+        "only the full 6x6 bucket flushes"
+    assert b.result() is not None and b.done
+
+
+def test_queue_result_forces_flush():
+    solver = PermanentSolver(queue_max_batch=100, queue_max_delay_s=1e9)
+    A = RNG.uniform(-1, 1, (8, 8))
+    req = solver.submit(A)
+    assert not req.done
+    np.testing.assert_allclose(req.result(), engine.permanent(A), rtol=1e-12)
+
+
+def test_queue_rejects_unbatchable_backend_at_submit():
+    solver = PermanentSolver(backend="distributed")
+    with pytest.raises(ValueError):
+        solver.submit(np.eye(5))
+    assert solver.pending == 0, "rejected submits must not enqueue"
+
+
+def test_queue_repeated_submatrices_hit_cache():
+    A = RNG.uniform(-1, 1, (8, 8))
+    solver = PermanentSolver(queue_max_batch=4, queue_max_delay_s=1e9)
+    for _ in range(4):
+        solver.submit(A.copy())
+    st = solver.stats()
+    assert st["flushes"] == 1
+    assert st["cache"]["hits"] >= 1, \
+        "identical queued matrices must dedup through the result cache"
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfixes: scalar normalization + pallas->jnp downgrade tags
+# ---------------------------------------------------------------------------
+
+def test_sparse_route_returns_python_scalar():
+    Ssp = _rand_sparse(10, 0.2)
+    v, report = engine.permanent(Ssp, preprocess=False, return_report=True)
+    assert report.dispatch == ["sparse(n=10)"]
+    assert isinstance(v, float) and not isinstance(v, np.floating)
+    vc = engine.permanent(Ssp.astype(np.complex128) * (1 + 0.5j),
+                          preprocess=False)
+    assert isinstance(vc, complex) and not isinstance(vc, np.complexfloating)
+
+
+def test_batch_complex_pallas_reports_downgrade():
+    Cs = [RNG.normal(size=(6, 6)) + 1j * RNG.normal(size=(6, 6))
+          for _ in range(3)]
+    got, reports = engine.permanent_batch(Cs, backend="pallas",
+                                          preprocess=False,
+                                          return_report=True)
+    ref = engine.permanent_batch(Cs, preprocess=False)
+    np.testing.assert_allclose(got, ref, rtol=1e-12)
+    tags = [t for r in reports for t in r.dispatch]
+    assert any("pallas->jnp" in t for t in tags), tags
+    assert all("dense_batch" in t for t in tags if "pallas" in t)
+
+
+def test_batch_real_pallas_does_not_tag_downgrade():
+    As = RNG.uniform(-1, 1, (3, 8, 8))
+    _, reports = engine.permanent_batch(As, backend="pallas",
+                                        preprocess=False, return_report=True)
+    tags = [t for r in reports for t in r.dispatch]
+    assert tags and not any("->" in t for t in tags)
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+def test_backend_registry_contents():
+    assert {"jnp", "pallas", "distributed"} <= set(available_backends())
+    assert get_backend("jnp").name == "jnp"
+    with pytest.raises(ValueError):
+        get_backend("nope")
+
+
+def test_unknown_backend_raises_at_execute():
+    cfg = SolverConfig(backend="nope", cache=False)
+    plan = build_plan([np.eye(4)], cfg, batched=False)
+    from repro.core.executor import execute_plan
+    with pytest.raises(ValueError):
+        execute_plan(plan)
