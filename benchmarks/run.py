@@ -41,7 +41,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table3,table4,table5,fig7,batch,"
-                         "solver_cache,roofline")
+                         "solver_cache,batch_sharding,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="smaller n (CI-sized)")
     ap.add_argument("--check", action="store_true",
@@ -55,9 +55,9 @@ def main(argv=None) -> int:
     import jax
     jax.config.update("jax_enable_x64", True)
 
-    from . import (batch_throughput, fig7_scaling, roofline_report,
-                   solver_cache, table3_precision, table4_dense,
-                   table5_sparse)
+    from . import (batch_sharding, batch_throughput, fig7_scaling,
+                   roofline_report, solver_cache, table3_precision,
+                   table4_dense, table5_sparse)
 
     t0 = time.time()
     if not only or "batch" in only:
@@ -72,6 +72,18 @@ def main(argv=None) -> int:
         print_rows("solver_cache", rows)
         if args.check and not solver_cache.check(rows):
             print("# solver_cache gate RED -- cache speedup below 2x")
+            return 1
+    if not only or "batch_sharding" in only:
+        # measurement runs in its own subprocess (XLA_FLAGS is init-time),
+        # so the forced 8-device mesh never leaks into this process
+        rows = batch_sharding.run(
+            sizes=batch_sharding.SIZES[1:] if args.fast
+            else batch_sharding.SIZES,
+            repeats=3 if args.fast else 7)
+        print_rows("batch_sharding", rows)
+        if args.check and not batch_sharding.check(rows):
+            print("# batch_sharding gate RED -- sharded buckets below "
+                  "0.9x jnp or not bit-identical")
             return 1
     if not only or "table3" in only:
         if args.fast:

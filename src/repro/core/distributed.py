@@ -13,9 +13,27 @@ mesh with any number of axes (e.g. ("pod", "data", "model")):
 * **deterministic reduction** -- per-slice twofloat sums are psum'd over all
   mesh axes (one scalar pair; the paper's "communication is negligible").
 
+Besides the step-space split there is a *batch-axis* split (ROADMAP:
+batch sharding over the device mesh): millions-of-requests traffic is
+dominated by many moderate-n permanents, so ``batch_permanents_on_mesh``
+/ ``sparse_batch_permanents_on_mesh`` shard a same-size bucket's leading
+axis over the mesh instead -- every device owns whole matrices (the
+matrices are tiny; each shard is replicated per-device work), ragged
+tails are padded to the device count and masked out on the host, and no
+psum is needed.  The per-device body is the *same trace* as the
+single-device batched engines (``ryser.batched_values`` /
+``sparyser.sparse_batched_values``), so sharded values are bit-identical
+to the ``jnp`` backend per precision mode.
+
+All entry points in this module are real-only: the twofloat slice sums
+and the ``float(...)`` reductions have no complex path, so complex input
+raises ``ValueError`` up front instead of crashing mid-reduction.
+
 APIs:
   ``permanent_on_mesh``     one-shot functional API (psum reduction)
   ``slice_sums_on_mesh``    per-device slice sums, no reduction (wave mode)
+  ``batch_permanents_on_mesh``         batch-axis sharded dense bucket
+  ``sparse_batch_permanents_on_mesh``  batch-axis sharded sparse bucket
   ``DistributedPermanent``  checkpoint/restart + elastic runner (core.resume)
 """
 
@@ -23,7 +41,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +51,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P_
 from ..utils.compat import shard_map
 from . import gray as G
 from . import precision as P
-from .ryser import chunk_geometry, nw_base_vector, _final_factor
+from .ryser import (batched_values, chunk_geometry, nw_base_vector,
+                    _final_factor)
 
-__all__ = ["permanent_on_mesh", "slice_sums_on_mesh", "DistributedPermanent",
-           "plan_slices"]
+__all__ = ["permanent_on_mesh", "slice_sums_on_mesh",
+           "batch_permanents_on_mesh", "sparse_batch_permanents_on_mesh",
+           "DistributedPermanent", "plan_slices"]
+
+
+def _require_real(A, what: str) -> None:
+    if np.iscomplexobj(A):
+        raise ValueError(f"distributed backend is real-only: {what} got "
+                         f"complex input (use the jnp/pallas backends)")
 
 
 def plan_slices(n: int, num_devices: int, slices_per_device: int = 8,
@@ -168,6 +194,7 @@ def permanent_on_mesh(A, mesh: Mesh, *, precision: str = "dq_acc",
     device's chunk range instead of the jnp engine -- the full production
     path: two-level split -> Pallas grid -> lanes -> one psum.
     """
+    _require_real(A, "permanent_on_mesh")
     A = jnp.asarray(A)
     n = A.shape[0]
     D = math.prod(mesh.devices.shape)
@@ -286,6 +313,121 @@ def _pallas_device_partials(A_rep, first_chunk, T: int, C: int,
     return P.TwoFloat(out[:, 0], out[:, 1])
 
 
+# ---------------------------------------------------------------------------
+# Batch-axis sharding: data parallelism over matrices, not Gray steps
+# ---------------------------------------------------------------------------
+
+def _batch_pad(B: int, mesh: Mesh) -> int:
+    """Rows of padding needed so the batch axis divides the device count."""
+    D = math.prod(mesh.devices.shape)
+    return (-B) % D
+
+
+@lru_cache(maxsize=None)
+def _dense_batch_mesh_fn(mesh: Mesh, T: int, C: int, precision: str):
+    """Compiled mesh program for one (mesh, chunk geometry, precision).
+
+    The shard_map body is ``ryser.batched_values`` verbatim over each
+    device's local sub-stack -- chunk offsets are always 0 (devices own
+    whole matrices), so the host-constant CEG schedules apply unchanged
+    and no dynamic-offset (``_dyn_chunk_partials``) machinery is needed.
+    """
+    axes = tuple(mesh.axis_names)
+
+    def body(local):                     # (B/D, n, n) per device
+        return batched_values(local, T, C, precision)
+
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=P_(axes),
+                             out_specs=P_(axes), check_vma=False))
+
+
+def batch_permanents_on_mesh(stack, mesh: Mesh, *,
+                             precision: str = "dq_acc",
+                             num_chunks: int = 4096) -> np.ndarray:
+    """Permanents of a (B, n, n) stack, batch axis sharded over ``mesh``.
+
+    Each device computes the full 2^{n-1} step space for the matrices it
+    owns (data parallelism over the bucket), so there is no cross-device
+    reduction at all; ragged tails (B not divisible by the device count)
+    are padded with zero matrices whose results are discarded on the
+    host.  Values are bit-identical to ``ryser.perm_ryser_batched`` for
+    every precision mode -- the per-device body shares its trace.
+    """
+    stack = np.asarray(stack)
+    _require_real(stack, "batch_permanents_on_mesh")
+    if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
+        raise ValueError(f"(B, n, n) stack required, got {stack.shape}")
+    B, n = stack.shape[0], stack.shape[1]
+    if n == 1:
+        return np.asarray(stack[:, 0, 0])
+    if n == 2:
+        return np.asarray(stack[:, 0, 0] * stack[:, 1, 1]
+                          + stack[:, 0, 1] * stack[:, 1, 0])
+    stack = stack.astype(np.float64)
+    pad = _batch_pad(B, mesh)
+    if pad:
+        stack = np.concatenate(
+            [stack, np.zeros((pad, n, n), stack.dtype)], axis=0)
+    axes = tuple(mesh.axis_names)
+    T, C, _ = chunk_geometry(n, num_chunks)
+    dev_stack = jax.device_put(stack, NamedSharding(mesh, P_(axes)))
+    vals = _dense_batch_mesh_fn(mesh, T, C, precision)(dev_stack)
+    return np.asarray(vals)[:B]
+
+
+@lru_cache(maxsize=None)
+def _sparse_batch_mesh_fn(mesh: Mesh, T: int, C: int, precision: str):
+    from .sparyser import sparse_batched_values
+    axes = tuple(mesh.axis_names)
+
+    def body(A_local, rows_local, vals_local):
+        return sparse_batched_values(A_local, rows_local, vals_local,
+                                     T, C, precision)
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(P_(axes), P_(axes), P_(axes)),
+                             out_specs=P_(axes), check_vma=False))
+
+
+def sparse_batch_permanents_on_mesh(sps: list, mesh: Mesh, *,
+                                    precision: str = "dq_acc",
+                                    num_chunks: int = 4096) -> np.ndarray:
+    """Sparse-bucket analogue of :func:`batch_permanents_on_mesh`.
+
+    The bucket is packed once on the host (``sparyser.pack_padded_ccs``,
+    bucket-wide maxdeg -- padding scatters into the dummy row and never
+    perturbs numerics), padded to the device count with inert all-dummy
+    entries, and the padded-CCS SpaRyser body is sharded over the batch
+    axis.  Bit-identical to ``sparyser.perm_sparyser_batched``.
+    """
+    from .sparyser import pack_padded_ccs, perm_sparyser_chunked
+    assert sps, "empty bucket"
+    n = sps[0].n
+    for sp in sps:
+        _require_real(sp.cvals, "sparse_batch_permanents_on_mesh")
+    if n <= 2:
+        return np.array([perm_sparyser_chunked(sp) for sp in sps])
+    A_stack, rows_stack, vals_stack = pack_padded_ccs(sps)
+    B = A_stack.shape[0]
+    pad = _batch_pad(B, mesh)
+    if pad:
+        maxdeg = rows_stack.shape[2]
+        A_stack = np.concatenate(
+            [A_stack, np.zeros((pad, n, n), A_stack.dtype)], axis=0)
+        rows_stack = np.concatenate(
+            [rows_stack, np.full((pad, n, maxdeg), n, np.int32)], axis=0)
+        vals_stack = np.concatenate(
+            [vals_stack, np.zeros((pad, n, maxdeg), vals_stack.dtype)],
+            axis=0)
+    axes = tuple(mesh.axis_names)
+    T, C, _ = chunk_geometry(n, num_chunks)
+    shard = NamedSharding(mesh, P_(axes))
+    vals = _sparse_batch_mesh_fn(mesh, T, C, precision)(
+        jax.device_put(A_stack, shard), jax.device_put(rows_stack, shard),
+        jax.device_put(vals_stack, shard))
+    return np.asarray(vals)[:B]
+
+
 @dataclass
 class DistributedPermanent:
     """Checkpointable, elastic multi-slice permanent job.
@@ -305,6 +447,7 @@ class DistributedPermanent:
     def permanent(self, A, progress_cb=None):
         from .resume import JobState  # local import to avoid cycle
         A = np.asarray(A)
+        _require_real(A, "DistributedPermanent.permanent")
         n = A.shape[0]
         D = math.prod(self.mesh.devices.shape)
         total_slices, chunks_per_slice, C = plan_slices(

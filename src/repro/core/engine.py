@@ -75,6 +75,7 @@ def permanent(A, *, precision: str = "dq_acc", preprocess: bool = True,
 def permanent_batch(As, *, precision: str = "dq_acc", preprocess: bool = True,
                     dm: bool | None = None, fm: bool | None = None,
                     num_chunks: int = 4096, backend: str = "jnp",
+                    distributed_ctx: Any | None = None,
                     return_report: bool = False) -> np.ndarray:
     """Compute perm(A) for a whole stack of matrices in bucketed batches.
 
@@ -101,23 +102,25 @@ def permanent_batch(As, *, precision: str = "dq_acc", preprocess: bool = True,
       As: (B, n, n) array-like, or a sequence of square matrices (sizes
         may differ -- bucketing handles ragged inputs).
       precision / preprocess / dm / fm / num_chunks: as in ``permanent``.
-      backend: ``jnp`` or ``pallas`` (``distributed`` is scalar-only; use
-        ``core.distributed`` directly for mesh-wide single permanents).
+      backend: ``jnp``, ``pallas``, or ``distributed``/
+        ``distributed_batch`` (real-only): buckets are batch-axis-sharded
+        over ``distributed_ctx``'s mesh, and downgrade to ``jnp`` with a
+        ``distributed->jnp`` tag when no ctx is attached.
+      distributed_ctx: a ``jax.sharding.Mesh`` (or an object with a
+        ``.mesh``) for the distributed backends.
       return_report: also return a list of per-matrix PermanentReport.
 
     Returns:
       (B,) float64 array (complex128 when the batch is complex); with
       ``return_report`` a ``(values, reports)`` tuple.
     """
-    if backend not in ("jnp", "pallas"):
-        raise ValueError(f"permanent_batch supports jnp|pallas, got {backend}")
     mats = [np.asarray(M) for M in As]
     for M in mats:
         if M.ndim != 2 or M.shape[0] != M.shape[1]:
             raise ValueError(f"square matrices required, got {M.shape}")
     cfg = _config(precision, preprocess, dm, fm, num_chunks, backend)
     plan = build_plan(mats, cfg, batched=True)
-    totals, reports, _ = execute_plan(plan)
+    totals, reports, _ = execute_plan(plan, distributed_ctx=distributed_ctx)
     out = totals if plan.is_complex else np.real(totals)
     for i, r in enumerate(reports):
         r.value = complex(out[i]) if plan.is_complex else float(out[i])

@@ -4,15 +4,35 @@
 objects: each :class:`Backend` knows how to run one dense/sparse leaf and
 (optionally) a whole same-size bucket; ``register_backend`` adds new
 strategies without touching the dispatcher (the ``jnp`` / ``pallas`` /
-``distributed`` trio registers itself at import).
+``distributed`` / ``distributed_batch`` quartet registers itself at
+import).
+
+**Batch contract.**  ``dense_batch(stack, *, precision, num_chunks, ctx)``
+and ``sparse_batch(sps, *, precision, num_chunks, ctx)`` run one
+same-size bucket as a single device program and return a (B,) ndarray of
+values in bucket order, or ``None`` to signal "unsupported for this
+bucket" -- the dispatcher then re-runs the bucket on the ``jnp``
+strategy and tags the downgrade as ``{route}_batch(...,<cfg>->jnp)``
+(e.g. ``pallas->jnp`` for complex stacks, ``distributed->jnp`` when no
+mesh/ctx is attached).  ``ctx`` is the ``distributed_ctx`` threaded
+through :func:`execute_plan`: a ``jax.sharding.Mesh`` or any object with
+a ``.mesh`` attribute (``core.distributed.DistributedPermanent``);
+non-distributed strategies ignore it.  Every strategy must also answer
+:meth:`Backend.value_backend` -- the registry name of the strategy whose
+numerics will actually produce a leaf's value.  The result cache stores
+values under THAT name, never the configured one, so a jnp-computed
+downgrade can never satisfy a genuine pallas/distributed lookup whose
+kernel numerics differ at the ulp level.
 
 :func:`execute_plan` walks an :class:`~repro.core.planner.ExecutionPlan`:
 
 * scalar plans dispatch leaf by leaf in plan order (bit-identical to the
   legacy ``engine.permanent`` loop);
 * batched plans fold n <= 2 leaves inline, consult the result cache per
-  leaf, then run every multi-leaf (route, n) bucket as ONE vmapped device
-  program -- cache hits and ragged singletons never enter a bucket;
+  leaf, then run every multi-leaf (route, n) bucket as ONE device
+  program (vmapped locally, or batch-axis-sharded over the mesh under
+  ``distributed``) -- cache hits and ragged singletons never enter a
+  bucket;
 * every leaf result is normalized to a Python scalar before accumulation
   (both dense and sparse routes -- no 0-d array surprises downstream),
   and backend downgrades are recorded in the dispatch tags (a complex
@@ -37,8 +57,18 @@ from .planner import (ROUTE_DENSE, ROUTE_INLINE, ROUTE_SPARSE, ExecutionPlan,
                       LeafTask, PermanentReport)
 
 __all__ = ["Backend", "JnpBackend", "PallasBackend", "DistributedBackend",
+           "DistributedBatchBackend",
            "register_backend", "get_backend", "available_backends",
            "ExecStats", "execute_plan"]
+
+
+def _ctx_mesh(ctx):
+    """Extract a usable Mesh from a distributed ctx (Mesh or runner)."""
+    if ctx is None:
+        return None
+    from jax.sharding import Mesh
+    mesh = getattr(ctx, "mesh", ctx)
+    return mesh if isinstance(mesh, Mesh) else None
 
 
 def _scalar(v) -> complex | float:
@@ -68,10 +98,10 @@ class Backend:
     """One execution strategy for permanent leaves.
 
     ``dense``/``sparse`` run a single leaf and must return a Python
-    scalar.  ``dense_batch``/``sparse_batch`` run a same-size bucket in
-    one device program and return a (B,) ndarray, or ``None`` to signal
-    "unsupported for this bucket" -- the dispatcher then falls back to
-    the ``jnp`` strategy and tags the downgrade.
+    scalar.  ``dense_batch``/``sparse_batch`` follow the batch contract
+    in the module docstring: one bucket -> (B,) ndarray, or ``None`` to
+    downgrade to ``jnp``.  ``value_backend`` names the strategy whose
+    numerics actually serve a leaf -- the result-cache identity.
     """
 
     name = "?"
@@ -82,18 +112,29 @@ class Backend:
 
     def sparse(self, sp, *, precision: str, num_chunks: int,
                ctx: Any | None = None) -> complex | float:
-        # Alg. 4's SpaRyser has no kernel/mesh variant yet: every backend
-        # shares the chunked jnp path (normalized to a Python scalar).
+        # Alg. 4's SpaRyser has no scalar kernel/mesh variant yet: every
+        # backend shares the chunked jnp path (normalized to a scalar).
         return _scalar(S.perm_sparyser_chunked(sp, num_chunks=num_chunks,
                                                precision=precision))
 
     def dense_batch(self, stack: np.ndarray, *, precision: str,
-                    num_chunks: int) -> np.ndarray | None:
+                    num_chunks: int,
+                    ctx: Any | None = None) -> np.ndarray | None:
         return None
 
-    def sparse_batch(self, sps: list, *, precision: str,
-                     num_chunks: int) -> np.ndarray | None:
+    def sparse_batch(self, sps: list, *, precision: str, num_chunks: int,
+                     ctx: Any | None = None) -> np.ndarray | None:
         return None
+
+    def value_backend(self, route: str, n: int, *, is_complex: bool,
+                      batched: bool, ctx: Any | None = None) -> str:
+        """Registry name of the strategy whose numerics produce this
+        leaf's value.  Cache keys use THIS name, not the configured
+        backend, so downgraded (jnp-computed) values are stored -- and
+        found -- under ``jnp``."""
+        if route == ROUTE_SPARSE and not batched:
+            return "jnp"             # shared scalar SpaRyser path
+        return self.name
 
 
 class JnpBackend(Backend):
@@ -105,11 +146,11 @@ class JnpBackend(Backend):
         return _scalar(R.perm_ryser_chunked(M, num_chunks=num_chunks,
                                             precision=precision))
 
-    def dense_batch(self, stack, *, precision, num_chunks):
+    def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
         return np.asarray(R.perm_ryser_batched(stack, num_chunks=num_chunks,
                                                precision=precision))
 
-    def sparse_batch(self, sps, *, precision, num_chunks):
+    def sparse_batch(self, sps, *, precision, num_chunks, ctx=None):
         return np.asarray(S.perm_sparyser_batched(sps, num_chunks=num_chunks,
                                                   precision=precision))
 
@@ -124,9 +165,13 @@ class PallasBackend(JnpBackend):
 
     name = "pallas"
 
+    @staticmethod
+    def _kernel_ok(n: int, is_complex: bool) -> bool:
+        return n >= 4 and not is_complex
+
     def _supported(self, M_or_stack) -> bool:
-        n = M_or_stack.shape[-1]
-        return n >= 4 and not np.iscomplexobj(M_or_stack)
+        return self._kernel_ok(M_or_stack.shape[-1],
+                               np.iscomplexobj(M_or_stack))
 
     def dense(self, M, *, precision, num_chunks, ctx=None):
         if self._supported(M):
@@ -134,38 +179,103 @@ class PallasBackend(JnpBackend):
             return complex(K.permanent_pallas(M, precision=precision)).real
         return super().dense(M, precision=precision, num_chunks=num_chunks)
 
-    def dense_batch(self, stack, *, precision, num_chunks):
+    def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
         if self._supported(stack):
             from ..kernels import ops as K
             return np.asarray(K.permanent_pallas_batched(
                 stack, precision=precision))
         return None                  # dispatcher falls back + tags downgrade
 
-    def sparse_batch(self, sps, *, precision, num_chunks):
+    def sparse_batch(self, sps, *, precision, num_chunks, ctx=None):
         return None                  # no sparse kernel: jnp fallback, tagged
+
+    def value_backend(self, route, n, *, is_complex, batched, ctx=None):
+        if route == ROUTE_DENSE and self._kernel_ok(n, is_complex):
+            return self.name
+        return "jnp"                 # silent scalar fallback / tagged batch
+
+
+class DistributedBatchBackend(JnpBackend):
+    """Batch-axis sharding over ``core.distributed``'s mesh (ROADMAP:
+    batch sharding over the device mesh).
+
+    ``dense_batch``/``sparse_batch`` shard a same-size bucket's leading
+    axis over the mesh -- matrices replicated per shard (each device owns
+    whole matrices, no psum), ragged tails padded to the device count and
+    masked on the host.  Needs a mesh through ``ctx``; without one every
+    bucket downgrades to ``jnp`` with a tag.  Scalar leaves (ragged
+    singletons) use the plain jnp engines -- a one-matrix bucket has
+    nothing to shard.
+    """
+
+    name = "distributed_batch"
+
+    def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
+        mesh = _ctx_mesh(ctx)
+        if mesh is None or np.iscomplexobj(stack):
+            return None              # no mesh attached: tagged jnp downgrade
+        from . import distributed as Dm
+        return Dm.batch_permanents_on_mesh(stack, mesh, precision=precision,
+                                           num_chunks=num_chunks)
+
+    def sparse_batch(self, sps, *, precision, num_chunks, ctx=None):
+        mesh = _ctx_mesh(ctx)
+        if mesh is None:
+            return None
+        from . import distributed as Dm
+        return Dm.sparse_batch_permanents_on_mesh(
+            sps, mesh, precision=precision, num_chunks=num_chunks)
+
+    def value_backend(self, route, n, *, is_complex, batched, ctx=None):
+        if batched and not is_complex and _ctx_mesh(ctx) is not None:
+            return self.name
+        return "jnp"
 
 
 class DistributedBackend(JnpBackend):
-    """Mesh-wide shard_map (core.distributed); scalar dense only.
+    """Mesh-wide shard_map (core.distributed).
 
-    Needs a ``DistributedPermanent`` context passed through
-    ``execute_plan(..., distributed_ctx=...)``; without one it behaves
-    like ``jnp`` (legacy contract).  Bucket programs are not supported --
-    batch entry points reject this backend up front.
+    Scalar dense leaves split the Gray-step space over the mesh (the
+    paper's Sec. 6.3 shape, for the occasional huge matrix); batched
+    plans delegate whole buckets to the ``distributed_batch`` strategy
+    (data parallelism over matrices).  Needs a ctx passed through
+    ``execute_plan(..., distributed_ctx=...)`` -- either a
+    ``DistributedPermanent`` runner or a bare ``jax.sharding.Mesh``;
+    without one it behaves like ``jnp`` (legacy contract), batched with a
+    ``distributed->jnp`` downgrade tag.
     """
 
     name = "distributed"
 
     def dense(self, M, *, precision, num_chunks, ctx=None):
         if ctx is not None:
-            return _scalar(ctx.permanent(M, precision=precision))
+            # a DistributedPermanent runner computes at ITS OWN precision
+            # (ctx.permanent takes none) -- only honor it when that agrees
+            # with the plan, else the value would be reported and cached
+            # under a precision it was never computed at
+            if hasattr(ctx, "permanent") and \
+                    getattr(ctx, "precision", precision) == precision:
+                return _scalar(ctx.permanent(M))
+            from . import distributed as Dm
+            return _scalar(Dm.permanent_on_mesh(M, _ctx_mesh(ctx),
+                                                precision=precision))
         return super().dense(M, precision=precision, num_chunks=num_chunks)
 
-    def dense_batch(self, stack, *, precision, num_chunks):
-        return None
+    def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
+        return get_backend("distributed_batch").dense_batch(
+            stack, precision=precision, num_chunks=num_chunks, ctx=ctx)
 
-    def sparse_batch(self, sps, *, precision, num_chunks):
-        return None
+    def sparse_batch(self, sps, *, precision, num_chunks, ctx=None):
+        return get_backend("distributed_batch").sparse_batch(
+            sps, precision=precision, num_chunks=num_chunks, ctx=ctx)
+
+    def value_backend(self, route, n, *, is_complex, batched, ctx=None):
+        if batched:
+            return get_backend("distributed_batch").value_backend(
+                route, n, is_complex=is_complex, batched=batched, ctx=ctx)
+        if route == ROUTE_DENSE and not is_complex and ctx is not None:
+            return self.name
+        return "jnp"
 
 
 _BACKENDS: dict[str, Backend] = {}
@@ -192,6 +302,7 @@ def available_backends() -> list[str]:
 register_backend(JnpBackend())
 register_backend(PallasBackend())
 register_backend(DistributedBackend())
+register_backend(DistributedBatchBackend())
 
 _FALLBACK = "jnp"
 
@@ -200,9 +311,17 @@ _FALLBACK = "jnp"
 # Plan execution
 # ---------------------------------------------------------------------------
 
-def _cache_key(leaf: LeafTask, plan: ExecutionPlan) -> tuple:
+def _cache_key(leaf: LeafTask, plan: ExecutionPlan, produced_by: str) -> tuple:
+    """Result-cache key for ``leaf``.
+
+    ``produced_by`` is the *value-producing* backend name (see
+    ``Backend.value_backend``), NOT ``plan.config.backend`` -- a
+    pallas/distributed bucket that downgrades to jnp stores (and finds)
+    its numbers under ``jnp``, so a jnp-computed value can never satisfy
+    a genuine kernel lookup whose numerics differ at the ulp level.
+    """
     return ResultCache.key(leaf.key, leaf.route, plan.precision,
-                           plan.config.backend, plan.config.num_chunks)
+                           produced_by, plan.config.num_chunks)
 
 
 def _run_leaf(leaf: LeafTask, plan: ExecutionPlan, backend: Backend,
@@ -254,10 +373,15 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
     for e in plan.entries:
         totals[e.index] += e.const
 
-    def lookup(leaf: LeafTask):
+    def produced_by(route: str, n: int, batched: bool) -> str:
+        """Name of the strategy whose numerics will serve this leaf."""
+        return backend.value_backend(route, n, is_complex=plan.is_complex,
+                                     batched=batched, ctx=distributed_ctx)
+
+    def lookup(leaf: LeafTask, batched: bool):
         if cache is None:
             return None, None
-        key = _cache_key(leaf, plan)
+        key = _cache_key(leaf, plan, produced_by(leaf.route, leaf.n, batched))
         val = cache.get(key)
         if val is None:
             stats.cache_misses += 1
@@ -269,7 +393,7 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
         # scalar mode: strict plan-order per-leaf dispatch (legacy
         # ``permanent`` numerics, tag for tag)
         for leaf in plan.leaves:
-            key, val = lookup(leaf)
+            key, val = lookup(leaf, False)
             if val is not None:
                 reports[leaf.owner].dispatch.append(
                     f"cache({leaf.route},n={leaf.n})")
@@ -285,7 +409,10 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
     # With a cache attached, duplicate leaves inside one cold batch are
     # scheduled once: followers resolve from the cache after their
     # bucket runs (boson-sampling streams repeat submatrices *within* a
-    # request batch, not just across calls).
+    # request batch, not just across calls).  ``computed`` is keyed by
+    # the PROBE key (batched producing-backend prediction); the store key
+    # may differ when a bucket downgrades or a singleton takes the scalar
+    # path -- followers always resolve through the probe key.
     pending: dict[tuple[str, int], list[int]] = {}
     computed: dict[tuple, complex | float] = {}   # this call's results
     followers: list[LeafTask] = []
@@ -298,7 +425,7 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
                 stats.inline_leaves += 1
                 continue
             if cache is not None:
-                key = _cache_key(leaf, plan)
+                key = _cache_key(leaf, plan, produced_by(route, n, True))
                 if key in computed:
                     followers.append(leaf)
                     continue
@@ -315,37 +442,46 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
 
     for (route, n), idxs in sorted(pending.items()):
         leaves = [plan.leaves[j] for j in idxs]
-        if len(leaves) == 1:         # ragged straggler: scalar path
+        bname = produced_by(route, n, True)
+        # ragged straggler: scalar path -- but only while the scalar
+        # strategy produces the same numerics family as the bucket one
+        # (under distributed+mesh the scalar path is the step-space
+        # split, which is NOT bit-identical to the batch engines and
+        # would be stored under a key the batched probes never use)
+        if len(leaves) == 1 and bname == produced_by(route, n, False):
             leaf = leaves[0]
             val = _run_leaf(leaf, plan, backend, reports[leaf.owner],
                             stats, distributed_ctx)
             if cache is not None:
-                key = _cache_key(leaf, plan)
-                cache.put(key, val)
-                computed[key] = val
+                cache.put(_cache_key(leaf, plan, bname), val)
+                computed[_cache_key(leaf, plan, bname)] = val
             totals[leaf.owner] += leaf.coef * complex(val)
             continue
         tag = f"{route}_batch(n={n},b={len(leaves)})"
         if route == ROUTE_DENSE:
             stack = np.stack([l.matrix for l in leaves])
             vals = backend.dense_batch(stack, precision=plan.precision,
-                                       num_chunks=cfg.num_chunks)
+                                       num_chunks=cfg.num_chunks,
+                                       ctx=distributed_ctx)
             if vals is None:         # e.g. complex bucket under pallas
                 vals = fallback.dense_batch(stack, precision=plan.precision,
                                             num_chunks=cfg.num_chunks)
                 tag = f"{route}_batch(n={n},b={len(leaves)}," \
                       f"{cfg.backend}->{_FALLBACK})"
                 stats.downgrades.append(tag)
+                bname = _FALLBACK    # the fallback produced these values
         else:
             sps = [S.SparseMatrix.from_dense(l.matrix) for l in leaves]
             vals = backend.sparse_batch(sps, precision=plan.precision,
-                                        num_chunks=cfg.num_chunks)
+                                        num_chunks=cfg.num_chunks,
+                                        ctx=distributed_ctx)
             if vals is None:
                 vals = fallback.sparse_batch(sps, precision=plan.precision,
                                              num_chunks=cfg.num_chunks)
                 tag = f"{route}_batch(n={n},b={len(leaves)}," \
                       f"{cfg.backend}->{_FALLBACK})"
                 stats.downgrades.append(tag)
+                bname = _FALLBACK
         stats.device_dispatches += 1
         stats.batched_leaves += len(leaves)
         vals = np.asarray(vals)
@@ -353,15 +489,16 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
             v = _scalar(v)
             reports[leaf.owner].dispatch.append(tag)
             if cache is not None:
-                key = _cache_key(leaf, plan)
-                cache.put(key, v)
-                computed[key] = v
+                cache.put(_cache_key(leaf, plan, bname), v)
+                computed[_cache_key(leaf, plan,
+                                    produced_by(route, n, True))] = v
             totals[leaf.owner] += leaf.coef * v
 
     for leaf in followers:                 # duplicates of scheduled leaves
         # resolve from this call's own results, not the shared cache -- an
         # LRU smaller than the batch may already have evicted the entry
-        val = computed[_cache_key(leaf, plan)]
+        val = computed[_cache_key(leaf, plan,
+                                  produced_by(leaf.route, leaf.n, True))]
         assert val is not None, "scheduled leaf must have been computed"
         cache.hits += 1                    # in-flight dedup is still a hit
         stats.cache_hits += 1

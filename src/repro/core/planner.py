@@ -64,7 +64,7 @@ class SolverConfig:
     async request queue).
     """
     precision: str = "dq_acc"        # dd | dq_fast | dq_acc | qq | kahan
-    backend: str = "jnp"             # jnp | pallas | distributed
+    backend: str = "jnp"             # jnp|pallas|distributed|distributed_batch
     preprocess: bool = True          # master switch for DM + FM (Sec. 4)
     dm: bool | None = None           # override DM elimination
     fm: bool | None = None           # override Forbert-Marx compression
@@ -161,10 +161,24 @@ class ExecutionPlan:
     def num_matrices(self) -> int:
         return len(self.entries)
 
+    # SolverConfig fields that perturb execution/numerics.  Queue and
+    # cache policy (cache, cache_entries, queue_max_batch,
+    # queue_max_delay_s) change WHEN work is dispatched, never what is
+    # computed -- two plans differing only there execute identically.
+    _NUMERIC_FIELDS = ("precision", "backend", "preprocess", "dm", "fm",
+                       "num_chunks")
+
     def fingerprint(self) -> tuple:
-        """Content identity: equal fingerprints -> identical execution."""
+        """Content identity: equal fingerprints -> identical execution.
+
+        Only the numerics-affecting config fields participate; queue /
+        cache policy knobs are deliberately excluded (see
+        ``_NUMERIC_FIELDS``).
+        """
+        cfg = tuple((f, getattr(self.config, f))
+                    for f in self._NUMERIC_FIELDS)
         return (
-            self.config, self.batched, self.is_complex, self.precision,
+            cfg, self.batched, self.is_complex, self.precision,
             tuple((l.owner, complex(l.coef), l.route, l.key)
                   for l in self.leaves),
             tuple(sorted((r, n, tuple(idx))
@@ -278,6 +292,12 @@ def build_plan(mats: list[np.ndarray], config: SolverConfig, *,
         if M.ndim != 2 or M.shape[0] != M.shape[1]:
             raise ValueError(f"square matrices required, got {M.shape}")
     is_complex = any(np.iscomplexobj(M) for M in mats)
+    if is_complex and config.backend in ("distributed", "distributed_batch"):
+        # the mesh engines' twofloat reductions have no complex path; fail
+        # at plan time instead of crashing (or silently downgrading) at
+        # execute/flush time
+        raise ValueError("distributed backend is real-only; use jnp or "
+                         "pallas for complex matrices")
     precision = config.effective_precision(is_complex)
     dtype = np.complex128 if is_complex else np.float64
     do_dm = config.preprocess if config.dm is None else config.dm

@@ -37,6 +37,9 @@ __all__ = [
     "perm_ryser_seq",
     "perm_ryser_chunked",
     "perm_ryser_batched",
+    "batched_values",
+    "tf_tree_sum",
+    "chain_prod",
     "chunk_partial_sums",
     "chunk_geometry",
     "ryser_flops",
@@ -44,8 +47,17 @@ __all__ = [
 
 
 def nw_base_vector(A):
-    """Nijenhuis-Wilf start vector  x[i] = a[i, n-1] - rowsum_i / 2."""
-    rowsum = jnp.sum(A, axis=1)
+    """Nijenhuis-Wilf start vector  x[i] = a[i, n-1] - rowsum_i / 2.
+
+    The row sum is a fixed-order sequential chain, not ``jnp.sum``: XLA
+    reassociates axis reductions depending on the surrounding program
+    shape, and the batch-sharded path needs every contraction in the
+    engine to be batch-shape-independent (see ``batched_values``).
+    """
+    n = A.shape[1]
+    rowsum = A[:, 0]
+    for j in range(1, n):
+        rowsum = rowsum + A[:, j]
     return A[:, -1] - rowsum / 2
 
 
@@ -135,10 +147,15 @@ def chunk_partial_sums(A, T: int, C: int, precision: str = "dq_acc",
 
     x_base = nw_base_vector(A)
 
-    # --- chunk state init via one matmul (Alg. 3 lines 10-13, MXU form) ---
+    # --- chunk state init (Alg. 3 lines 10-13) as fixed-order rank-1
+    # accumulation: a plain ``A @ Gbits`` matmul lets XLA pick the
+    # contraction split per program shape, which breaks the sharded/local
+    # bit-identity contract (see ``batched_values``) ---
     starts = (np.arange(T, dtype=np.uint64) + np.uint64(chunk_offset)) * np.uint64(C)
     Gbits = jnp.asarray(G.gray_bits_matrix(starts, n), dtype=dtype)  # (n, T)
-    X0 = x_base[:, None] + A @ Gbits                                  # (n, T)
+    X0 = x_base[:, None]
+    for j in range(n):
+        X0 = X0 + A[:, j:j + 1] * Gbits[j:j + 1, :]                   # (n, T)
 
     # --- trace-time schedules (the "matrix-specific rebuild" analogue) ---
     sched = G.changed_bit_schedule(k)            # (C-1,) uniform changed bits
@@ -173,7 +190,12 @@ def chunk_partial_sums(A, T: int, C: int, precision: str = "dq_acc",
 
     def product(Xhi, Xlo):
         if not use_qq:
-            return P.tf_from(jnp.prod(Xhi, axis=0))
+            # sequential chain, not jnp.prod: fixed association order
+            # regardless of the surrounding batch shape
+            t = Xhi[0]
+            for i in range(1, n):
+                t = t * Xhi[i]
+            return P.tf_from(t)
         t = P.TwoFloat(Xhi[0], Xlo[0])
         for i in range(1, n):
             t = P.tf_mul_tf(t, P.TwoFloat(Xhi[i], Xlo[i]))
@@ -244,11 +266,13 @@ def _chunked_jit(A, num_chunks: int, precision: str):
     n = A.shape[0]
     T, C, _ = chunk_geometry(n, num_chunks)
     partials = chunk_partial_sums(A, T, C, precision)
-    # outer reduction always in twofloat (paper: quad outer sum)
-    acc = P.tf_zero(dtype=A.dtype)
-    hi, e1 = P.two_sum(jnp.sum(partials.hi), jnp.sum(partials.lo))
+    # outer reduction always in twofloat (paper: quad outer sum), with the
+    # same fixed-order tree/chain reductions as ``batched_values`` so the
+    # scalar and batched engines stay bit-identical
+    p_hi, p_lo = jax.lax.optimization_barrier((partials.hi, partials.lo))
+    hi, e1 = tf_tree_sum(p_hi, p_lo)
     x_base = nw_base_vector(A)
-    p0 = jnp.prod(x_base)
+    p0 = chain_prod(x_base)
     total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
     return P.tf_value(total) * _final_factor(n)
 
@@ -268,19 +292,77 @@ def perm_ryser_chunked(A, num_chunks: int = 4096, precision: str = "dq_acc"):
 # Batched (vmapped Alg. 3): one device program for a stack of matrices
 # ---------------------------------------------------------------------------
 
+def chain_prod(X):
+    """Fixed-order product over axis 0 (see ``tf_tree_sum``: ``jnp.prod``'s
+    association is an XLA scheduling choice, not a contract)."""
+    t = X[0]
+    for i in range(1, X.shape[0]):
+        t = t * X[i]
+    return t
+
+
+def tf_tree_sum(hi, lo):
+    """Pairwise twofloat tree reduction with a FIXED association order.
+
+    ``jnp.sum``'s reduction split is an XLA scheduling decision that
+    depends on the surrounding program shape -- the same (T,) sum inside
+    a (4, T) program and a (32, T) program can associate differently and
+    diverge at the ulp level, and the batch-sharded path promises values
+    bit-identical to the single-device batched engine for ANY shard
+    shape.  So the cross-chunk reduction fixes its own order: halve and
+    merge (hi, lo) pairs with the compensated ``tf_add_tf`` until one
+    element is left (elementwise ops are order-free; the odd tail
+    element is peeled per level, so any length works).  Each merge keeps
+    its rounding error in the lo limb, which is also more accurate on
+    cancellation-heavy inputs than summing hi and lo separately in plain
+    f64 (the pre-PR outer reduction).  Returns scalar ``(hi, lo)``.
+    """
+    L = hi.shape[0]
+    while L > 1:
+        half = L // 2
+        t = P.tf_add_tf(P.TwoFloat(hi[:half], lo[:half]),
+                        P.TwoFloat(hi[half:2 * half], lo[half:2 * half]))
+        if L == 2 * half:
+            hi, lo = t.hi, t.lo
+        else:
+            hi = jnp.concatenate([t.hi, hi[2 * half:]], axis=0)
+            lo = jnp.concatenate([t.lo, lo[2 * half:]], axis=0)
+        L = (L + 1) // 2
+    return hi[0], lo[0]
+
+
+def batched_values(As, T: int, C: int, precision: str):
+    """Traced (B,) permanents of a same-size stack, chunk geometry fixed.
+
+    The single traced body shared by the jitted single-device program
+    (``_batched_jit``) and the per-device body of the mesh-sharded batch
+    path (``distributed.batch_permanents_on_mesh``) -- sharing the trace
+    (plus ``tf_tree_sum``'s fixed-order cross-chunk reduction) is what makes
+    the sharded values bit-identical to the local ones.
+    """
+    n = As.shape[1]
+    parts = jax.vmap(lambda A: chunk_partial_sums(A, T, C, precision))(As)
+    # pin the scan -> outer-reduction boundary: without the barrier XLA
+    # fuses the reduction epilogue into the scan differently at different
+    # batch shapes (fma/reassociation), breaking the bit-identity
+    # contract between sharded and local execution.  (Applied outside the
+    # vmap -- optimization_barrier has no batching rule on JAX 0.4.x.)
+    p_hi, p_lo = jax.lax.optimization_barrier((parts.hi, parts.lo))
+
+    def reduce_one(A, hi_t, lo_t):
+        hi, e1 = tf_tree_sum(hi_t, lo_t)
+        p0 = chain_prod(nw_base_vector(A))
+        total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
+        return P.tf_value(total) * _final_factor(n)
+
+    return jax.vmap(reduce_one)(As, p_hi, p_lo)
+
+
 @partial(jax.jit, static_argnames=("num_chunks", "precision"))
 def _batched_jit(As, num_chunks: int, precision: str):
     n = As.shape[1]
     T, C, _ = chunk_geometry(n, num_chunks)
-
-    def one(A):
-        partials = chunk_partial_sums(A, T, C, precision)
-        hi, e1 = P.two_sum(jnp.sum(partials.hi), jnp.sum(partials.lo))
-        p0 = jnp.prod(nw_base_vector(A))
-        total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
-        return P.tf_value(total) * _final_factor(n)
-
-    return jax.vmap(one)(As)
+    return batched_values(As, T, C, precision)
 
 
 def perm_ryser_batched(As, num_chunks: int = 4096, precision: str = "dq_acc"):

@@ -61,10 +61,15 @@ class PermanentRequest:
         self.report: PermanentReport | None = None
 
     def result(self) -> complex | float:
-        """The permanent; flushes the owning solver's queue if pending."""
+        """The permanent; flushes this request's size bucket if pending.
+
+        Only the owning bucket is flushed -- a planning failure in an
+        unrelated size bucket must not raise out of ``result()`` and
+        strand a perfectly resolvable future.
+        """
         if not self.done:
-            self._solver.flush()
-        assert self.done, "flush must resolve every queued request"
+            self._solver._flush_bucket(self.n)
+        assert self.done, "bucket flush must resolve every queued request"
         return self.value
 
     def _resolve(self, value, report) -> None:
@@ -104,10 +109,9 @@ class PermanentSolver:
 
     def plan_batch(self, As: Sequence) -> ExecutionPlan:
         """Bucketed batch plan: same-size same-route leaves share one
-        device program."""
-        if self.config.backend not in ("jnp", "pallas"):
-            raise ValueError(f"batch plans support jnp|pallas, got "
-                             f"{self.config.backend}")
+        device program (vmapped locally, or batch-axis-sharded over the
+        mesh when the solver holds a ``distributed_ctx`` and the backend
+        is ``distributed``/``distributed_batch``)."""
         return build_plan(list(As), self.config, batched=True)
 
     # -- execute ------------------------------------------------------------
@@ -138,11 +142,12 @@ class PermanentSolver:
         A = np.asarray(A)
         if A.ndim != 2 or A.shape[0] != A.shape[1]:
             raise ValueError(f"square matrix required, got {A.shape}")
-        if self.config.backend not in ("jnp", "pallas"):
+        if np.iscomplexobj(A) and self.config.backend in (
+                "distributed", "distributed_batch"):
             # fail fast: flushes go through plan_batch, which would only
-            # reject the backend after the request had been queued
-            raise ValueError(f"queued requests support jnp|pallas, got "
-                             f"{self.config.backend}")
+            # reject complex input after the request had been queued
+            raise ValueError("distributed backend is real-only; use jnp "
+                             "or pallas for complex matrices")
         req = PermanentRequest(self, A)
         t0, reqs = self._queue.setdefault(A.shape[0],
                                           (self._clock(), []))

@@ -25,9 +25,11 @@ import numpy as np
 
 from . import gray as G
 from . import precision as P
-from .ryser import chunk_geometry, nw_base_vector, _final_factor
+from .ryser import (chain_prod, chunk_geometry, nw_base_vector, tf_tree_sum,
+                    _final_factor)
 
 __all__ = ["SparseMatrix", "perm_sparyser_chunked", "perm_sparyser_batched",
+           "sparse_batched_values", "pack_padded_ccs",
            "sparse_chunk_partial_sums"]
 
 
@@ -144,7 +146,11 @@ def _sparse_partials_traced(A, rows_pad, vals_pad, T: int, C: int,
 
     starts = (np.arange(T, dtype=np.uint64) + np.uint64(chunk_offset)) * np.uint64(C)
     Gbits = jnp.asarray(G.gray_bits_matrix(starts, n), dtype=dtype)
-    X0 = x_base[:, None] + A @ Gbits                      # (n, T)
+    # fixed-order rank-1 init, not ``A @ Gbits`` (see ryser.chain_prod:
+    # XLA's contraction split is batch-shape-dependent)
+    X0 = x_base[:, None]
+    for j in range(n):
+        X0 = X0 + A[:, j:j + 1] * Gbits[j:j + 1, :]       # (n, T)
     # extended with dummy row n for padded scatters
     X0 = jnp.concatenate([X0, jnp.zeros((1, T), dtype=dtype)], axis=0)
 
@@ -186,7 +192,7 @@ def _sparse_partials_traced(A, rows_pad, vals_pad, T: int, C: int,
         r = rows_pad[col_j]                                # (maxdeg,)
         v = vals_pad[col_j]                                # (maxdeg,)
         X = X.at[r, :].add(v[:, None] * s[None, :])
-        prod = jnp.prod(X[:n], axis=0)
+        prod = chain_prod(X[:n])
         term = jnp.where(par == 1, -prod, prod)
         acc = accum(acc, term)
         return (X, acc), None
@@ -201,7 +207,7 @@ def _sparse_partials_traced(A, rows_pad, vals_pad, T: int, C: int,
     sgn = jnp.asarray((tail_sign * tail_live).astype(np.float64)).astype(dtype)
     upd = (v * sgn[:, None]).T                             # (maxdeg, T)
     X = X.at[r.T, jnp.arange(T)[None, :]].add(upd)
-    prod = jnp.prod(X[:n], axis=0)
+    prod = chain_prod(X[:n])
     live = jnp.asarray(tail_live)
     neg = (C & 1) == 1
     term = jnp.where(live, -prod if neg else prod, jnp.zeros_like(prod))
@@ -227,26 +233,71 @@ def perm_sparyser_chunked(sp: SparseMatrix, num_chunks: int = 4096,
         return np.asarray(A[0, 0] * A[1, 1] + A[0, 1] * A[1, 0]).item()
     T, C, _ = chunk_geometry(n, num_chunks)
     partials = sparse_chunk_partial_sums(sp, T, C, precision)
-    hi, e1 = P.two_sum(jnp.sum(partials.hi), jnp.sum(partials.lo))
-    p0 = jnp.prod(nw_base_vector(A))
+    # same fixed-order reductions as the batched path (bit-identity)
+    p_hi, p_lo = jax.lax.optimization_barrier((partials.hi, partials.lo))
+    hi, e1 = tf_tree_sum(p_hi, p_lo)
+    p0 = chain_prod(nw_base_vector(A))
     total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
     return np.asarray(P.tf_value(total)).item() * _final_factor(n)
+
+
+def sparse_batched_values(A_stack, rows_stack, vals_stack, T: int, C: int,
+                          precision: str):
+    """Traced (B,) sparse permanents of a packed same-size stack.
+
+    Shared by the jitted single-device program (``_sparse_batched_jit``)
+    and the per-device body of the mesh-sharded sparse batch path
+    (``distributed.sparse_batch_permanents_on_mesh``) -- one trace (and
+    ``ryser.tf_tree_sum``'s fixed-order cross-chunk reduction), so sharded
+    and local values are bit-identical for any shard shape.
+    """
+    n = A_stack.shape[1]
+    parts = jax.vmap(
+        lambda A, r, v: _sparse_partials_traced(A, r, v, T, C, precision)
+    )(A_stack, rows_stack, vals_stack)
+    # see ryser.batched_values: fusion across this boundary is
+    # batch-shape-dependent and would break shard/local bit-identity
+    p_hi, p_lo = jax.lax.optimization_barrier((parts.hi, parts.lo))
+
+    def reduce_one(A, hi_t, lo_t):
+        hi, e1 = tf_tree_sum(hi_t, lo_t)
+        p0 = chain_prod(nw_base_vector(A))
+        total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
+        return P.tf_value(total) * _final_factor(n)
+
+    return jax.vmap(reduce_one)(A_stack, p_hi, p_lo)
 
 
 @partial(jax.jit, static_argnames=("T", "C", "precision"))
 def _sparse_batched_jit(A_stack, rows_stack, vals_stack, T: int, C: int,
                         precision: str):
-    n = A_stack.shape[1]
+    return sparse_batched_values(A_stack, rows_stack, vals_stack, T, C,
+                                 precision)
 
-    def one(A, rows_pad, vals_pad):
-        parts = _sparse_partials_traced(A, rows_pad, vals_pad, T, C,
-                                        precision)
-        hi, e1 = P.two_sum(jnp.sum(parts.hi), jnp.sum(parts.lo))
-        p0 = jnp.prod(nw_base_vector(A))
-        total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
-        return P.tf_value(total) * _final_factor(n)
 
-    return jax.vmap(one)(A_stack, rows_stack, vals_stack)
+def pack_padded_ccs(sps: list[SparseMatrix]):
+    """Pack a same-size bucket into batch-stacked dense + padded-CCS arrays.
+
+    Returns host-side ``(A_stack, rows_stack, vals_stack)`` with shapes
+    (B, n, n), (B, n, maxdeg), (B, n, maxdeg); the per-matrix columns are
+    padded to the bucket-wide max column degree with (row=n, val=0)
+    entries, which scatter into the dummy row and are arithmetically
+    inert -- per-element numerics do not depend on the bucket's maxdeg.
+    """
+    assert sps, "empty bucket"
+    n = sps[0].n
+    assert all(sp.n == n for sp in sps), "bucket must be same-size"
+    padded = [sp.padded_columns() for sp in sps]
+    maxdeg = max(r.shape[1] for r, _ in padded)
+    B = len(sps)
+    dtype = np.result_type(*(v.dtype for _, v in padded))
+    rows_stack = np.full((B, n, maxdeg), n, dtype=np.int32)
+    vals_stack = np.zeros((B, n, maxdeg), dtype=dtype)
+    for b, (r, v) in enumerate(padded):
+        rows_stack[b, :, :r.shape[1]] = r
+        vals_stack[b, :, :v.shape[1]] = v
+    A_stack = np.stack([sp.to_dense().astype(dtype) for sp in sps])
+    return A_stack, rows_stack, vals_stack
 
 
 def perm_sparyser_batched(sps: list[SparseMatrix], num_chunks: int = 4096,
@@ -266,17 +317,7 @@ def perm_sparyser_batched(sps: list[SparseMatrix], num_chunks: int = 4096,
     if n <= 2:
         return np.array([perm_sparyser_chunked(sp) for sp in sps])
     T, C, _ = chunk_geometry(n, num_chunks)
-    padded = [sp.padded_columns() for sp in sps]
-    maxdeg = max(r.shape[1] for r, _ in padded)
-    B = len(sps)
-    dtype = np.result_type(*(v.dtype for _, v in padded))
-    rows_stack = np.full((B, n, maxdeg), n, dtype=np.int32)
-    vals_stack = np.zeros((B, n, maxdeg), dtype=dtype)
-    for b, (r, v) in enumerate(padded):
-        rows_stack[b, :, :r.shape[1]] = r
-        vals_stack[b, :, :v.shape[1]] = v
-    A_stack = jnp.asarray(np.stack([sp.to_dense().astype(dtype)
-                                    for sp in sps]))
-    out = _sparse_batched_jit(A_stack, jnp.asarray(rows_stack),
+    A_stack, rows_stack, vals_stack = pack_padded_ccs(sps)
+    out = _sparse_batched_jit(jnp.asarray(A_stack), jnp.asarray(rows_stack),
                               jnp.asarray(vals_stack), T, C, precision)
     return np.asarray(out)

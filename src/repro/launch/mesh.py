@@ -12,7 +12,8 @@ import math
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "mesh_device_count"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_batch_mesh",
+           "mesh_device_count"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -32,6 +33,22 @@ def make_local_mesh(model_axis: int | None = None):
             model_axis *= 2
     data = n // model_axis
     return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def make_batch_mesh(num_devices: int | None = None):
+    """One-axis ("data",) mesh for batch-axis sharding (permanent serving).
+
+    ``num_devices=None`` takes every visible device; an explicit count
+    takes the first ``num_devices`` (must not exceed the host's devices).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    avail = jax.devices()
+    n = len(avail) if num_devices is None else int(num_devices)
+    if not 1 <= n <= len(avail):
+        raise ValueError(f"need 1 <= num_devices <= {len(avail)}, got {n}")
+    return Mesh(np.array(avail[:n]), ("data",))
 
 
 def mesh_device_count(mesh) -> int:

@@ -52,6 +52,11 @@ def _load_matrix(args) -> np.ndarray:
 
 
 def permanent_main(argv=None) -> int:
+    # f64 is required for the engines' precision semantics: without it
+    # jnp.asarray silently downcasts the planner's float64 leaves to f32
+    # and every precision mode reports f32-level error
+    import jax
+    jax.config.update("jax_enable_x64", True)
     ap = argparse.ArgumentParser()
     ap.add_argument("--matrix", help=".npy file with a square matrix")
     ap.add_argument("--n", type=int, default=16)

@@ -4,6 +4,9 @@
         --prompt-len 64 --gen 32 --batch 4 [--reduced]
     PYTHONPATH=src python -m repro.launch.serve --mode permanent \
         --perm-n 10 --batch 32 --requests 256
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --mode permanent \
+        --perm-n 12 --batch 64 --requests 256 --mesh 8
 
 LM mode builds the serve bundle (KV sharding policy chosen per arch/mesh),
 prefills a synthetic prompt batch, then decodes greedily.  Permanent mode
@@ -109,7 +112,7 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
                           requests: int = 128, density: float = 1.0,
                           precision: str = "dq_acc", backend: str = "jnp",
                           repeat_pool: int = 0, deadline_s: float = 0.05,
-                          cache: bool = True, seed: int = 0):
+                          cache: bool = True, mesh=None, seed: int = 0):
     """Drain a synthetic permanent-request stream through the solver queue.
 
     ``requests`` random n x n matrices (dense, or sparse when
@@ -119,7 +122,9 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
     accumulation flushes each bucket at depth ``batch`` (or after
     ``deadline_s``), so batches fill from the arrival stream instead of
     being hand-rolled; repeated submatrices resolve from the solver's
-    content-hash result cache without touching the device.  Returns
+    content-hash result cache without touching the device.  With ``mesh``
+    set (and ``backend="distributed"``), flushed buckets are batch-axis
+    sharded over the mesh's devices instead of running on one.  Returns
     perms/sec and per-flush latency stats; the first flush (compile) is
     reported separately.
     """
@@ -128,6 +133,9 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
     if batch < 1 or requests < 1:
         raise ValueError(f"need batch >= 1 and requests >= 1, got "
                          f"batch={batch} requests={requests}")
+    if mesh is not None and backend not in ("distributed",
+                                            "distributed_batch"):
+        backend = "distributed"      # a mesh implies the sharded bucket path
     rng = np.random.default_rng(seed)
 
     def draw():
@@ -144,7 +152,8 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
 
     solver = PermanentSolver(SolverConfig(
         precision=precision, backend=backend, cache=cache,
-        queue_max_batch=batch, queue_max_delay_s=deadline_s))
+        queue_max_batch=batch, queue_max_delay_s=deadline_s),
+        distributed_ctx=mesh)
     lat = []                     # (seconds, served requests) per flush
     reqs = []
     t_all = time.time()
@@ -175,6 +184,7 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
             "perms_per_s": steady_n / steady_s if steady_s else 0.0,
             "batches": len(lat) + (1 if tail else 0),
             "cache": stats["cache"],
+            "downgrades": stats["downgrades"],
             "device_dispatches": stats["device_dispatches"]}
 
 
@@ -201,17 +211,36 @@ def serve_main(argv=None) -> int:
     ap.add_argument("--no-cache", dest="cache", action="store_false",
                     help="permanent mode: disable the result cache")
     ap.add_argument("--precision", default="dq_acc")
-    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"))
+    ap.add_argument("--backend", default="jnp",
+                    choices=("jnp", "pallas", "distributed"))
+    ap.add_argument("--mesh", nargs="?", const="auto", default=None,
+                    metavar="N",
+                    help="permanent mode: shard flushed buckets over a "
+                         "N-device ('data',) mesh (default: all devices; "
+                         "implies --backend distributed).  Force host "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8")
     args = ap.parse_args(argv)
     if args.mode == "permanent":
         jax.config.update("jax_enable_x64", True)
+        mesh = None
+        if args.mesh is not None:
+            from .mesh import make_batch_mesh
+            mesh = make_batch_mesh(
+                None if args.mesh == "auto" else int(args.mesh))
+            print(f"[serve] batch-sharding buckets over "
+                  f"{mesh.devices.size}-device mesh {mesh.axis_names}")
         out = run_permanent_serving(
             n=args.perm_n, batch=args.batch, requests=args.requests,
             density=args.density, precision=args.precision,
             backend=args.backend, repeat_pool=args.repeat_pool,
-            deadline_s=args.deadline_ms / 1e3, cache=args.cache)
+            deadline_s=args.deadline_ms / 1e3, cache=args.cache, mesh=mesh)
         print(f"[serve] permanents: {args.requests} reqs x n={args.perm_n} "
-              f"batch={args.batch} backend={args.backend}")
+              f"batch={args.batch} backend="
+              f"{'distributed' if mesh is not None else args.backend}")
+        if out["downgrades"]:
+            print(f"[serve] downgrades: {len(out['downgrades'])} "
+                  f"(e.g. {out['downgrades'][0]})")
         print(f"[serve] compile batch {out['compile_batch_s']:.3f}s, steady "
               f"{out['steady_batch_s'] * 1e3:.1f}ms/batch -> "
               f"{out['perms_per_s']:.0f} perms/s")

@@ -1,0 +1,284 @@
+"""Mesh-sharded batch execution (ISSUE 3 tentpole).
+
+The ``distributed_batch`` strategy shards a same-size bucket's leading
+axis over ``core.distributed``'s mesh; its contract is BIT-IDENTICAL
+values to the ``jnp`` backend per precision mode.  Fast tests run on a
+1-device mesh in-process (the smoke-test contract keeps this process at
+1 device); real multi-device coverage runs in subprocesses with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (also exercised
+directly by the CI multi-device job and ``benchmarks/batch_sharding``).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import distributed, engine, ryser, sparyser
+from repro.core.executor import available_backends, get_backend
+from repro.core.solver import PermanentSolver, SolverConfig
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+RNG = np.random.default_rng(20260726)
+
+PRECISIONS = ("dd", "dq_fast", "dq_acc", "qq", "kahan")
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _rand_sparse(n, density, rng=RNG):
+    return rng.uniform(0.5, 1.5, (n, n)) * (rng.uniform(0, 1, (n, n)) < density)
+
+
+# ---------------------------------------------------------------------------
+# entry points: bit-identity vs the jnp batched engines
+# ---------------------------------------------------------------------------
+
+def test_batch_on_mesh_bitwise_matches_jnp_per_precision():
+    stack = RNG.uniform(-1, 1, (5, 9, 9))
+    mesh = _mesh1()
+    for prec in PRECISIONS:
+        got = distributed.batch_permanents_on_mesh(stack, mesh,
+                                                   precision=prec)
+        ref = np.asarray(ryser.perm_ryser_batched(stack, precision=prec))
+        assert np.array_equal(got, ref), prec
+
+
+def test_sparse_batch_on_mesh_bitwise_matches_jnp():
+    sps = [sparyser.SparseMatrix.from_dense(_rand_sparse(8, 0.25))
+           for _ in range(3)]
+    got = distributed.sparse_batch_permanents_on_mesh(sps, _mesh1())
+    ref = np.asarray(sparyser.perm_sparyser_batched(sps))
+    assert np.array_equal(got, ref)
+
+
+def test_batch_on_mesh_tiny_n_closed_forms():
+    stack = RNG.uniform(-1, 1, (4, 2, 2))
+    got = distributed.batch_permanents_on_mesh(stack, _mesh1())
+    ref = np.asarray(ryser.perm_ryser_batched(stack))
+    np.testing.assert_allclose(got, ref, rtol=0)
+
+
+def test_batch_on_mesh_validates_shape():
+    with pytest.raises(ValueError):
+        distributed.batch_permanents_on_mesh(np.zeros((3, 4, 5)), _mesh1())
+
+
+# ---------------------------------------------------------------------------
+# satellite: distributed is real-only, rejected at plan/entry time
+# ---------------------------------------------------------------------------
+
+def test_complex_rejected_at_every_distributed_entry():
+    C = RNG.normal(size=(5, 5)) + 1j * RNG.normal(size=(5, 5))
+    mesh = _mesh1()
+    with pytest.raises(ValueError, match="real-only"):
+        distributed.batch_permanents_on_mesh(
+            np.stack([C, C]), mesh)
+    with pytest.raises(ValueError, match="real-only"):
+        distributed.permanent_on_mesh(C, mesh)
+    with pytest.raises(ValueError, match="real-only"):
+        distributed.DistributedPermanent(mesh).permanent(C)
+    # plan/submit time, for both distributed backends
+    for backend in ("distributed", "distributed_batch"):
+        solver = PermanentSolver(backend=backend)
+        with pytest.raises(ValueError, match="real-only"):
+            solver.plan(C)
+        with pytest.raises(ValueError, match="real-only"):
+            solver.plan_batch([C])
+        with pytest.raises(ValueError, match="real-only"):
+            solver.submit(C)
+        assert solver.pending == 0, "rejected submits must not enqueue"
+    with pytest.raises(ValueError, match="real-only"):
+        engine.permanent_batch([C, C], backend="distributed")
+
+
+# ---------------------------------------------------------------------------
+# executor routing: registry, sharded buckets, tagged downgrades
+# ---------------------------------------------------------------------------
+
+def test_registry_has_distributed_batch_strategy():
+    assert "distributed_batch" in available_backends()
+    be = get_backend("distributed_batch")
+    assert be.name == "distributed_batch"
+    # no mesh attached -> batch methods signal downgrade
+    assert be.dense_batch(RNG.uniform(-1, 1, (3, 5, 5)),
+                          precision="dq_acc", num_chunks=64) is None
+
+
+def test_solver_without_mesh_downgrades_with_tag():
+    mats = [RNG.uniform(-1, 1, (7, 7)) for _ in range(3)]
+    solver = PermanentSolver(SolverConfig(backend="distributed",
+                                          preprocess=False))
+    vals, reports = solver.execute(solver.plan_batch(mats),
+                                   return_report=True)
+    ref = engine.permanent_batch(mats, preprocess=False)
+    np.testing.assert_allclose(vals, ref, rtol=0)
+    tags = [t for r in reports for t in r.dispatch]
+    assert any("distributed->jnp" in t for t in tags), tags
+    assert solver.stats()["downgrades"]
+
+
+def test_solver_with_mesh_shards_buckets_bitwise():
+    mesh = _mesh1()
+    mats = [RNG.uniform(-1, 1, (8, 8)) for _ in range(4)] \
+        + [_rand_sparse(9, 0.22) for _ in range(3)]
+    dist = PermanentSolver(SolverConfig(backend="distributed",
+                                        preprocess=False),
+                           distributed_ctx=mesh)
+    jnp_s = PermanentSolver(SolverConfig(backend="jnp", preprocess=False))
+    got, reports = dist.execute(dist.plan_batch(mats), return_report=True)
+    ref = jnp_s.execute(jnp_s.plan_batch(mats))
+    assert np.array_equal(got, ref), "sharded buckets must be bit-identical"
+    assert not dist.stats()["downgrades"]
+    tags = [t for r in reports for t in r.dispatch]
+    assert any(t.startswith("dense_batch") and "->" not in t for t in tags)
+
+
+def test_bare_mesh_accepted_as_ctx_for_queue():
+    mesh = _mesh1()
+    solver = PermanentSolver(SolverConfig(backend="distributed",
+                                          queue_max_batch=4,
+                                          queue_max_delay_s=1e9),
+                             distributed_ctx=mesh)
+    mats = [RNG.uniform(-1, 1, (6, 6)) for _ in range(4)]
+    reqs = [solver.submit(M) for M in mats]
+    assert all(r.done for r in reqs)
+    ref = engine.permanent_batch(mats)
+    assert np.array_equal(np.array([r.result() for r in reqs]), ref)
+    assert not solver.stats()["downgrades"]
+
+
+# ---------------------------------------------------------------------------
+# cache interaction: sharded values live under their own cache identity
+# ---------------------------------------------------------------------------
+
+def test_sharded_bucket_cache_roundtrip():
+    mesh = _mesh1()
+    mats = [RNG.uniform(-1, 1, (7, 7)) for _ in range(3)]
+    solver = PermanentSolver(SolverConfig(backend="distributed",
+                                          preprocess=False),
+                             distributed_ctx=mesh)
+    v1 = solver.execute(solver.plan_batch(mats))
+    dispatches = solver.stats()["device_dispatches"]
+    assert all(k[3] == "distributed_batch" for k in solver.cache._data), \
+        "sharded values must be cached under the producing strategy"
+    v2 = solver.execute(solver.plan_batch(mats))
+    assert np.array_equal(v1, v2)
+    assert solver.stats()["device_dispatches"] == dispatches, \
+        "second pass must be all cache hits"
+
+
+def test_singleton_bucket_under_mesh_stays_bitwise_and_cacheable():
+    # a 1-leaf bucket must NOT fall back to the scalar step-space split
+    # (not bit-identical to the batch engines, and its cache entry would
+    # live under a key the batched probes never read)
+    mesh = _mesh1()
+    A = RNG.uniform(-1, 1, (8, 8))
+    solver = PermanentSolver(SolverConfig(backend="distributed",
+                                          preprocess=False),
+                             distributed_ctx=mesh)
+    v1 = solver.execute(solver.plan_batch([A]))
+    jnp_solver = PermanentSolver(SolverConfig(backend="jnp",
+                                              preprocess=False))
+    ref = jnp_solver.execute(jnp_solver.plan_batch([A]))
+    assert np.array_equal(v1, ref)
+    assert all(k[3] == "distributed_batch" for k in solver.cache._data)
+    dispatches = solver.stats()["device_dispatches"]
+    v2 = solver.execute(solver.plan_batch([A]))
+    assert np.array_equal(v1, v2)
+    assert solver.stats()["device_dispatches"] == dispatches, \
+        "singleton's cache entry must satisfy the batched probe"
+
+
+def test_downgraded_and_sharded_values_use_distinct_cache_keys():
+    # same solver config, with vs without a mesh: the no-mesh run caches
+    # jnp numbers under "jnp", never under the distributed identity
+    mats = [RNG.uniform(-1, 1, (6, 6)) for _ in range(3)]
+    no_mesh = PermanentSolver(SolverConfig(backend="distributed",
+                                           preprocess=False))
+    no_mesh.execute(no_mesh.plan_batch(mats))
+    assert all(k[3] == "jnp" for k in no_mesh.cache._data)
+
+
+# ---------------------------------------------------------------------------
+# multi-device subprocesses (XLA_FLAGS is init-time)
+# ---------------------------------------------------------------------------
+
+def _run_sub(code: str, devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    full = textwrap.dedent("""
+        import jax; jax.config.update("jax_enable_x64", True)
+        import numpy as np
+        from repro.core import distributed, engine, ryser, sparyser
+        from repro.core.solver import PermanentSolver, SolverConfig
+        mesh = jax.make_mesh((8,), ("data",))
+    """) + textwrap.dedent(code)
+    r = subprocess.run([sys.executable, "-c", full], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_eight_device_dense_bitwise_with_ragged_tail():
+    out = _run_sub("""
+        rng = np.random.default_rng(3)
+        for n, B in ((10, 11), (13, 21)):   # B % 8 != 0: padded + masked
+            stack = rng.uniform(-1, 1, (B, n, n))
+            for prec in ("dd", "dq_fast", "dq_acc", "qq", "kahan"):
+                got = distributed.batch_permanents_on_mesh(
+                    stack, mesh, precision=prec)
+                ref = np.asarray(ryser.perm_ryser_batched(
+                    stack, precision=prec))
+                assert np.array_equal(got, ref), (n, B, prec)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_eight_device_sparse_route_bitwise():
+    out = _run_sub("""
+        rng = np.random.default_rng(4)
+        sps = [sparyser.SparseMatrix.from_dense(
+                   rng.uniform(0.5, 1.5, (11, 11))
+                   * (rng.uniform(0, 1, (11, 11)) < 0.25))
+               for _ in range(13)]          # ragged over 8 devices
+        got = distributed.sparse_batch_permanents_on_mesh(sps, mesh)
+        ref = np.asarray(sparyser.perm_sparyser_batched(sps))
+        assert np.array_equal(got, ref)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_eight_device_solver_queue_and_cache():
+    out = _run_sub("""
+        rng = np.random.default_rng(5)
+        pool = [rng.uniform(-1, 1, (9, 9)) for _ in range(6)]
+        stream = [pool[i] for i in rng.integers(0, 6, 32)]
+        dist = PermanentSolver(SolverConfig(backend="distributed",
+                                            queue_max_batch=16,
+                                            queue_max_delay_s=1e9),
+                               distributed_ctx=mesh)
+        reqs = [dist.submit(M) for M in stream]
+        dist.flush()
+        got = np.array([r.result() for r in reqs])
+        ref = engine.permanent_batch(stream)
+        assert np.array_equal(got, ref), np.abs(got - ref).max()
+        st = dist.stats()
+        assert not st["downgrades"], st["downgrades"]
+        assert st["cache"]["hits"] > 0, "repeat pool must hit the cache"
+        print("OK")
+    """)
+    assert "OK" in out

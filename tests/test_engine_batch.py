@@ -189,5 +189,7 @@ def test_batch_dm_zeroed_matrix_gives_zero():
 def test_batch_rejects_bad_inputs():
     with pytest.raises(ValueError):
         engine.permanent_batch([np.zeros((3, 4))])
+    # distributed batches are allowed now (ISSUE 3) but real-only
     with pytest.raises(ValueError):
-        engine.permanent_batch(np.zeros((2, 3, 3)), backend="distributed")
+        engine.permanent_batch(np.zeros((2, 3, 3), dtype=complex),
+                               backend="distributed")

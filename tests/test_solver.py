@@ -74,8 +74,12 @@ def test_plan_validates_shapes():
         solver.plan(np.zeros((3, 4)))
     with pytest.raises(ValueError):
         solver.plan_batch([np.zeros((3, 4))])
+    # distributed batch plans are allowed now (ISSUE 3), but real-only
     with pytest.raises(ValueError):
-        PermanentSolver(backend="distributed").plan_batch([np.eye(3)])
+        PermanentSolver(backend="distributed").plan_batch(
+            [np.eye(3, dtype=complex)])
+    assert PermanentSolver(backend="distributed").plan_batch(
+        [np.eye(3)]).batched
 
 
 # ---------------------------------------------------------------------------
@@ -258,11 +262,17 @@ def test_queue_result_forces_flush():
     np.testing.assert_allclose(req.result(), engine.permanent(A), rtol=1e-12)
 
 
-def test_queue_rejects_unbatchable_backend_at_submit():
+def test_queue_accepts_distributed_backend_rejects_complex():
+    # ISSUE 3 lifted the jnp|pallas-only guard: real submits queue and
+    # flush (downgrading to jnp without a mesh), complex fails fast
     solver = PermanentSolver(backend="distributed")
     with pytest.raises(ValueError):
-        solver.submit(np.eye(5))
+        solver.submit(np.eye(5, dtype=complex))
     assert solver.pending == 0, "rejected submits must not enqueue"
+    A = RNG.uniform(-1, 1, (5, 5))
+    req = solver.submit(A)
+    assert solver.pending == 1
+    np.testing.assert_allclose(req.result(), engine.permanent(A), rtol=1e-12)
 
 
 def test_queue_repeated_submatrices_hit_cache():
@@ -309,6 +319,99 @@ def test_batch_real_pallas_does_not_tag_downgrade():
                                         preprocess=False, return_report=True)
     tags = [t for r in reports for t in r.dispatch]
     assert tags and not any("->" in t for t in tags)
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfixes (ISSUE 3): stale downgrade cache keys, per-bucket
+# result() flush, fingerprint over-identity
+# ---------------------------------------------------------------------------
+
+def test_downgraded_bucket_caches_under_producing_backend():
+    # a complex bucket under pallas downgrades to jnp; before the fix its
+    # values were cached under the *configured* backend ("pallas"), so a
+    # jnp number could later satisfy a genuine pallas lookup
+    Cs = [RNG.normal(size=(6, 6)) + 1j * RNG.normal(size=(6, 6))
+          for _ in range(3)]
+    solver = PermanentSolver(SolverConfig(backend="pallas",
+                                          preprocess=False))
+    solver.execute(solver.plan_batch(Cs))
+    assert len(solver.cache._data) == 3
+    assert all(k[3] == "jnp" for k in solver.cache._data), \
+        "downgraded values must be cached under the backend that " \
+        "actually produced them"
+
+
+def test_downgraded_values_are_reusable_by_jnp_plans():
+    # the flip side of correct keying: jnp-produced downgrade values ARE
+    # legitimate jnp results, so a later jnp-backend plan over the same
+    # matrices is served entirely from the shared cache
+    from repro.core.executor import execute_plan
+    from repro.core.planner import build_plan
+    Cs = [RNG.normal(size=(6, 6)) + 1j * RNG.normal(size=(6, 6))
+          for _ in range(3)]
+    shared = ResultCache(64)
+    plan_p = build_plan(Cs, SolverConfig(backend="pallas",
+                                         preprocess=False), batched=True)
+    totals_p, _, stats_p = execute_plan(plan_p, cache=shared)
+    assert stats_p.downgrades
+    plan_j = build_plan(Cs, SolverConfig(backend="jnp", preprocess=False),
+                        batched=True)
+    totals_j, _, stats_j = execute_plan(plan_j, cache=shared)
+    assert stats_j.device_dispatches == 0, \
+        "jnp plan must be served from the downgraded pallas run's cache"
+    assert stats_j.cache_hits == 3
+    np.testing.assert_allclose(totals_j, totals_p, rtol=0)
+
+
+def test_genuine_pallas_values_keep_their_own_cache_identity():
+    # real n >= 4 buckets really run the pallas kernel: their cache
+    # entries must NOT collide with jnp's for the same matrices
+    As = [RNG.uniform(-1, 1, (6, 6)) for _ in range(3)]
+    solver = PermanentSolver(SolverConfig(backend="pallas",
+                                          preprocess=False))
+    solver.execute(solver.plan_batch(As))
+    assert all(k[3] == "pallas" for k in solver.cache._data)
+
+
+def test_result_flushes_only_own_bucket():
+    # a planning failure in an unrelated size bucket must not raise out
+    # of result() -- before the fix, result() flushed EVERY bucket
+    solver = PermanentSolver(queue_max_batch=100, queue_max_delay_s=1e9)
+    boom = RuntimeError("unrelated 6x6 bucket is broken")
+    orig = solver.plan_batch
+
+    def plan_batch(mats):
+        if mats[0].shape[0] == 6:
+            raise boom
+        return orig(mats)
+
+    solver.plan_batch = plan_batch
+    r6 = solver.submit(RNG.uniform(-1, 1, (6, 6)))
+    r7 = solver.submit(RNG.uniform(-1, 1, (7, 7)))
+    val = r7.result()                     # must not touch the 6x6 bucket
+    assert r7.done and not r6.done
+    np.testing.assert_allclose(val, engine.permanent(r7.matrix), rtol=1e-12)
+    assert solver.pending == 1, "the broken bucket stays queued"
+    with pytest.raises(RuntimeError):     # full flush still surfaces it
+        solver.flush()
+
+
+def test_fingerprint_ignores_queue_and_cache_policy():
+    A = RNG.uniform(-1, 1, (8, 8))
+    base = SolverConfig()
+    p1 = build_plan([A], base, batched=False)
+    p2 = build_plan([A], base.replace(cache=False, cache_entries=7,
+                                      queue_max_batch=999,
+                                      queue_max_delay_s=1e9),
+                    batched=False)
+    assert p1 == p2, "queue/cache policy must not perturb plan identity"
+    assert p1.fingerprint() == p2.fingerprint()
+    # numerics-affecting fields still count
+    assert p1 != build_plan([A], base.replace(num_chunks=128), batched=False)
+    assert p1 != build_plan([A], base.replace(precision="kahan"),
+                            batched=False)
+    assert p1 != build_plan([A], base.replace(backend="pallas"),
+                            batched=False)
 
 
 # ---------------------------------------------------------------------------
