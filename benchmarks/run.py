@@ -41,7 +41,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table3,table4,table5,fig7,batch,"
-                         "solver_cache,batch_sharding,roofline")
+                         "solver_cache,batch_sharding,batch_complex,"
+                         "roofline")
     ap.add_argument("--fast", action="store_true",
                     help="smaller n (CI-sized)")
     ap.add_argument("--check", action="store_true",
@@ -55,9 +56,9 @@ def main(argv=None) -> int:
     import jax
     jax.config.update("jax_enable_x64", True)
 
-    from . import (batch_sharding, batch_throughput, fig7_scaling,
-                   roofline_report, solver_cache, table3_precision,
-                   table4_dense, table5_sparse)
+    from . import (batch_complex, batch_sharding, batch_throughput,
+                   fig7_scaling, roofline_report, solver_cache,
+                   table3_precision, table4_dense, table5_sparse)
 
     t0 = time.time()
     if not only or "batch" in only:
@@ -84,6 +85,17 @@ def main(argv=None) -> int:
         if args.check and not batch_sharding.check(rows):
             print("# batch_sharding gate RED -- sharded buckets below "
                   "0.9x jnp or not bit-identical")
+            return 1
+    if not only or "batch_complex" in only:
+        # forced 8-device mesh in a subprocess, like batch_sharding
+        rows = batch_complex.run(
+            sizes=batch_complex.SIZES[:1] if args.fast
+            else batch_complex.SIZES,
+            repeats=3 if args.fast else 5)
+        print_rows("batch_complex", rows)
+        if args.check and not batch_complex.check(rows):
+            print("# batch_complex gate RED -- complex pallas/sharded "
+                  "buckets below 0.9x jnp or values diverged")
             return 1
     if not only or "table3" in only:
         if args.fast:

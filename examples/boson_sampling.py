@@ -4,8 +4,11 @@ The probability of detecting output configuration T given input S through
 a linear-optical network U is  |perm(U_{S,T})|^2 / (prod s_i! prod t_j!).
 This example builds a Haar-random unitary interferometer, extracts the
 submatrices for a set of output patterns, and computes their probabilities
-with the SUperman engine -- including the *batched* path (vmap over many
-submatrices), something the original CUDA tool cannot express.
+with the SUperman engine -- including the *batched complex* solver path
+(one bucketed device program per submatrix size, complex values served by
+the split re/im plane engines and, under ``backend="pallas"``, the
+split-plane batch-grid kernel), something the original CUDA tool cannot
+express.
 
     PYTHONPATH=src python examples/boson_sampling.py
 """
@@ -15,13 +18,11 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 import itertools  # noqa: E402
-import math  # noqa: E402
 
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core import engine  # noqa: E402
-from repro.core.ryser import perm_ryser_chunked  # noqa: E402
+from repro.core.solver import PermanentSolver, SolverConfig  # noqa: E402
 
 M_MODES = 12      # interferometer modes
 N_PHOTONS = 6     # photons (submatrix size)
@@ -53,23 +54,29 @@ def main():
     for T, p in zip(patterns[:8], probs):
         print(f"  T={T}: {p:.3e}")
 
-    # --- batched path: vmap over submatrices (JAX-native win) ----------
-    subs = np.stack([U[np.ix_(in_modes, T)] for T in patterns])
-    batched = jax.vmap(
-        lambda A: perm_ryser_chunked(A, num_chunks=64, precision="kahan"))
-    amps = np.asarray(jax.jit(batched)(jnp.asarray(subs)))
-    bprobs = np.abs(amps) ** 2
-    print(f"\nbatched over {len(patterns)} patterns: "
+    # --- batched complex solver path (ISSUE 4): ONE bucketed device ----
+    # program for the whole pattern set, served by the split re/im plane
+    # batch-grid Pallas kernel -- no pallas->jnp downgrade for complex
+    subs = [U[np.ix_(in_modes, T)] for T in patterns]
+    psolver = PermanentSolver(SolverConfig(precision="kahan",
+                                           backend="pallas"))
+    plan = psolver.plan_batch(subs)
+    print(f"\n{plan.summary()}")
+    amps, reports = psolver.execute(plan, return_report=True)
+    tags = sorted({t for r in reports for t in r.dispatch})
+    assert not any("->" in t for t in tags), \
+        f"complex buckets must not downgrade: {tags}"
+    print(f"dispatch tags: {tags}")
+    bprobs = np.abs(np.asarray(amps)) ** 2
+    print(f"batched over {len(patterns)} patterns: "
           f"sum p = {bprobs.sum():.4f} (partial space)")
     # consistency between paths
     np.testing.assert_allclose(bprobs[:8], probs, rtol=1e-8)
-    print("engine vs batched paths agree to 1e-8  OK")
+    print("engine vs batched solver paths agree to 1e-8  OK")
 
     # --- solver path: resampled patterns hit the result cache ----------
     # A sampling chain revisits output patterns; PermanentSolver's
     # content-hash cache resolves repeats without touching the device.
-    from repro.core.solver import PermanentSolver, SolverConfig
-
     solver = PermanentSolver(SolverConfig(precision="kahan"))
     draws = [patterns[i] for i in rng.integers(0, 8, 64)]
     stream = [U[np.ix_(in_modes, T)] for T in draws]

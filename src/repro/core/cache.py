@@ -32,14 +32,22 @@ class ResultCache:
 
     @staticmethod
     def key(leaf_key: str, route: str, precision: str, backend: str,
-            num_chunks: int) -> tuple:
+            num_chunks: int, dtype: str = "<f8") -> tuple:
         """Full cache key: content hash + every numerics-affecting knob.
 
         Precision mode, backend and chunk geometry all perturb the
         floating-point result at the ulp level, so they are part of the
         identity -- a ``dd`` result must never satisfy a ``qq`` lookup.
+        ``dtype`` (the leaf's numpy dtype string) is carried explicitly as
+        well: the content hash already mixes it in, but the key must stay
+        collision-free even if a future leaf hash drops the dtype -- a
+        float64 leaf and a complex128 leaf whose imaginary part is all
+        zeros are different computations (real engine vs split-plane
+        engine) and must never share an entry.  ``precision`` is the
+        plan's *effective* precision, so a complex ``qq`` plan stores and
+        finds its values under ``kahan``.
         """
-        return (leaf_key, route, precision, backend, num_chunks)
+        return (leaf_key, route, precision, backend, num_chunks, dtype)
 
     def __len__(self) -> int:
         return len(self._data)

@@ -25,9 +25,14 @@ single-device batched engines (``ryser.batched_values`` /
 ``sparyser.sparse_batched_values``), so sharded values are bit-identical
 to the ``jnp`` backend per precision mode.
 
-All entry points in this module are real-only: the twofloat slice sums
-and the ``float(...)`` reductions have no complex path, so complex input
-raises ``ValueError`` up front instead of crashing mid-reduction.
+Complex input is first-class everywhere: the batch-axis entry points
+shard the matrices' split (re, im) planes through the same shard_map body
+as the jnp backend (``ryser.batched_values_complex`` /
+``sparyser.sparse_batched_values_complex``), so sharded complex values
+are bit-identical to the local engines per precision mode and shard
+shape; the step-space split carries complex through its twofloat psums
+(TwoSum is componentwise-exact under complex addition) and, under
+``backend="pallas"``, runs the split-plane kernel per device.
 
 APIs:
   ``permanent_on_mesh``     one-shot functional API (psum reduction)
@@ -51,18 +56,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P_
 from ..utils.compat import shard_map
 from . import gray as G
 from . import precision as P
-from .ryser import (batched_values, chunk_geometry, nw_base_vector,
-                    _final_factor)
+from .ryser import (batched_values, batched_values_complex, chunk_geometry,
+                    complex_precision, nw_base_vector, _final_factor)
 
 __all__ = ["permanent_on_mesh", "slice_sums_on_mesh",
            "batch_permanents_on_mesh", "sparse_batch_permanents_on_mesh",
            "DistributedPermanent", "plan_slices"]
-
-
-def _require_real(A, what: str) -> None:
-    if np.iscomplexobj(A):
-        raise ValueError(f"distributed backend is real-only: {what} got "
-                         f"complex input (use the jnp/pallas backends)")
 
 
 def plan_slices(n: int, num_devices: int, slices_per_device: int = 8,
@@ -193,8 +192,17 @@ def permanent_on_mesh(A, mesh: Mesh, *, precision: str = "dq_acc",
     backend="pallas" runs the TPU kernel (interpret-mode on CPU) on each
     device's chunk range instead of the jnp engine -- the full production
     path: two-level split -> Pallas grid -> lanes -> one psum.
+
+    Complex matrices work on both backends: the jnp chunk engine and the
+    twofloat psum reduction are add/sub-componentwise (TwoSum is exact
+    under complex addition), and the pallas backend launches the
+    split-plane complex kernel per device.  Unlike the batch engines, no
+    qq->kahan mapping is needed (or applied) here: the step-space family
+    has no twofloat product path -- ``_dyn_chunk_partials`` accumulates
+    qq as ``tf_add_acc`` for real and complex alike, so
+    ``permanent_on_mesh``, ``slice_sums_on_mesh`` and
+    ``DistributedPermanent`` agree at every precision mode.
     """
-    _require_real(A, "permanent_on_mesh")
     A = jnp.asarray(A)
     n = A.shape[0]
     D = math.prod(mesh.devices.shape)
@@ -215,9 +223,10 @@ def permanent_on_mesh(A, mesh: Mesh, *, precision: str = "dq_acc",
 
     def device_partials(A_rep, first_chunk):
         if backend == "pallas":
-            return _pallas_device_partials(A_rep, first_chunk,
-                                           chunks_per_slice, C, precision,
-                                           vma=frozenset(axes))
+            fn = _pallas_device_partials_complex \
+                if jnp.iscomplexobj(A_rep) else _pallas_device_partials
+            return fn(A_rep, first_chunk, chunks_per_slice, C, precision,
+                      vma=frozenset(axes))
         return _dyn_chunk_partials(A_rep, first_chunk, chunks_per_slice, C,
                                    precision)
 
@@ -271,9 +280,10 @@ def slice_sums_on_mesh(A, mesh: Mesh, slice_ids: np.ndarray, *,
         def body(A_rep, slices_local):
             first_chunk = slices_local[0, 0] * chunks_per_slice
             if backend == "pallas":
-                parts = _pallas_device_partials(
-                    A_rep, first_chunk, chunks_per_slice, chunk_size,
-                    precision, vma=frozenset(axes))
+                fn = _pallas_device_partials_complex \
+                    if jnp.iscomplexobj(A_rep) else _pallas_device_partials
+                parts = fn(A_rep, first_chunk, chunks_per_slice, chunk_size,
+                           precision, vma=frozenset(axes))
             else:
                 parts = _dyn_chunk_partials(A_rep, first_chunk,
                                             chunks_per_slice,
@@ -305,12 +315,38 @@ def _pallas_device_partials(A_rep, first_chunk, T: int, C: int,
     Wu = min(16, C)
     A_pad = pad_matrix(A_rep)
     xb = pad_base_vector(nw_base_vector(A_rep), A_pad.shape[0]).reshape(-1, 1)
-    prec = precision if precision in ("dd", "kahan", "dq_acc") else "dq_acc"
+    prec = precision if precision in ("dd", "kahan", "dq_acc", "dq_fast") \
+        else "dq_acc"
     out = ryser_pallas_call(
         A_pad, xb, first_chunk, n=n, TB=TB, C=C, Wu=Wu,
         num_blocks=num_blocks, precision=prec, mode="batched",
         interpret=True, vma=vma)
     return P.TwoFloat(out[:, 0], out[:, 1])
+
+
+def _pallas_device_partials_complex(A_rep, first_chunk, T: int, C: int,
+                                    precision: str, vma=None):
+    """Split-plane complex analogue of ``_pallas_device_partials``: per-
+    device complex kernel over [first_chunk, first_chunk+T), partials
+    re-packed as a complex TwoFloat so the caller's twofloat psum
+    machinery (componentwise-exact under complex addition) is unchanged."""
+    from ..kernels.ops import split_base_planes, split_matrix_planes
+    from ..kernels.ryser_complex import ryser_pallas_call_complex
+    from .ryser import nw_base_vector
+
+    n = A_rep.shape[0]
+    TB = min(128, T)
+    num_blocks = T // TB
+    Wu = min(16, C)
+    Ar_pad, Ai_pad = split_matrix_planes(A_rep)
+    xbr, xbi = split_base_planes(nw_base_vector(A_rep), Ar_pad.shape[0])
+    prec = precision if precision in ("dd", "kahan", "dq_acc", "dq_fast") \
+        else "dq_acc"
+    out = ryser_pallas_call_complex(
+        Ar_pad, Ai_pad, xbr, xbi, first_chunk, n=n, TB=TB, C=C, Wu=Wu,
+        num_blocks=num_blocks, precision=prec, interpret=True, vma=vma)
+    return P.TwoFloat(out[:, 0] + 1j * out[:, 2],
+                      out[:, 1] + 1j * out[:, 3])
 
 
 # ---------------------------------------------------------------------------
@@ -341,6 +377,22 @@ def _dense_batch_mesh_fn(mesh: Mesh, T: int, C: int, precision: str):
                              out_specs=P_(axes), check_vma=False))
 
 
+@lru_cache(maxsize=None)
+def _dense_batch_mesh_fn_complex(mesh: Mesh, T: int, C: int, precision: str):
+    """Split-plane complex analogue of ``_dense_batch_mesh_fn``: the body
+    is ``ryser.batched_values_complex`` verbatim over each device's local
+    (re, im) sub-stacks -- one trace shared with the jnp backend."""
+    axes = tuple(mesh.axis_names)
+
+    def body(local_r, local_i):          # (B/D, n, n) x2 per device
+        return batched_values_complex(local_r, local_i, T, C, precision)
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(P_(axes), P_(axes)),
+                             out_specs=(P_(axes), P_(axes)),
+                             check_vma=False))
+
+
 def batch_permanents_on_mesh(stack, mesh: Mesh, *,
                              precision: str = "dq_acc",
                              num_chunks: int = 4096) -> np.ndarray:
@@ -352,9 +404,10 @@ def batch_permanents_on_mesh(stack, mesh: Mesh, *,
     are padded with zero matrices whose results are discarded on the
     host.  Values are bit-identical to ``ryser.perm_ryser_batched`` for
     every precision mode -- the per-device body shares its trace.
+    Complex stacks shard their split (re, im) planes through
+    ``ryser.batched_values_complex`` under the same contract.
     """
     stack = np.asarray(stack)
-    _require_real(stack, "batch_permanents_on_mesh")
     if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
         raise ValueError(f"(B, n, n) stack required, got {stack.shape}")
     B, n = stack.shape[0], stack.shape[1]
@@ -363,14 +416,22 @@ def batch_permanents_on_mesh(stack, mesh: Mesh, *,
     if n == 2:
         return np.asarray(stack[:, 0, 0] * stack[:, 1, 1]
                           + stack[:, 0, 1] * stack[:, 1, 0])
-    stack = stack.astype(np.float64)
+    is_complex = np.iscomplexobj(stack)
+    stack = stack.astype(np.complex128 if is_complex else np.float64)
     pad = _batch_pad(B, mesh)
     if pad:
         stack = np.concatenate(
             [stack, np.zeros((pad, n, n), stack.dtype)], axis=0)
     axes = tuple(mesh.axis_names)
     T, C, _ = chunk_geometry(n, num_chunks)
-    dev_stack = jax.device_put(stack, NamedSharding(mesh, P_(axes)))
+    shard = NamedSharding(mesh, P_(axes))
+    if is_complex:
+        vr, vi = _dense_batch_mesh_fn_complex(
+            mesh, T, C, complex_precision(precision))(
+            jax.device_put(np.ascontiguousarray(stack.real), shard),
+            jax.device_put(np.ascontiguousarray(stack.imag), shard))
+        return (np.asarray(vr) + 1j * np.asarray(vi))[:B]
+    dev_stack = jax.device_put(stack, shard)
     vals = _dense_batch_mesh_fn(mesh, T, C, precision)(dev_stack)
     return np.asarray(vals)[:B]
 
@@ -389,6 +450,23 @@ def _sparse_batch_mesh_fn(mesh: Mesh, T: int, C: int, precision: str):
                              out_specs=P_(axes), check_vma=False))
 
 
+@lru_cache(maxsize=None)
+def _sparse_batch_mesh_fn_complex(mesh: Mesh, T: int, C: int,
+                                  precision: str):
+    from .sparyser import sparse_batched_values_complex
+    axes = tuple(mesh.axis_names)
+
+    def body(Ar_local, Ai_local, rows_local, vr_local, vi_local):
+        return sparse_batched_values_complex(
+            Ar_local, Ai_local, rows_local, vr_local, vi_local,
+            T, C, precision)
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(P_(axes),) * 5,
+                             out_specs=(P_(axes), P_(axes)),
+                             check_vma=False))
+
+
 def sparse_batch_permanents_on_mesh(sps: list, mesh: Mesh, *,
                                     precision: str = "dq_acc",
                                     num_chunks: int = 4096) -> np.ndarray:
@@ -398,13 +476,13 @@ def sparse_batch_permanents_on_mesh(sps: list, mesh: Mesh, *,
     bucket-wide maxdeg -- padding scatters into the dummy row and never
     perturbs numerics), padded to the device count with inert all-dummy
     entries, and the padded-CCS SpaRyser body is sharded over the batch
-    axis.  Bit-identical to ``sparyser.perm_sparyser_batched``.
+    axis.  Bit-identical to ``sparyser.perm_sparyser_batched`` -- complex
+    buckets included (split re/im planes through
+    ``sparyser.sparse_batched_values_complex``).
     """
     from .sparyser import pack_padded_ccs, perm_sparyser_chunked
     assert sps, "empty bucket"
     n = sps[0].n
-    for sp in sps:
-        _require_real(sp.cvals, "sparse_batch_permanents_on_mesh")
     if n <= 2:
         return np.array([perm_sparyser_chunked(sp) for sp in sps])
     A_stack, rows_stack, vals_stack = pack_padded_ccs(sps)
@@ -422,6 +500,15 @@ def sparse_batch_permanents_on_mesh(sps: list, mesh: Mesh, *,
     axes = tuple(mesh.axis_names)
     T, C, _ = chunk_geometry(n, num_chunks)
     shard = NamedSharding(mesh, P_(axes))
+    if np.iscomplexobj(vals_stack):
+        vr, vi = _sparse_batch_mesh_fn_complex(
+            mesh, T, C, complex_precision(precision))(
+            jax.device_put(np.ascontiguousarray(A_stack.real), shard),
+            jax.device_put(np.ascontiguousarray(A_stack.imag), shard),
+            jax.device_put(rows_stack, shard),
+            jax.device_put(np.ascontiguousarray(vals_stack.real), shard),
+            jax.device_put(np.ascontiguousarray(vals_stack.imag), shard))
+        return (np.asarray(vr) + 1j * np.asarray(vi))[:B]
     vals = _sparse_batch_mesh_fn(mesh, T, C, precision)(
         jax.device_put(A_stack, shard), jax.device_put(rows_stack, shard),
         jax.device_put(vals_stack, shard))
@@ -447,7 +534,6 @@ class DistributedPermanent:
     def permanent(self, A, progress_cb=None):
         from .resume import JobState  # local import to avoid cycle
         A = np.asarray(A)
-        _require_real(A, "DistributedPermanent.permanent")
         n = A.shape[0]
         D = math.prod(self.mesh.devices.shape)
         total_slices, chunks_per_slice, C = plan_slices(
@@ -469,7 +555,9 @@ class DistributedPermanent:
                 progress_cb(state)
 
         hi, lo = state.reduce()
-        p0 = float(np.prod(np.asarray(nw_base_vector(jnp.asarray(A)))))
+        p0 = np.prod(np.asarray(nw_base_vector(jnp.asarray(A)))).item()
         total = P.tf_add_acc(
             P.TwoFloat(jnp.asarray(hi), jnp.asarray(lo)), jnp.asarray(p0))
-        return float(P.tf_value(total)) * _final_factor(n)
+        # .item(): float for real jobs (the legacy return type), complex
+        # for complex jobs
+        return np.asarray(P.tf_value(total)).item() * _final_factor(n)

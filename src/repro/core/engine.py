@@ -90,9 +90,9 @@ def permanent_batch(As, *, precision: str = "dq_acc", preprocess: bool = True,
         leaves are tagged with their owner and *bucketed by size* (and
         dense/sparse route, same DENSITY_SWITCH rule as ``permanent``);
       * dense buckets run ``ryser.perm_ryser_batched`` (backend="jnp") or
-        the batch-grid Pallas kernel (backend="pallas", real only --
-        complex buckets fall back to the vmapped jnp path and report the
-        downgrade as ``dense_batch(...,pallas->jnp)``);
+        the batch-grid Pallas kernel (backend="pallas"); complex buckets
+        are first-class on both -- split-plane engine / split-plane
+        kernel -- with no downgrade;
       * sparse buckets run ``sparyser.perm_sparyser_batched`` (padded-CCS
         stacks, one jit per (n, maxdeg) bucket);
       * ragged stragglers -- buckets holding a single leaf -- fall back to
@@ -103,9 +103,10 @@ def permanent_batch(As, *, precision: str = "dq_acc", preprocess: bool = True,
         may differ -- bucketing handles ragged inputs).
       precision / preprocess / dm / fm / num_chunks: as in ``permanent``.
       backend: ``jnp``, ``pallas``, or ``distributed``/
-        ``distributed_batch`` (real-only): buckets are batch-axis-sharded
-        over ``distributed_ctx``'s mesh, and downgrade to ``jnp`` with a
-        ``distributed->jnp`` tag when no ctx is attached.
+        ``distributed_batch``: buckets (real or complex) are
+        batch-axis-sharded over ``distributed_ctx``'s mesh, and downgrade
+        to ``jnp`` with a ``distributed->jnp`` tag when no ctx is
+        attached.
       distributed_ctx: a ``jax.sharding.Mesh`` (or an object with a
         ``.mesh``) for the distributed backends.
       return_report: also return a list of per-matrix PermanentReport.

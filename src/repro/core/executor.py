@@ -13,8 +13,9 @@ same-size bucket as a single device program and return a (B,) ndarray of
 values in bucket order, or ``None`` to signal "unsupported for this
 bucket" -- the dispatcher then re-runs the bucket on the ``jnp``
 strategy and tags the downgrade as ``{route}_batch(...,<cfg>->jnp)``
-(e.g. ``pallas->jnp`` for complex stacks, ``distributed->jnp`` when no
-mesh/ctx is attached).  ``ctx`` is the ``distributed_ctx`` threaded
+(e.g. ``distributed->jnp`` when no mesh/ctx is attached; complex stacks
+are first-class on every strategy and no longer downgrade).  ``ctx`` is
+the ``distributed_ctx`` threaded
 through :func:`execute_plan`: a ``jax.sharding.Mesh`` or any object with
 a ``.mesh`` attribute (``core.distributed.DistributedPermanent``);
 non-distributed strategies ignore it.  Every strategy must also answer
@@ -35,9 +36,9 @@ kernel numerics differ at the ulp level.
   bucket;
 * every leaf result is normalized to a Python scalar before accumulation
   (both dense and sparse routes -- no 0-d array surprises downstream),
-  and backend downgrades are recorded in the dispatch tags (a complex
-  bucket under ``backend="pallas"`` reports ``dense_batch(...,pallas->jnp)``
-  instead of silently borrowing jnp numbers).
+  and backend downgrades are recorded in the dispatch tags, as is the
+  planner's ``qq->kahan`` complex precision downgrade
+  (``precision(qq->kahan)`` on every report, mirroring ``--plan-json``).
 
 Returns per-matrix totals plus :class:`PermanentReport`s and an
 :class:`ExecStats` with device-dispatch / cache accounting.
@@ -126,12 +127,13 @@ class Backend:
                      ctx: Any | None = None) -> np.ndarray | None:
         return None
 
-    def value_backend(self, route: str, n: int, *, is_complex: bool,
-                      batched: bool, ctx: Any | None = None) -> str:
+    def value_backend(self, route: str, n: int, *, batched: bool,
+                      ctx: Any | None = None) -> str:
         """Registry name of the strategy whose numerics produce this
         leaf's value.  Cache keys use THIS name, not the configured
         backend, so downgraded (jnp-computed) values are stored -- and
-        found -- under ``jnp``."""
+        found -- under ``jnp``.  (No ``is_complex`` parameter since the
+        split-plane refactor: complex is first-class on every strategy.)"""
         if route == ROUTE_SPARSE and not batched:
             return "jnp"             # shared scalar SpaRyser path
         return self.name
@@ -156,27 +158,27 @@ class JnpBackend(Backend):
 
 
 class PallasBackend(JnpBackend):
-    """TPU kernel (interpret-mode on CPU); real matrices with n >= 4.
+    """TPU kernel (interpret-mode on CPU); real OR complex, n >= 4.
 
-    Complex leaves and tiny matrices fall back to the jnp engines --
-    scalar falls back silently (legacy contract), batched falls back with
-    a ``pallas->jnp`` downgrade tag emitted by the dispatcher.
+    Complex leaves run the split re/im plane kernels (same batch grid and
+    geometry as the real ones); only tiny matrices fall back to the jnp
+    engines -- scalar falls back silently (legacy contract), batched
+    with a ``pallas->jnp`` downgrade tag emitted by the dispatcher.
     """
 
     name = "pallas"
 
     @staticmethod
-    def _kernel_ok(n: int, is_complex: bool) -> bool:
-        return n >= 4 and not is_complex
+    def _kernel_ok(n: int) -> bool:
+        return n >= 4
 
     def _supported(self, M_or_stack) -> bool:
-        return self._kernel_ok(M_or_stack.shape[-1],
-                               np.iscomplexobj(M_or_stack))
+        return self._kernel_ok(M_or_stack.shape[-1])
 
     def dense(self, M, *, precision, num_chunks, ctx=None):
         if self._supported(M):
             from ..kernels import ops as K
-            return complex(K.permanent_pallas(M, precision=precision)).real
+            return _scalar(K.permanent_pallas(M, precision=precision))
         return super().dense(M, precision=precision, num_chunks=num_chunks)
 
     def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
@@ -189,8 +191,8 @@ class PallasBackend(JnpBackend):
     def sparse_batch(self, sps, *, precision, num_chunks, ctx=None):
         return None                  # no sparse kernel: jnp fallback, tagged
 
-    def value_backend(self, route, n, *, is_complex, batched, ctx=None):
-        if route == ROUTE_DENSE and self._kernel_ok(n, is_complex):
+    def value_backend(self, route, n, *, batched, ctx=None):
+        if route == ROUTE_DENSE and self._kernel_ok(n):
             return self.name
         return "jnp"                 # silent scalar fallback / tagged batch
 
@@ -202,17 +204,18 @@ class DistributedBatchBackend(JnpBackend):
     ``dense_batch``/``sparse_batch`` shard a same-size bucket's leading
     axis over the mesh -- matrices replicated per shard (each device owns
     whole matrices, no psum), ragged tails padded to the device count and
-    masked on the host.  Needs a mesh through ``ctx``; without one every
-    bucket downgrades to ``jnp`` with a tag.  Scalar leaves (ragged
-    singletons) use the plain jnp engines -- a one-matrix bucket has
-    nothing to shard.
+    masked on the host; complex buckets shard their split (re, im)
+    planes through the same shard_map bodies.  Needs a mesh through
+    ``ctx``; without one every bucket downgrades to ``jnp`` with a tag.
+    Scalar leaves (ragged singletons) use the plain jnp engines -- a
+    one-matrix bucket has nothing to shard.
     """
 
     name = "distributed_batch"
 
     def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
         mesh = _ctx_mesh(ctx)
-        if mesh is None or np.iscomplexobj(stack):
+        if mesh is None:
             return None              # no mesh attached: tagged jnp downgrade
         from . import distributed as Dm
         return Dm.batch_permanents_on_mesh(stack, mesh, precision=precision,
@@ -226,8 +229,8 @@ class DistributedBatchBackend(JnpBackend):
         return Dm.sparse_batch_permanents_on_mesh(
             sps, mesh, precision=precision, num_chunks=num_chunks)
 
-    def value_backend(self, route, n, *, is_complex, batched, ctx=None):
-        if batched and not is_complex and _ctx_mesh(ctx) is not None:
+    def value_backend(self, route, n, *, batched, ctx=None):
+        if batched and _ctx_mesh(ctx) is not None:
             return self.name
         return "jnp"
 
@@ -269,11 +272,11 @@ class DistributedBackend(JnpBackend):
         return get_backend("distributed_batch").sparse_batch(
             sps, precision=precision, num_chunks=num_chunks, ctx=ctx)
 
-    def value_backend(self, route, n, *, is_complex, batched, ctx=None):
+    def value_backend(self, route, n, *, batched, ctx=None):
         if batched:
             return get_backend("distributed_batch").value_backend(
-                route, n, is_complex=is_complex, batched=batched, ctx=ctx)
-        if route == ROUTE_DENSE and not is_complex and ctx is not None:
+                route, n, batched=batched, ctx=ctx)
+        if route == ROUTE_DENSE and ctx is not None:
             return self.name
         return "jnp"
 
@@ -319,9 +322,14 @@ def _cache_key(leaf: LeafTask, plan: ExecutionPlan, produced_by: str) -> tuple:
     pallas/distributed bucket that downgrades to jnp stores (and finds)
     its numbers under ``jnp``, so a jnp-computed value can never satisfy
     a genuine kernel lookup whose numerics differ at the ulp level.
+    The leaf dtype is part of the identity too (belt and braces over the
+    content hash): a float64 leaf and a complex128 leaf with zero
+    imaginary part must never collide, and ``plan.precision`` is the
+    *effective* precision, so a complex ``qq`` plan keys under ``kahan``.
     """
     return ResultCache.key(leaf.key, leaf.route, plan.precision,
-                           produced_by, plan.config.num_chunks)
+                           produced_by, plan.config.num_chunks,
+                           leaf.matrix.dtype.str)
 
 
 def _run_leaf(leaf: LeafTask, plan: ExecutionPlan, backend: Backend,
@@ -372,11 +380,18 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
                for e in plan.entries]
     for e in plan.entries:
         totals[e.index] += e.const
+    if plan.precision_downgrade:
+        # surface the planner's silent complex precision fallback the same
+        # way backend downgrades are surfaced (satellite: qq->kahan tag)
+        ptag = f"precision({plan.precision_downgrade})"
+        stats.downgrades.append(ptag)
+        for r in reports:
+            r.dispatch.append(ptag)
 
     def produced_by(route: str, n: int, batched: bool) -> str:
         """Name of the strategy whose numerics will serve this leaf."""
-        return backend.value_backend(route, n, is_complex=plan.is_complex,
-                                     batched=batched, ctx=distributed_ctx)
+        return backend.value_backend(route, n, batched=batched,
+                                     ctx=distributed_ctx)
 
     def lookup(leaf: LeafTask, batched: bool):
         if cache is None:

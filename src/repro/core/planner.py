@@ -78,8 +78,10 @@ class SolverConfig:
         return replace(self, **kw)
 
     def effective_precision(self, is_complex: bool) -> str:
-        # qq is unsupported for complex and falls back to kahan (engine
-        # contract since the scalar pipeline)
+        # qq's Dekker-split inner product is real-only; complex falls back
+        # to kahan (engine contract since the scalar pipeline).  The plan
+        # surfaces this as a ``qq->kahan`` precision_downgrade tag in the
+        # dispatch tags and --plan-json, like backend downgrades.
         if is_complex and self.precision == "qq":
             return "kahan"
         return self.precision
@@ -156,6 +158,10 @@ class ExecutionPlan:
     leaves: list[LeafTask]
     buckets: dict[tuple[str, int], list[int]]
     estimated_steps: float
+    # "qq->kahan" when the effective precision differs from the configured
+    # one (complex qq); None otherwise.  Executor mirrors it into every
+    # report's dispatch tags.
+    precision_downgrade: str | None = None
 
     @property
     def num_matrices(self) -> int:
@@ -202,6 +208,7 @@ class ExecutionPlan:
             "batched": self.batched,
             "is_complex": self.is_complex,
             "precision": self.precision,
+            "precision_downgrade": self.precision_downgrade,
             "matrices": [
                 {"index": e.index, "n": e.n, "nnz": e.nnz,
                  "density": e.density, "dm_removed": e.dm_removed,
@@ -229,11 +236,13 @@ class ExecutionPlan:
             routes[l.route] = routes.get(l.route, 0) + 1
         rtxt = " ".join(f"{r}={c}" for r, c in sorted(routes.items())) \
             or "const-only"
+        ptxt = self.precision if self.precision_downgrade is None \
+            else f"{self.precision}({self.precision_downgrade})"
         return (f"plan[{'batch' if self.batched else 'scalar'}] "
                 f"matrices={b} leaves={len(self.leaves)} ({rtxt}) "
                 f"buckets={len(self.buckets)} "
                 f"est_steps={self.estimated_steps:.3g} "
-                f"precision={self.precision} backend={self.config.backend}")
+                f"precision={ptxt} backend={self.config.backend}")
 
 
 def _preprocess_leaves(work: np.ndarray, mplan: MatrixPlan,
@@ -292,12 +301,6 @@ def build_plan(mats: list[np.ndarray], config: SolverConfig, *,
         if M.ndim != 2 or M.shape[0] != M.shape[1]:
             raise ValueError(f"square matrices required, got {M.shape}")
     is_complex = any(np.iscomplexobj(M) for M in mats)
-    if is_complex and config.backend in ("distributed", "distributed_batch"):
-        # the mesh engines' twofloat reductions have no complex path; fail
-        # at plan time instead of crashing (or silently downgrading) at
-        # execute/flush time
-        raise ValueError("distributed backend is real-only; use jnp or "
-                         "pallas for complex matrices")
     precision = config.effective_precision(is_complex)
     dtype = np.complex128 if is_complex else np.float64
     do_dm = config.preprocess if config.dm is None else config.dm
@@ -324,7 +327,10 @@ def build_plan(mats: list[np.ndarray], config: SolverConfig, *,
     for j, leaf in enumerate(leaves):
         buckets.setdefault((leaf.route, leaf.n), []).append(j)
     cost = sum(_leaf_cost(l.matrix, l.route) for l in leaves)
+    downgrade = None if precision == config.precision \
+        else f"{config.precision}->{precision}"
     return ExecutionPlan(config=config, batched=batched,
                          is_complex=is_complex, precision=precision,
                          entries=entries, leaves=leaves, buckets=buckets,
-                         estimated_steps=cost)
+                         estimated_steps=cost,
+                         precision_downgrade=downgrade)

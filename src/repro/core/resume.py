@@ -40,18 +40,22 @@ class JobState:
     fingerprint: str
     total_slices: int
     done: np.ndarray          # (total_slices,) bool
-    hi: np.ndarray            # (total_slices,) f64 partial sums
-    lo: np.ndarray            # (total_slices,) f64 compensation terms
+    hi: np.ndarray            # (total_slices,) f64/c128 partial sums
+    lo: np.ndarray            # (total_slices,) f64/c128 compensation terms
 
     # ------------------------------------------------------------------
     @staticmethod
     def create(matrix: np.ndarray, total_slices: int) -> "JobState":
+        # complex jobs checkpoint complex slice sums: the twofloat
+        # reduction below is add/sub only, which is componentwise-exact
+        # under complex arithmetic
+        dtype = np.complex128 if np.iscomplexobj(matrix) else np.float64
         return JobState(
             fingerprint=matrix_fingerprint(matrix),
             total_slices=total_slices,
             done=np.zeros(total_slices, dtype=bool),
-            hi=np.zeros(total_slices, dtype=np.float64),
-            lo=np.zeros(total_slices, dtype=np.float64))
+            hi=np.zeros(total_slices, dtype=dtype),
+            lo=np.zeros(total_slices, dtype=dtype))
 
     @staticmethod
     def load(path: str) -> "JobState":
@@ -85,8 +89,8 @@ class JobState:
     def record_wave(self, slice_ids, his, los) -> None:
         for sid, h, l in zip(slice_ids, his, los):
             self.done[sid] = True
-            self.hi[sid] = float(h)
-            self.lo[sid] = float(l)
+            self.hi[sid] = h           # dtype fixed at create()
+            self.lo[sid] = l
 
     def fraction_done(self) -> float:
         return float(self.done.mean())

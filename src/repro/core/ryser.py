@@ -38,10 +38,14 @@ __all__ = [
     "perm_ryser_chunked",
     "perm_ryser_batched",
     "batched_values",
+    "batched_values_complex",
     "tf_tree_sum",
     "chain_prod",
+    "chain_prod_complex",
     "chunk_partial_sums",
+    "chunk_partial_sums_complex",
     "chunk_geometry",
+    "complex_precision",
     "ryser_flops",
 ]
 
@@ -126,6 +130,80 @@ def chunk_geometry(n: int, num_chunks: int):
     return T, C, int(math.log2(C))
 
 
+class _CEGSchedules:
+    """Host-constant CEG schedules for chunks [offset, offset + T).
+
+    Everything here depends only on (n, T, C, chunk_offset) -- never on the
+    matrix -- so the real engine, the split-plane complex engine and the
+    sparse engine all share one computation (and, transitively, one
+    definition of the iteration order).
+    """
+
+    def __init__(self, n: int, T: int, C: int, chunk_offset: int = 0,
+                 total_chunks: int | None = None):
+        if total_chunks is None:
+            total_chunks = T
+        k = int(math.log2(C))
+        assert C == 1 << k and k >= 1, "chunks must be power-of-2 sized, C >= 2"
+        space = 1 << (n - 1)
+        assert total_chunks * C == space, (total_chunks, C, space)
+        self.k = k
+        starts = (np.arange(T, dtype=np.uint64)
+                  + np.uint64(chunk_offset)) * np.uint64(C)
+        self.starts = starts
+
+        # --- trace-time schedules (the "matrix-specific rebuild" analogue) ---
+        sched = G.changed_bit_schedule(k)        # (C-1,) uniform changed bits
+        # per-step signs need bits j and j+1 of g = start + w.  For w < C
+        # these depend only on w, except bit k of the start enters at w = C/2.
+        w_arr = np.arange(1, C, dtype=np.uint64)
+        jj = sched.astype(np.uint64)
+        bit_j = ((w_arr >> jj) ^ (w_arr >> (jj + np.uint64(1)))) & np.uint64(1)
+        mid_mask = (jj + 1 == k)                           # only at w = C/2
+        start_bit_k = ((starts >> np.uint64(k)) & np.uint64(1)).astype(np.int32)
+
+        self.sched_j = jnp.asarray(sched)                  # (C-1,)
+        self.base_bits = jnp.asarray(bit_j.astype(np.int32))    # (C-1,)
+        self.mid_flags = jnp.asarray(mid_mask.astype(np.int32))  # (C-1,)
+        self.w_parity = jnp.asarray((w_arr & np.uint64(1)).astype(np.int32))
+        self.lane_bitk = jnp.asarray(start_bit_k)          # (T,)
+
+        # tail step (w = C): per-chunk column and sign, host constants.
+        g_tail = starts + np.uint64(C)
+        tail_j = np.array([G.ctz(int(gt)) for gt in g_tail], dtype=np.int32)
+        tail_sign = np.array([G.step_sign(int(gt)) for gt in g_tail],
+                             dtype=np.int64)
+        tail_live = g_tail <= np.uint64(space - 1)
+        self.tail_j = np.where(tail_live, tail_j, 0)
+        self.tail_sign = tail_sign
+        self.tail_live = tail_live
+
+    @property
+    def scan_inputs(self):
+        return (self.sched_j, self.base_bits, self.mid_flags, self.w_parity)
+
+    def gray_bits(self, n: int, dtype):
+        """(n, T) Gray-code bits of the chunk start steps."""
+        return jnp.asarray(G.gray_bits_matrix(self.starts, n), dtype=dtype)
+
+    def tail_columns(self, A):
+        """Signed, liveness-masked tail column matrix A[:, tail_j] (n, T)."""
+        return A[:, jnp.asarray(self.tail_j)] * jnp.asarray(
+            (self.tail_sign * self.tail_live).astype(np.float64)
+        ).astype(A.dtype)[None, :]
+
+
+def rank1_chunk_init(A, x_base, Gbits):
+    """Chunk state init (Alg. 3 lines 10-13) as fixed-order rank-1
+    accumulation: a plain ``A @ Gbits`` matmul lets XLA pick the
+    contraction split per program shape, which breaks the sharded/local
+    bit-identity contract (see ``batched_values``)."""
+    X0 = x_base[:, None]
+    for j in range(A.shape[0]):
+        X0 = X0 + A[:, j:j + 1] * Gbits[j:j + 1, :]                   # (n, T)
+    return X0
+
+
 def chunk_partial_sums(A, T: int, C: int, precision: str = "dq_acc",
                        chunk_offset: int = 0, total_chunks: int | None = None):
     """Per-chunk partial sums for chunks [chunk_offset, chunk_offset + T).
@@ -136,51 +214,14 @@ def chunk_partial_sums(A, T: int, C: int, precision: str = "dq_acc",
     (g == 0) term is NOT included (added once by the caller).  Requires
     C == 2^k with k >= 1 and chunk starts aligned to C.
     """
-    if total_chunks is None:
-        total_chunks = T
     n = A.shape[0]
-    k = int(math.log2(C))
-    assert C == 1 << k and k >= 1, "chunks must be power-of-2 sized, C >= 2"
-    space = 1 << (n - 1)
-    assert total_chunks * C == space, (total_chunks, C, space)
     dtype = A.dtype
-
-    x_base = nw_base_vector(A)
-
-    # --- chunk state init (Alg. 3 lines 10-13) as fixed-order rank-1
-    # accumulation: a plain ``A @ Gbits`` matmul lets XLA pick the
-    # contraction split per program shape, which breaks the sharded/local
-    # bit-identity contract (see ``batched_values``) ---
-    starts = (np.arange(T, dtype=np.uint64) + np.uint64(chunk_offset)) * np.uint64(C)
-    Gbits = jnp.asarray(G.gray_bits_matrix(starts, n), dtype=dtype)  # (n, T)
-    X0 = x_base[:, None]
-    for j in range(n):
-        X0 = X0 + A[:, j:j + 1] * Gbits[j:j + 1, :]                   # (n, T)
-
-    # --- trace-time schedules (the "matrix-specific rebuild" analogue) ---
-    sched = G.changed_bit_schedule(k)            # (C-1,) uniform changed bits
-    # per-step signs need bits j and j+1 of g = start + w.  For w < C these
-    # depend only on w, except bit k of the start enters at w = C/2.
-    w_arr = np.arange(1, C, dtype=np.uint64)
-    jj = sched.astype(np.uint64)
-    bit_j = ((w_arr >> jj) ^ (w_arr >> (jj + np.uint64(1)))) & np.uint64(1)
-    mid_mask = (jj + 1 == k)                               # only at w = C/2
-    start_bit_k = ((starts >> np.uint64(k)) & np.uint64(1)).astype(np.int32)
-
-    sched_j = jnp.asarray(sched)                           # (C-1,)
-    base_bits = jnp.asarray(bit_j.astype(np.int32))        # (C-1,)
-    mid_flags = jnp.asarray(mid_mask.astype(np.int32))     # (C-1,)
-    w_parity = jnp.asarray((w_arr & np.uint64(1)).astype(np.int32))  # (C-1,)
-    lane_bitk = jnp.asarray(start_bit_k)                   # (T,)
-
-    # tail step (w = C): per-chunk column and sign, host-computed constants.
-    g_tail = starts + np.uint64(C)
-    tail_j = np.array([G.ctz(int(gt)) for gt in g_tail], dtype=np.int32)
-    tail_sign = np.array([G.step_sign(int(gt)) for gt in g_tail], dtype=np.int64)
-    tail_live = g_tail <= np.uint64(space - 1)
-    tail_j = np.where(tail_live, tail_j, 0)
-    Atail = A[:, jnp.asarray(tail_j)] * jnp.asarray(
-        (tail_sign * tail_live).astype(np.float64)).astype(dtype)[None, :]
+    S = _CEGSchedules(n, T, C, chunk_offset, total_chunks)
+    X0 = rank1_chunk_init(A, nw_base_vector(A), S.gray_bits(n, dtype))
+    sched_j, base_bits, mid_flags, w_parity = S.scan_inputs
+    lane_bitk = S.lane_bitk
+    Atail = S.tail_columns(A)
+    tail_live = S.tail_live
 
     use_qq = precision == "qq"
 
@@ -278,13 +319,23 @@ def _chunked_jit(A, num_chunks: int, precision: str):
 
 
 def perm_ryser_chunked(A, num_chunks: int = 4096, precision: str = "dq_acc"):
-    """Faithful Alg. 3 (chunked parallel Ryser) with CEG-aligned chunks."""
+    """Faithful Alg. 3 (chunked parallel Ryser) with CEG-aligned chunks.
+
+    Complex matrices run the split-plane engine as a B=1 batch program, so
+    the scalar and batched complex paths share one trace (and one set of
+    numerics) -- a ragged straggler served scalar is bit-identical to the
+    same leaf served inside a bucket.
+    """
     A = jnp.asarray(A)
     n = A.shape[0]
     if n == 1:
         return A[0, 0]
     if n == 2:
         return A[0, 0] * A[1, 1] + A[0, 1] * A[1, 0]
+    if jnp.iscomplexobj(A):
+        vr, vi = _batched_complex_jit(jnp.real(A)[None], jnp.imag(A)[None],
+                                      num_chunks, precision)
+        return (vr + 1j * vi)[0]
     return _chunked_jit(A, num_chunks, precision)
 
 
@@ -299,6 +350,31 @@ def chain_prod(X):
     for i in range(1, X.shape[0]):
         t = t * X[i]
     return t
+
+
+def chain_prod_complex(Xr, Xi):
+    """Fixed-order complex product over axis 0 of split (re, im) planes.
+
+    The explicit 4-mult/2-add recurrence -- the same one the Pallas complex
+    kernel unrolls -- instead of complex-dtype ``*``: XLA's complex multiply
+    lowering is free to fuse/reassociate per program shape, and the
+    split-plane engines promise shard-shape-independent values.
+    """
+    pr, pi = Xr[0], Xi[0]
+    for i in range(1, Xr.shape[0]):
+        pr, pi = pr * Xr[i] - pi * Xi[i], pr * Xi[i] + pi * Xr[i]
+    return pr, pi
+
+
+def complex_precision(precision: str) -> str:
+    """Effective precision mode for the complex engines.
+
+    ``qq``'s twofloat inner product relies on Dekker splitting, which is
+    real-only; complex runs it as ``kahan`` (the planner surfaces this as a
+    ``qq->kahan`` downgrade tag).  Every split-plane entry point routes its
+    precision through here so the jnp / distributed traces agree.
+    """
+    return "kahan" if precision == "qq" else precision
 
 
 def tf_tree_sum(hi, lo):
@@ -365,6 +441,147 @@ def _batched_jit(As, num_chunks: int, precision: str):
     return batched_values(As, T, C, precision)
 
 
+# ---------------------------------------------------------------------------
+# Split-plane complex engine: the matrix travels as explicit (re, im) planes
+# ---------------------------------------------------------------------------
+
+def chunk_partial_sums_complex(Ar, Ai, T: int, C: int,
+                               precision: str = "dq_acc",
+                               chunk_offset: int = 0,
+                               total_chunks: int | None = None):
+    """Split-plane complex Alg.-3 chunk partials; mirrors
+    ``chunk_partial_sums`` with the matrix carried as (re, im) float planes.
+
+    TPU VPUs have no complex dtype, so the whole stack shares the kernel's
+    representation: the row-sum state is a plane pair (Xr, Xi), column
+    updates are two real broadcasts, the product is the explicit complex
+    chain recurrence (``chain_prod_complex``), and the partial sums are
+    accumulated *per component* with the same compensated strategies as the
+    real engine.  Returns ``(re, im, base)`` where ``re``/``im`` are
+    TwoFloats of shape (T,) NOT including the base (g == 0) term, and
+    ``base`` is the ``(p0_re, p0_im)`` scalar pair of that base term, read
+    off lane 0's initial state (valid when ``chunk_offset == 0``; callers
+    at nonzero offsets ignore it).  The base product deliberately shares
+    the lane products' (n, T) vector pattern: a standalone (B,)-shaped
+    complex chain compiles batch-shape-dependently (ulp drift between B=1
+    and B=2 programs, observed on CPU), this pattern does not.  ``qq``
+    runs as ``kahan`` (``complex_precision``).
+    """
+    precision = complex_precision(precision)
+    n = Ar.shape[0]
+    dtype = Ar.dtype
+    S = _CEGSchedules(n, T, C, chunk_offset, total_chunks)
+    Gbits = S.gray_bits(n, dtype)
+    xr = nw_base_vector(Ar)
+    xi = nw_base_vector(Ai)
+    Xr = rank1_chunk_init(Ar, xr, Gbits)
+    Xi = rank1_chunk_init(Ai, xi, Gbits)
+    # lane 0 of chunk 0 starts at g = 0 (all Gray bits zero), so its
+    # initial state IS the NW base vector and its product the base term
+    b0r, b0i = chain_prod_complex(Xr, Xi)
+    base = (b0r[0], b0i[0])
+    lane_bitk = S.lane_bitk
+    Atail_r = S.tail_columns(Ar)
+    Atail_i = S.tail_columns(Ai)
+
+    def accum(acc, term):
+        """Per-component compensated accumulate (one real plane)."""
+        if precision == "dq_fast":
+            t = P.tf_add_fast(P.TwoFloat(*acc), term)
+            return (t.hi, t.lo)
+        if precision == "dq_acc":
+            t = P.tf_add_acc(P.TwoFloat(*acc), term)
+            return (t.hi, t.lo)
+        if precision == "kahan":
+            return P.kahan_add(acc, term)
+        return (acc[0] + term, acc[1])  # dd
+
+    def fold(acc_r, acc_i, pr, pi, negate):
+        tr = jnp.where(negate, -pr, pr)
+        ti = jnp.where(negate, -pi, pi)
+        return accum(acc_r, tr), accum(acc_i, ti)
+
+    def scan_body(carry, inputs):
+        Xr, Xi, acc_r, acc_i = carry
+        col_j, bit, midf, par = inputs
+        sign_bits = bit ^ (midf & lane_bitk)               # (T,) in {0,1}
+        s = (2 * sign_bits - 1).astype(dtype)              # (T,)
+        Xr = Xr + Ar[:, col_j][:, None] * s[None, :]       # broadcast column
+        Xi = Xi + Ai[:, col_j][:, None] * s[None, :]
+        pr, pi = chain_prod_complex(Xr, Xi)
+        acc_r, acc_i = fold(acc_r, acc_i, pr, pi, par == 1)
+        return (Xr, Xi, acc_r, acc_i), None
+
+    z = jnp.zeros((T,), dtype=dtype)
+    carry = (Xr, Xi, (z, z), (z, z))
+    carry, _ = jax.lax.scan(scan_body, carry, S.scan_inputs)
+    Xr, Xi, acc_r, acc_i = carry
+
+    # tail step w = C (per-chunk column; sign/mask folded into Atail)
+    Xr = Xr + Atail_r
+    Xi = Xi + Atail_i
+    pr, pi = chain_prod_complex(Xr, Xi)
+    live = jnp.asarray(S.tail_live)
+    neg = (C & 1) == 1  # (-1)^{g = start + C} == (-1)^C, chunk-uniform
+    zero = jnp.zeros_like(pr)
+    pr = jnp.where(live, -pr if neg else pr, zero)
+    pi = jnp.where(live, -pi if neg else pi, zero)
+    acc_r = accum(acc_r, pr)
+    acc_i = accum(acc_i, pi)
+
+    if precision in ("kahan", "dd"):
+        return (P.TwoFloat(acc_r[0], jnp.zeros_like(acc_r[0])),
+                P.TwoFloat(acc_i[0], jnp.zeros_like(acc_i[0])), base)
+    return (P.TwoFloat(acc_r[0], acc_r[1]),
+            P.TwoFloat(acc_i[0], acc_i[1]), base)
+
+
+def batched_values_complex(Ars, Ais, T: int, C: int, precision: str):
+    """Traced (re, im) value pair for a (B, n, n) split-plane complex stack.
+
+    The complex analogue of ``batched_values``: the single traced body
+    shared by the jitted single-device program (``_batched_complex_jit``)
+    and the per-device body of the mesh-sharded complex batch path
+    (``distributed.batch_permanents_on_mesh``) -- one trace plus
+    ``tf_tree_sum``'s fixed-order per-component reductions is what makes
+    sharded complex values bit-identical to local ones, mirroring the real
+    path's guarantee.  Returns ``(values_re, values_im)`` of shape (B,).
+    """
+    precision = complex_precision(precision)
+    n = Ars.shape[1]
+
+    def one(planes):
+        ar, ai = planes
+        parts_r, parts_i, (p0r, p0i) = chunk_partial_sums_complex(
+            ar, ai, T, C, precision)
+        # pin the scan -> outer-reduction boundary (see ``batched_values``;
+        # legal here -- the body is not under vmap)
+        rh, rl, ih, il, p0r, p0i = jax.lax.optimization_barrier(
+            (parts_r.hi, parts_r.lo, parts_i.hi, parts_i.lo, p0r, p0i))
+        hr, er = tf_tree_sum(rh, rl)
+        hi_, ei = tf_tree_sum(ih, il)
+        tot_r = P.tf_add_acc(P.TwoFloat(hr, er), p0r)
+        tot_i = P.tf_add_acc(P.TwoFloat(hi_, ei), p0i)
+        f = _final_factor(n)
+        return P.tf_value(tot_r) * f, P.tf_value(tot_i) * f
+
+    # lax.map, NOT vmap: vmap fuses across the batch axis and XLA's
+    # fusion/contraction choices for the complex product chains vary with
+    # the batch extent (ulp drift between B=1/B=2/B=5 programs, observed
+    # on CPU) -- a scan-over-batch compiles ONE body program whatever B
+    # is, so per-element values cannot depend on the batch or shard shape.
+    # Per-matrix SIMD parallelism (the T chunk lanes) is unaffected; what
+    # batching amortizes here is dispatch + compilation, as in PR 1.
+    return jax.lax.map(one, (Ars, Ais))
+
+
+@partial(jax.jit, static_argnames=("num_chunks", "precision"))
+def _batched_complex_jit(Ars, Ais, num_chunks: int, precision: str):
+    n = Ars.shape[1]
+    T, C, _ = chunk_geometry(n, num_chunks)
+    return batched_values_complex(Ars, Ais, T, C, precision)
+
+
 def perm_ryser_batched(As, num_chunks: int = 4096, precision: str = "dq_acc"):
     """Permanents of a stack of same-size matrices in ONE device program.
 
@@ -384,4 +601,8 @@ def perm_ryser_batched(As, num_chunks: int = 4096, precision: str = "dq_acc"):
         return As[:, 0, 0]
     if n == 2:
         return (As[:, 0, 0] * As[:, 1, 1] + As[:, 0, 1] * As[:, 1, 0])
+    if jnp.iscomplexobj(As):
+        vr, vi = _batched_complex_jit(jnp.real(As), jnp.imag(As),
+                                      num_chunks, precision)
+        return vr + 1j * vi
     return _batched_jit(As, num_chunks, precision)

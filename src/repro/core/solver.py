@@ -142,12 +142,6 @@ class PermanentSolver:
         A = np.asarray(A)
         if A.ndim != 2 or A.shape[0] != A.shape[1]:
             raise ValueError(f"square matrix required, got {A.shape}")
-        if np.iscomplexobj(A) and self.config.backend in (
-                "distributed", "distributed_batch"):
-            # fail fast: flushes go through plan_batch, which would only
-            # reject complex input after the request had been queued
-            raise ValueError("distributed backend is real-only; use jnp "
-                             "or pallas for complex matrices")
         req = PermanentRequest(self, A)
         t0, reqs = self._queue.setdefault(A.shape[0],
                                           (self._clock(), []))

@@ -15,7 +15,6 @@ kernel generation ([22], Sec. 3.3).
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from functools import partial
 
@@ -23,14 +22,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import gray as G
 from . import precision as P
-from .ryser import (chain_prod, chunk_geometry, nw_base_vector, tf_tree_sum,
-                    _final_factor)
+from .ryser import (chain_prod, chain_prod_complex, chunk_geometry,
+                    complex_precision, nw_base_vector, rank1_chunk_init,
+                    tf_tree_sum, _CEGSchedules, _final_factor)
 
 __all__ = ["SparseMatrix", "perm_sparyser_chunked", "perm_sparyser_batched",
-           "sparse_batched_values", "pack_padded_ccs",
-           "sparse_chunk_partial_sums"]
+           "sparse_batched_values", "sparse_batched_values_complex",
+           "pack_padded_ccs", "sparse_chunk_partial_sums"]
 
 
 @dataclass(frozen=True)
@@ -136,42 +135,17 @@ def _sparse_partials_traced(A, rows_pad, vals_pad, T: int, C: int,
     if total_chunks is None:
         total_chunks = T
     n = A.shape[0]
-    k = int(math.log2(C))
-    assert C == 1 << k and k >= 1
-    space = 1 << (n - 1)
-    assert total_chunks * C == space
     dtype = A.dtype
-
-    x_base = nw_base_vector(A)
-
-    starts = (np.arange(T, dtype=np.uint64) + np.uint64(chunk_offset)) * np.uint64(C)
-    Gbits = jnp.asarray(G.gray_bits_matrix(starts, n), dtype=dtype)
+    S = _CEGSchedules(n, T, C, chunk_offset, total_chunks)
     # fixed-order rank-1 init, not ``A @ Gbits`` (see ryser.chain_prod:
-    # XLA's contraction split is batch-shape-dependent)
-    X0 = x_base[:, None]
-    for j in range(n):
-        X0 = X0 + A[:, j:j + 1] * Gbits[j:j + 1, :]       # (n, T)
-    # extended with dummy row n for padded scatters
+    # XLA's contraction split is batch-shape-dependent), extended with
+    # dummy row n for padded scatters
+    X0 = rank1_chunk_init(A, nw_base_vector(A), S.gray_bits(n, dtype))
     X0 = jnp.concatenate([X0, jnp.zeros((1, T), dtype=dtype)], axis=0)
 
-    sched = G.changed_bit_schedule(k)
-    w_arr = np.arange(1, C, dtype=np.uint64)
-    jj = sched.astype(np.uint64)
-    bit_j = ((w_arr >> jj) ^ (w_arr >> (jj + np.uint64(1)))) & np.uint64(1)
-    mid_mask = (jj + 1 == k)
-    start_bit_k = ((starts >> np.uint64(k)) & np.uint64(1)).astype(np.int32)
-
-    sched_j = jnp.asarray(sched)
-    base_bits = jnp.asarray(bit_j.astype(np.int32))
-    mid_flags = jnp.asarray(mid_mask.astype(np.int32))
-    w_parity = jnp.asarray((w_arr & np.uint64(1)).astype(np.int32))
-    lane_bitk = jnp.asarray(start_bit_k)
-
-    g_tail = starts + np.uint64(C)
-    tail_j = np.array([G.ctz(int(gt)) for gt in g_tail], dtype=np.int32)
-    tail_sign = np.array([G.step_sign(int(gt)) for gt in g_tail], dtype=np.int64)
-    tail_live = g_tail <= np.uint64(space - 1)
-    tail_j = np.where(tail_live, tail_j, 0)
+    sched_j, base_bits, mid_flags, w_parity = S.scan_inputs
+    lane_bitk = S.lane_bitk
+    tail_j, tail_sign, tail_live = S.tail_j, S.tail_sign, S.tail_live
 
     def accum(acc, term):
         if precision == "dq_fast":
@@ -218,19 +192,105 @@ def _sparse_partials_traced(A, rows_pad, vals_pad, T: int, C: int,
     return P.TwoFloat(acc[0], acc[1])
 
 
+def _sparse_partials_traced_complex(Ar, Ai, rows_pad, vals_r, vals_i,
+                                    T: int, C: int, precision: str,
+                                    chunk_offset: int = 0,
+                                    total_chunks: int | None = None):
+    """Split-plane complex SpaRyser partials; mirrors
+    ``_sparse_partials_traced`` with the matrix carried as (re, im) float
+    planes (see ``ryser.chunk_partial_sums_complex`` for the
+    representation contract).  Returns ``(re, im, base)`` -- (T,)
+    TwoFloats per component plus the scalar base-term pair read off lane
+    0's initial state (valid at ``chunk_offset == 0``)."""
+    precision = complex_precision(precision)
+    if total_chunks is None:
+        total_chunks = T
+    n = Ar.shape[0]
+    dtype = Ar.dtype
+    S = _CEGSchedules(n, T, C, chunk_offset, total_chunks)
+    Gbits = S.gray_bits(n, dtype)
+    Xr = rank1_chunk_init(Ar, nw_base_vector(Ar), Gbits)
+    Xi = rank1_chunk_init(Ai, nw_base_vector(Ai), Gbits)
+    # base product from the lane products' (n, T) vector pattern (a
+    # standalone (B,)-shaped chain compiles batch-shape-dependently)
+    b0r, b0i = chain_prod_complex(Xr, Xi)
+    base = (b0r[0], b0i[0])
+    zrow = jnp.zeros((1, T), dtype=dtype)
+    Xr = jnp.concatenate([Xr, zrow], axis=0)     # dummy row n for scatters
+    Xi = jnp.concatenate([Xi, zrow], axis=0)
+
+    lane_bitk = S.lane_bitk
+    tail_j, tail_sign, tail_live = S.tail_j, S.tail_sign, S.tail_live
+
+    def accum(acc, term):
+        if precision == "dq_fast":
+            t = P.tf_add_fast(P.TwoFloat(*acc), term)
+            return (t.hi, t.lo)
+        if precision == "dq_acc":
+            t = P.tf_add_acc(P.TwoFloat(*acc), term)
+            return (t.hi, t.lo)
+        if precision == "kahan":
+            return P.kahan_add(acc, term)
+        return (acc[0] + term, acc[1])  # dd
+
+    def scan_body(carry, inputs):
+        Xr, Xi, acc_r, acc_i = carry
+        col_j, bit, midf, par = inputs
+        sign_bits = bit ^ (midf & lane_bitk)
+        s = (2 * sign_bits - 1).astype(dtype)              # (T,)
+        r = rows_pad[col_j]                                # (maxdeg,)
+        Xr = Xr.at[r, :].add(vals_r[col_j][:, None] * s[None, :])
+        Xi = Xi.at[r, :].add(vals_i[col_j][:, None] * s[None, :])
+        pr, pi = chain_prod_complex(Xr[:n], Xi[:n])
+        acc_r = accum(acc_r, jnp.where(par == 1, -pr, pr))
+        acc_i = accum(acc_i, jnp.where(par == 1, -pi, pi))
+        return (Xr, Xi, acc_r, acc_i), None
+
+    z = jnp.zeros((T,), dtype=dtype)
+    (Xr, Xi, acc_r, acc_i), _ = jax.lax.scan(
+        scan_body, (Xr, Xi, (z, z), (z, z)), S.scan_inputs)
+
+    # tail step
+    r = rows_pad[jnp.asarray(tail_j)]                      # (T, maxdeg)
+    sgn = jnp.asarray((tail_sign * tail_live).astype(np.float64)).astype(dtype)
+    cols = jnp.arange(T)[None, :]
+    Xr = Xr.at[r.T, cols].add((vals_r[jnp.asarray(tail_j)] * sgn[:, None]).T)
+    Xi = Xi.at[r.T, cols].add((vals_i[jnp.asarray(tail_j)] * sgn[:, None]).T)
+    pr, pi = chain_prod_complex(Xr[:n], Xi[:n])
+    live = jnp.asarray(tail_live)
+    neg = (C & 1) == 1
+    zero = jnp.zeros_like(pr)
+    acc_r = accum(acc_r, jnp.where(live, -pr if neg else pr, zero))
+    acc_i = accum(acc_i, jnp.where(live, -pi if neg else pi, zero))
+
+    if precision in ("kahan", "dd"):
+        return (P.TwoFloat(acc_r[0], jnp.zeros_like(acc_r[0])),
+                P.TwoFloat(acc_i[0], jnp.zeros_like(acc_i[0])), base)
+    return (P.TwoFloat(acc_r[0], acc_r[1]),
+            P.TwoFloat(acc_i[0], acc_i[1]), base)
+
+
 def _sparse_key(sp: SparseMatrix):
     return (sp.n, sp.cids.tobytes(), sp.rptrs.tobytes())
 
 
 def perm_sparyser_chunked(sp: SparseMatrix, num_chunks: int = 4096,
                           precision: str = "dq_acc"):
-    """Permanent of a sparse matrix via chunked SpaRyser."""
+    """Permanent of a sparse matrix via chunked SpaRyser.
+
+    Complex matrices run the split-plane engine as a B=1 batch program
+    (``perm_sparyser_batched``), so scalar stragglers are bit-identical to
+    the same leaf served inside a bucket.
+    """
     n = sp.n
     if n == 1:
         return np.asarray(sp.to_dense()).item()
     A = jnp.asarray(sp.to_dense())
     if n == 2:
         return np.asarray(A[0, 0] * A[1, 1] + A[0, 1] * A[1, 0]).item()
+    if np.iscomplexobj(sp.cvals):
+        return perm_sparyser_batched([sp], num_chunks=num_chunks,
+                                     precision=precision)[0].item()
     T, C, _ = chunk_geometry(n, num_chunks)
     partials = sparse_chunk_partial_sums(sp, T, C, precision)
     # same fixed-order reductions as the batched path (bit-identity)
@@ -273,6 +333,48 @@ def _sparse_batched_jit(A_stack, rows_stack, vals_stack, T: int, C: int,
                         precision: str):
     return sparse_batched_values(A_stack, rows_stack, vals_stack, T, C,
                                  precision)
+
+
+def sparse_batched_values_complex(Ar_stack, Ai_stack, rows_stack,
+                                  vals_r_stack, vals_i_stack,
+                                  T: int, C: int, precision: str):
+    """Traced (re, im) pair for a packed split-plane complex sparse stack.
+
+    The complex analogue of ``sparse_batched_values``: one body shared by
+    the jitted single-device program and the per-device body of
+    ``distributed.sparse_batch_permanents_on_mesh``.  Batched with
+    ``lax.map`` rather than vmap for the same reason as
+    ``ryser.batched_values_complex``: one body program regardless of the
+    batch/shard extent makes per-element values shape-independent by
+    construction.
+    """
+    precision = complex_precision(precision)
+    n = Ar_stack.shape[1]
+
+    def one(packed):
+        ar, ai, rows, vr, vi = packed
+        parts_r, parts_i, (p0r, p0i) = _sparse_partials_traced_complex(
+            ar, ai, rows, vr, vi, T, C, precision)
+        rh, rl, ih, il, p0r, p0i = jax.lax.optimization_barrier(
+            (parts_r.hi, parts_r.lo, parts_i.hi, parts_i.lo, p0r, p0i))
+        hr, er = tf_tree_sum(rh, rl)
+        hi_, ei = tf_tree_sum(ih, il)
+        tot_r = P.tf_add_acc(P.TwoFloat(hr, er), p0r)
+        tot_i = P.tf_add_acc(P.TwoFloat(hi_, ei), p0i)
+        f = _final_factor(n)
+        return P.tf_value(tot_r) * f, P.tf_value(tot_i) * f
+
+    return jax.lax.map(
+        one, (Ar_stack, Ai_stack, rows_stack, vals_r_stack, vals_i_stack))
+
+
+@partial(jax.jit, static_argnames=("T", "C", "precision"))
+def _sparse_batched_complex_jit(Ar_stack, Ai_stack, rows_stack,
+                                vals_r_stack, vals_i_stack,
+                                T: int, C: int, precision: str):
+    return sparse_batched_values_complex(
+        Ar_stack, Ai_stack, rows_stack, vals_r_stack, vals_i_stack,
+        T, C, precision)
 
 
 def pack_padded_ccs(sps: list[SparseMatrix]):
@@ -318,6 +420,15 @@ def perm_sparyser_batched(sps: list[SparseMatrix], num_chunks: int = 4096,
         return np.array([perm_sparyser_chunked(sp) for sp in sps])
     T, C, _ = chunk_geometry(n, num_chunks)
     A_stack, rows_stack, vals_stack = pack_padded_ccs(sps)
+    if np.iscomplexobj(vals_stack):
+        vr, vi = _sparse_batched_complex_jit(
+            jnp.asarray(np.ascontiguousarray(A_stack.real)),
+            jnp.asarray(np.ascontiguousarray(A_stack.imag)),
+            jnp.asarray(rows_stack),
+            jnp.asarray(np.ascontiguousarray(vals_stack.real)),
+            jnp.asarray(np.ascontiguousarray(vals_stack.imag)),
+            T, C, precision)
+        return np.asarray(vr) + 1j * np.asarray(vi)
     out = _sparse_batched_jit(jnp.asarray(A_stack), jnp.asarray(rows_stack),
                               jnp.asarray(vals_stack), T, C, precision)
     return np.asarray(out)

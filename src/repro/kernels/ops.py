@@ -1,9 +1,22 @@
 """Public jitted wrappers around the Pallas Ryser kernels.
 
 ``permanent_pallas(A)`` computes perm(A) with the TPU kernel (interpret mode
-on CPU).  ``block_partials_pallas`` exposes the raw per-block partial sums
-for the distributed runtime (each device runs the kernel over its own chunk
-range; the cross-device reduction is a psum, exactly like the jnp engine).
+on CPU); ``permanent_pallas_batched(As)`` covers a whole same-size stack
+with one (batch, block)-grid launch.  Both route real AND complex input
+through one dispatch helper (``_pallas_values``): geometry, padding, base
+vectors and the twofloat cross-block epilogue are computed once, and only
+the kernel entry differs -- real matrices run ``ryser_pallas``, complex
+matrices run the split re/im plane kernels in ``ryser_complex`` (same
+geometry, same window schedule).  ``block_partials_pallas`` exposes the raw
+per-block partial sums for the distributed runtime (each device runs the
+kernel over its own chunk range; the cross-device reduction is a psum,
+exactly like the jnp engine).
+
+Precision passes through untouched on every route: the kernels implement
+``dd``/``dq_fast``/``dq_acc``/``kahan`` accumulation and run ``qq`` (no
+in-kernel twofloat product) as ``dd`` -- identically for scalar and
+batched, real and complex, so bucket members and scalar stragglers share
+semantics.
 """
 
 from __future__ import annotations
@@ -13,7 +26,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core import precision as P
 from ..core.ryser import nw_base_vector, _final_factor
@@ -21,7 +33,8 @@ from .ryser_pallas import (kernel_geometry, ryser_pallas_call,
                            ryser_pallas_call_batched)
 
 __all__ = ["permanent_pallas", "permanent_pallas_batched",
-           "block_partials_pallas", "pad_matrix"]
+           "block_partials_pallas", "kernel_reduce", "pad_matrix",
+           "pad_base_vector", "split_matrix_planes", "split_base_planes"]
 
 _SUBLANE = 8  # f32 sublane quantum on TPU
 
@@ -41,6 +54,40 @@ def pad_base_vector(x, n_pad: int):
     n = x.shape[0]
     out = jnp.ones((n_pad,), dtype=x.dtype)
     return out.at[:n].set(x)
+
+
+def split_matrix_planes(A):
+    """Zero-padded (re, im) planes of a complex matrix or (B, n, n) stack."""
+    pad = pad_matrix if A.ndim == 2 else jax.vmap(pad_matrix)
+    return pad(jnp.real(A)), pad(jnp.imag(A))
+
+
+def split_base_planes(xb, n_pad: int):
+    """Padded (re, im) planes of NW base vector(s), trailing unit column.
+
+    Padded rows multiply by (1 + 0i): the re plane pads with ones, the im
+    plane with zeros.  ``xb`` is (n,) or (B, n); returns (..., n_pad, 1).
+    """
+    n = xb.shape[-1]
+    shape = xb.shape[:-1] + (n_pad,)
+    dtype = jnp.real(xb).dtype
+    xbr = jnp.ones(shape, dtype).at[..., :n].set(jnp.real(xb))
+    xbi = jnp.zeros(shape, dtype).at[..., :n].set(jnp.imag(xb))
+    return xbr[..., None], xbi[..., None]
+
+
+def kernel_reduce(parts_hi, parts_lo, p0, n: int, axis=None):
+    """Cross-block twofloat epilogue shared by every kernel entry.
+
+    Sums the per-block (hi, lo) partials, folds in the base (g = 0)
+    product and applies the final Ryser factor -- the "quad outer sum" of
+    the paper, per matrix (``axis=1`` for batched partials) and per
+    complex component (callers run it once per plane).
+    """
+    hi, e = P.two_sum(jnp.sum(parts_hi, axis=axis),
+                      jnp.sum(parts_lo, axis=axis))
+    total = P.tf_add_acc(P.TwoFloat(hi, e), p0)
+    return P.tf_value(total) * _final_factor(n)
 
 
 def block_partials_pallas(A, *, dev_chunk_base: int = 0,
@@ -65,6 +112,82 @@ def block_partials_pallas(A, *, dev_chunk_base: int = 0,
     return out, (TB, C, Wu, full_blocks)
 
 
+# ---------------------------------------------------------------------------
+# The real/complex x scalar/batched dispatch helper
+# ---------------------------------------------------------------------------
+
+def _pallas_values(As, *, batched: bool, precision: str, mode: str,
+                   lanes: int, steps_per_chunk: int, window: int,
+                   interpret: bool):
+    """One traced body behind every public pallas entry.
+
+    ``As`` is (n, n) (``batched=False``) or (B, n, n); real input launches
+    the real kernel, complex input the split-plane kernels -- everything
+    else (geometry, padding, NW base vectors, the twofloat epilogue) is
+    shared.
+    """
+    n = As.shape[-1]
+    TB, C, Wu, blocks = kernel_geometry(
+        n, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window)
+
+    if not jnp.iscomplexobj(As):
+        pad = jax.vmap(pad_matrix) if batched else pad_matrix
+        A_pads = pad(As)
+        n_pad = A_pads.shape[-1]
+        xbs = (jax.vmap(nw_base_vector) if batched else nw_base_vector)(As)
+        pad_xb = lambda x: pad_base_vector(x, n_pad)
+        xb_pads = (jax.vmap(pad_xb) if batched else pad_xb)(xbs)[..., None]
+        if batched:
+            out = ryser_pallas_call_batched(
+                A_pads, xb_pads, n=n, TB=TB, C=C, Wu=Wu, num_blocks=blocks,
+                precision=precision, mode=mode, interpret=interpret)
+        else:
+            out = ryser_pallas_call(
+                A_pads, xb_pads, 0, n=n, TB=TB, C=C, Wu=Wu,
+                num_blocks=blocks, precision=precision, mode=mode,
+                interpret=interpret)[None]
+        p0 = jnp.prod(xbs, axis=-1)
+        vals = kernel_reduce(out[:, :, 0], out[:, :, 1], p0, n, axis=1) \
+            if batched else \
+            kernel_reduce(out[0, :, 0], out[0, :, 1], p0, n)
+        return vals
+
+    from .ryser_complex import (ryser_pallas_call_complex,
+                                ryser_pallas_call_complex_batched)
+    Ar_pads, Ai_pads = split_matrix_planes(As)
+    n_pad = Ar_pads.shape[-1]
+    xbs = (jax.vmap(nw_base_vector) if batched else nw_base_vector)(As)
+    xbr, xbi = split_base_planes(xbs, n_pad)
+    if batched:
+        out = ryser_pallas_call_complex_batched(
+            Ar_pads, Ai_pads, xbr, xbi, n=n, TB=TB, C=C, Wu=Wu,
+            num_blocks=blocks, precision=precision, interpret=interpret)
+    else:
+        out = ryser_pallas_call_complex(
+            Ar_pads, Ai_pads, xbr, xbi, 0, n=n, TB=TB, C=C, Wu=Wu,
+            num_blocks=blocks, precision=precision, interpret=interpret)[None]
+    p0 = jnp.prod(xbs, axis=-1)
+    if batched:
+        re = kernel_reduce(out[:, :, 0], out[:, :, 1], jnp.real(p0), n,
+                           axis=1)
+        im = kernel_reduce(out[:, :, 2], out[:, :, 3], jnp.imag(p0), n,
+                           axis=1)
+    else:
+        re = kernel_reduce(out[0, :, 0], out[0, :, 1], jnp.real(p0), n)
+        im = kernel_reduce(out[0, :, 2], out[0, :, 3], jnp.imag(p0), n)
+    return re + 1j * im
+
+
+@partial(jax.jit, static_argnames=("batched", "precision", "mode", "lanes",
+                                   "steps_per_chunk", "window", "interpret"))
+def _pallas_values_jit(As, batched, precision, mode, lanes, steps_per_chunk,
+                       window, interpret):
+    return _pallas_values(As, batched=batched, precision=precision,
+                          mode=mode, lanes=lanes,
+                          steps_per_chunk=steps_per_chunk, window=window,
+                          interpret=interpret)
+
+
 def permanent_pallas(A, *, precision: str = "dq_acc", mode: str = "baseline",
                      lanes: int = 128, steps_per_chunk: int = 64,
                      window: int = 16, interpret: bool = True):
@@ -78,90 +201,35 @@ def permanent_pallas(A, *, precision: str = "dq_acc", mode: str = "baseline",
     if n == 2:
         return A[0, 0] * A[1, 1] + A[0, 1] * A[1, 0]
     if jnp.iscomplexobj(A):
-        return _permanent_pallas_complex(
-            A, precision=precision, lanes=lanes,
-            steps_per_chunk=steps_per_chunk, window=window,
-            interpret=interpret)
-    out, _ = block_partials_pallas(
-        A, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window,
-        precision=precision, mode=mode, interpret=interpret)
-    # outer reduction in twofloat (paper: quad outer sum)
-    hi, e = P.two_sum(jnp.sum(out[:, 0]), jnp.sum(out[:, 1]))
-    p0 = jnp.prod(nw_base_vector(A))
-    total = P.tf_add_acc(P.TwoFloat(hi, e), p0)
-    return P.tf_value(total) * _final_factor(n)
-
-
-@partial(jax.jit, static_argnames=("n", "precision", "mode", "lanes",
-                                   "steps_per_chunk", "window", "interpret"))
-def _pallas_batched_jit(As, n: int, precision: str, mode: str, lanes: int,
-                        steps_per_chunk: int, window: int, interpret: bool):
-    TB, C, Wu, blocks = kernel_geometry(
-        n, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window)
-    A_pads = jax.vmap(lambda A: pad_matrix(A))(As)       # (B, n_pad, n_pad)
-    n_pad = A_pads.shape[1]
-    xbs = jax.vmap(nw_base_vector)(As)                   # (B, n)
-    xb_pads = jax.vmap(
-        lambda x: pad_base_vector(x, n_pad))(xbs)[:, :, None]
-    out = ryser_pallas_call_batched(
-        A_pads, xb_pads, n=n, TB=TB, C=C, Wu=Wu, num_blocks=blocks,
-        precision=precision, mode=mode, interpret=interpret)
-    # per-matrix outer reduction in twofloat (paper: quad outer sum)
-    hi, e = P.two_sum(jnp.sum(out[:, :, 0], axis=1),
-                      jnp.sum(out[:, :, 1], axis=1))
-    p0 = jnp.prod(xbs, axis=1)
-    total = P.tf_add_acc(P.TwoFloat(hi, e), p0)
-    return P.tf_value(total) * _final_factor(n)
+        mode = "batched"             # the split-plane kernel's only mode
+    return _pallas_values_jit(A, False, precision, mode, lanes,
+                              steps_per_chunk, window, interpret)
 
 
 def permanent_pallas_batched(As, *, precision: str = "dq_acc",
                              mode: str = "batched", lanes: int = 128,
                              steps_per_chunk: int = 64, window: int = 16,
                              interpret: bool = True):
-    """perm of a (B, n, n) real stack via ONE batch-grid kernel launch.
+    """perm of a (B, n, n) stack via ONE batch-grid kernel launch.
 
     The grid is (batch, block): every matrix's full iteration space runs
     inside a single ``pallas_call``, so compilation and dispatch are
     amortized over the stack (vs B separate ``permanent_pallas`` calls).
-    Complex stacks are not supported here -- the engine routes those to
-    the vmapped jnp path (``ryser.perm_ryser_batched``).
+    Complex stacks launch the split re/im plane kernel
+    (``ryser_complex.ryser_pallas_call_complex_batched``) with the same
+    grid and geometry.
     """
     As = jnp.asarray(As)
     if As.ndim != 3 or As.shape[1] != As.shape[2]:
         raise ValueError(f"(B, n, n) stack required, got {As.shape}")
-    if jnp.iscomplexobj(As):
-        raise ValueError("complex stacks: use ryser.perm_ryser_batched")
     n = As.shape[1]
     if n == 1:
         return As[:, 0, 0]
     if n == 2:
         return As[:, 0, 0] * As[:, 1, 1] + As[:, 0, 1] * As[:, 1, 0]
-    # precision passes through untouched so bucket members and scalar
-    # stragglers share semantics (the kernel accumulates unknown modes as
-    # dd, same as permanent_pallas)
-    return _pallas_batched_jit(As, n, precision, mode, lanes,
-                               steps_per_chunk, window, interpret)
-
-
-def _permanent_pallas_complex(A, *, precision, lanes, steps_per_chunk,
-                              window, interpret):
-    from .ryser_complex import ryser_pallas_call_complex
-    n = A.shape[0]
-    prec = precision if precision in ("dd", "kahan", "dq_acc") else "dq_acc"
-    TB, C, Wu, blocks = kernel_geometry(
-        n, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window)
-    Ar = pad_matrix(jnp.real(A))
-    Ai = pad_matrix(jnp.imag(A))
-    xb = nw_base_vector(A)
-    xbr = pad_base_vector(jnp.real(xb), Ar.shape[0]).reshape(-1, 1)
-    # padded rows multiply by (1 + 0i)
-    xbi = jnp.zeros((Ar.shape[0], 1), Ar.dtype).at[:n, 0].set(jnp.imag(xb))
-    out = ryser_pallas_call_complex(
-        Ar, Ai, xbr, xbi, 0, n=n, TB=TB, C=C, Wu=Wu, num_blocks=blocks,
-        precision=prec, interpret=interpret)
-    re_hi, e1 = P.two_sum(jnp.sum(out[:, 0]), jnp.sum(out[:, 1]))
-    im_hi, e2 = P.two_sum(jnp.sum(out[:, 2]), jnp.sum(out[:, 3]))
-    p0 = jnp.prod(xb)
-    tot_r = P.tf_add_acc(P.TwoFloat(re_hi, e1), jnp.real(p0))
-    tot_i = P.tf_add_acc(P.TwoFloat(im_hi, e2), jnp.imag(p0))
-    return (P.tf_value(tot_r) + 1j * P.tf_value(tot_i)) * _final_factor(n)
+    if jnp.iscomplexobj(As):
+        mode = "batched"             # the split-plane kernel's only mode
+    elif mode not in ("baseline", "batched"):
+        raise ValueError(f"batch grid supports baseline|batched, got {mode}")
+    return _pallas_values_jit(As, True, precision, mode, lanes,
+                              steps_per_chunk, window, interpret)

@@ -1,6 +1,6 @@
-"""Complex-matrix Pallas Ryser kernel (boson-sampling workloads, Sec. 1).
+"""Complex-matrix Pallas Ryser kernels (boson-sampling workloads, Sec. 1).
 
-TPU VPUs have no complex dtype, so the kernel carries split re/im planes:
+TPU VPUs have no complex dtype, so the kernels carry split re/im planes:
 the row-sum state is (Xr, Xi), column updates are two real adds, and the
 product chain is the complex multiply recurrence
 
@@ -11,7 +11,17 @@ lane math, CEG window alignment and the boundary one-hot matmul are shared
 with the real kernel (window-batched mode: per-window states from two real
 MXU matmuls).  Padded rows multiply by (1 + 0i).
 
-Accumulation: dd or kahan per component; output (blocks, 4) =
+Two launch shapes, mirroring ``ryser_pallas``:
+
+* ``ryser_pallas_call_complex``          -- grid (num_blocks,), one matrix;
+  accepts a host int OR traced device chunk base, so the distributed
+  step-space split can run it per device under shard_map.
+* ``ryser_pallas_call_complex_batched``  -- grid (batch, block), one launch
+  covers a whole same-size stack (the complex analogue of
+  ``ryser_pallas_call_batched``); chunk bases are 0.
+
+Both wrap the same block body ``_ryser_block_cx``.  Accumulation: dd or
+kahan or dq_acc per component; output columns are
 (re_hi, re_err, im_hi, im_err).
 """
 
@@ -25,11 +35,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from ..utils.compat import shape_dtype_struct
 from . import u64emu as U
 from .ryser_pallas import (_accum_add, _accum_make, _cumsig_host,
-                           _signed_const_schedule, kernel_geometry)
+                           _signed_const_schedule, device_base_u32)
 
-__all__ = ["ryser_pallas_call_complex"]
+__all__ = ["ryser_pallas_call_complex", "ryser_pallas_call_complex_batched"]
 
 
 def _cprod(Xr, Xi, n_pad):
@@ -40,22 +51,24 @@ def _cprod(Xr, Xi, n_pad):
     return pr, pi
 
 
-def _ryser_kernel_cx(base_hi_ref, base_lo_ref, Ar_ref, Ai_ref, xbr_ref,
-                     xbi_ref, c0_ref, out_ref, *, n: int, n_pad: int,
-                     TB: int, C: int, Wu: int, space: int, precision: str,
-                     dtype):
-    i = pl.program_id(0)
+def _ryser_block_cx(i, Ar, Ai, xbr, xbi, c0, dev_base, *, n: int, n_pad: int,
+                    TB: int, C: int, Wu: int, space: int, precision: str,
+                    dtype):
+    """One grid block of the split-plane kernel: TB chunks x C Gray steps.
+
+    Shared between the single-matrix kernel (grid over blocks) and the
+    batch-grid kernel (grid over (batch, block)), exactly like the real
+    kernel's ``_ryser_block``; ``i`` is the block id along the chunk axis
+    and ``dev_base`` the u32-pair device chunk base.  Returns the four
+    scalars (re_hi, re_err, im_hi, im_err).
+    """
     k = int(math.log2(C))
     kw = int(math.log2(Wu))
     M = C // Wu
-    Ar, Ai = Ar_ref[...], Ai_ref[...]
-    xbr, xbi = xbr_ref[...], xbi_ref[...]
 
     lane = jax.lax.broadcasted_iota(jnp.uint32, (1, TB), 1).reshape(TB)
-    dev = (base_hi_ref[0, 0].astype(jnp.uint32),
-           base_lo_ref[0, 0].astype(jnp.uint32))
-    chunk64 = U.u64_add_u32((jnp.broadcast_to(dev[0], (TB,)),
-                             jnp.broadcast_to(dev[1], (TB,))),
+    chunk64 = U.u64_add_u32((jnp.broadcast_to(dev_base[0], (TB,)),
+                             jnp.broadcast_to(dev_base[1], (TB,))),
                             (i * TB).astype(jnp.uint32) + lane)
     start64 = U.u64_shl(chunk64, k)
 
@@ -70,7 +83,7 @@ def _ryser_kernel_cx(base_hi_ref, base_lo_ref, Ar_ref, Ai_ref, xbr_ref,
     sched = _signed_const_schedule(Wu)
     space_m1 = U.u64_from_int(space - 1, like=lane)
     row_iota = jax.lax.broadcasted_iota(jnp.uint32, (n_pad, TB), 0)
-    C0 = c0_ref[...]
+    C0 = c0
     mid_idx = next((ix for ix, st in enumerate(sched) if st[2]), None)
 
     def macro_body(m, carry):
@@ -127,26 +140,56 @@ def _ryser_kernel_cx(base_hi_ref, base_lo_ref, Ar_ref, Ai_ref, xbr_ref,
         Xr, Xi, acc_r, acc_i = jax.lax.fori_loop(
             0, M, macro_body, (Xr, Xi, acc_r, acc_i))
 
-    out_ref[0, 0] = jnp.sum(acc_r[0])
-    out_ref[0, 1] = jnp.sum(acc_r[1]) if precision == "dq_acc" \
-        else jnp.zeros((), dtype)
-    out_ref[0, 2] = jnp.sum(acc_i[0])
-    out_ref[0, 3] = jnp.sum(acc_i[1]) if precision == "dq_acc" \
-        else jnp.zeros((), dtype)
+    zero = jnp.zeros((), dtype)
+    keep_err = precision in ("dq_acc", "dq_fast")
+    re_err = jnp.sum(acc_r[1]) if keep_err else zero
+    im_err = jnp.sum(acc_i[1]) if keep_err else zero
+    return jnp.sum(acc_r[0]), re_err, jnp.sum(acc_i[0]), im_err
+
+
+def _ryser_kernel_cx(base_hi_ref, base_lo_ref, Ar_ref, Ai_ref, xbr_ref,
+                     xbi_ref, c0_ref, out_ref, **geom):
+    """Single-matrix kernel: grid = (num_blocks,); writes (1, 4) partials."""
+    dev = (base_hi_ref[0, 0].astype(jnp.uint32),
+           base_lo_ref[0, 0].astype(jnp.uint32))
+    hr, er, hi, ei = _ryser_block_cx(
+        pl.program_id(0), Ar_ref[...], Ai_ref[...], xbr_ref[...],
+        xbi_ref[...], c0_ref[...], dev, **geom)
+    out_ref[0, 0] = hr
+    out_ref[0, 1] = er
+    out_ref[0, 2] = hi
+    out_ref[0, 3] = ei
+
+
+def _ryser_kernel_cx_batched(Ar_ref, Ai_ref, xbr_ref, xbi_ref, c0_ref,
+                             out_ref, **geom):
+    """Batch-grid kernel: grid = (B, num_blocks); one launch covers the
+    whole stack.  Block b of the plane stacks is selected by the
+    BlockSpec; the chunk base is 0 (each matrix owns its full space)."""
+    zero = jnp.uint32(0)
+    hr, er, hi, ei = _ryser_block_cx(
+        pl.program_id(1), Ar_ref[0], Ai_ref[0], xbr_ref[0], xbi_ref[0],
+        c0_ref[...], (zero, zero), **geom)
+    out_ref[0, 0, 0] = hr
+    out_ref[0, 0, 1] = er
+    out_ref[0, 0, 2] = hi
+    out_ref[0, 0, 3] = ei
 
 
 def ryser_pallas_call_complex(Ar_pad, Ai_pad, xbr, xbi,
-                              dev_chunk_base: int, *, n: int, TB: int,
+                              dev_chunk_base, *, n: int, TB: int,
                               C: int, Wu: int, num_blocks: int,
                               precision: str = "dq_acc",
-                              interpret: bool = True):
-    """(num_blocks, 4) partials: (re_hi, re_err, im_hi, im_err)."""
+                              interpret: bool = True, vma=None):
+    """(num_blocks, 4) partials: (re_hi, re_err, im_hi, im_err).
+
+    ``dev_chunk_base`` may be a host int or a traced scalar (the
+    distributed shard_map path), exactly like the real kernel.
+    """
     n_pad = Ar_pad.shape[0]
     dtype = Ar_pad.dtype
     space = 1 << (n - 1)
-    base_hi = jnp.full((1, 1), (int(dev_chunk_base) >> 32) & 0xFFFFFFFF,
-                       jnp.uint32)
-    base_lo = jnp.full((1, 1), int(dev_chunk_base) & 0xFFFFFFFF, jnp.uint32)
+    base_hi, base_lo = device_base_u32(dev_chunk_base)
     c0 = jnp.asarray(_cumsig_host(_signed_const_schedule(Wu), n_pad), dtype)
     kernel = functools.partial(
         _ryser_kernel_cx, n=n, n_pad=n_pad, TB=TB, C=C, Wu=Wu, space=space,
@@ -163,6 +206,44 @@ def ryser_pallas_call_complex(Ar_pad, Ai_pad, xbr, xbi,
             pl.BlockSpec(c0.shape, rep),
         ],
         out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_blocks, 4), dtype),
+        out_shape=shape_dtype_struct((num_blocks, 4), dtype, vma=vma),
         interpret=interpret,
     )(base_hi, base_lo, Ar_pad, Ai_pad, xbr, xbi, c0)
+
+
+def ryser_pallas_call_complex_batched(Ar_pads, Ai_pads, xbr_pads, xbi_pads,
+                                      *, n: int, TB: int, C: int, Wu: int,
+                                      num_blocks: int,
+                                      precision: str = "dq_acc",
+                                      interpret: bool = True):
+    """Launch ONE split-plane kernel over a (B, n_pad, n_pad) plane pair:
+    grid is (batch, block), so a single ``pallas_call`` covers every
+    matrix's full 2^{n-1} step space -- the complex analogue of
+    ``ryser_pallas_call_batched``, sharing its geometry inputs
+    (``kernel_geometry``) and the window schedule (``_cumsig_host``).
+    Returns (B, num_blocks, 4) (re_hi, re_err, im_hi, im_err) partials
+    (base g=0 terms NOT included).
+    """
+    B, n_pad, _ = Ar_pads.shape
+    dtype = Ar_pads.dtype
+    space = 1 << (n - 1)
+    c0 = jnp.asarray(_cumsig_host(_signed_const_schedule(Wu), n_pad), dtype)
+
+    kernel = functools.partial(
+        _ryser_kernel_cx_batched, n=n, n_pad=n_pad, TB=TB, C=C, Wu=Wu,
+        space=space, precision=precision, dtype=dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, num_blocks),
+        in_specs=[
+            pl.BlockSpec((1, n_pad, n_pad), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, n_pad, n_pad), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, n_pad, 1), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, n_pad, 1), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec(c0.shape, lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 4), lambda b, i: (b, i, 0)),
+        out_shape=shape_dtype_struct((B, num_blocks, 4), dtype),
+        interpret=interpret,
+    )(Ar_pads, Ai_pads, xbr_pads, xbi_pads, c0)

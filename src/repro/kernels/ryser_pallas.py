@@ -48,7 +48,30 @@ from ..utils.compat import shape_dtype_struct
 from . import u64emu as U
 
 __all__ = ["ryser_pallas_call", "ryser_pallas_call_batched",
-           "kernel_geometry"]
+           "kernel_geometry", "device_base_u32"]
+
+
+def device_base_u32(dev_chunk_base):
+    """Encode a device chunk base as a (1, 1) uint32 (hi, lo) pair.
+
+    Accepts a host int or a traced scalar (the distributed shard_map path):
+    uint64 under x64 keeps the full range; 32-bit ints cover per-device
+    ranges in tests.  Shared by the real and complex kernel wrappers.
+    """
+    if isinstance(dev_chunk_base, (int, np.integer)):
+        base_hi = jnp.full((1, 1), (int(dev_chunk_base) >> 32) & 0xFFFFFFFF,
+                           jnp.uint32)
+        base_lo = jnp.full((1, 1), int(dev_chunk_base) & 0xFFFFFFFF,
+                           jnp.uint32)
+        return base_hi, base_lo
+    b = jnp.asarray(dev_chunk_base)
+    if b.dtype in (jnp.uint64, jnp.int64):
+        base_hi = (b >> 32).astype(jnp.uint32).reshape(1, 1)
+        base_lo = b.astype(jnp.uint32).reshape(1, 1)
+    else:
+        base_hi = jnp.zeros((1, 1), jnp.uint32) * b.astype(jnp.uint32)
+        base_lo = b.astype(jnp.uint32).reshape(1, 1)
+    return base_hi.reshape(1, 1), base_lo
 
 
 def kernel_geometry(n: int, *, lanes: int = 128, steps_per_chunk: int = 64,
@@ -110,11 +133,19 @@ def _accum_add(acc, term, precision):
         bp = hi - s
         e = (s - (hi - bp)) + (term - bp)
         return (hi, c + e)
-    return (s + term, c)  # dd
+    if precision == "dq_fast":
+        # Dekker-style sloppy twofloat accumulate (tf_add_fast): two_sum
+        # into the hi limb, then renormalize with fast_two_sum
+        hi = s + term
+        bp = hi - s
+        e = (s - (hi - bp)) + (term - bp) + c
+        s2 = hi + e
+        return (s2, e - (s2 - hi))
+    return (s + term, c)  # dd (and qq: no twofloat product in-kernel)
 
 
 def _accum_value(acc, precision):
-    if precision == "dq_acc":
+    if precision in ("dq_acc", "dq_fast"):
         return acc[0], acc[1]
     return acc[0], jnp.zeros_like(acc[1])
 
@@ -297,22 +328,7 @@ def ryser_pallas_call(A_pad, x_base_pad, dev_chunk_base, *,
     n_pad = A_pad.shape[0]
     dtype = A_pad.dtype
     space = 1 << (n - 1)
-    if isinstance(dev_chunk_base, (int, np.integer)):
-        base_hi = jnp.full((1, 1), (int(dev_chunk_base) >> 32) & 0xFFFFFFFF,
-                           jnp.uint32)
-        base_lo = jnp.full((1, 1), int(dev_chunk_base) & 0xFFFFFFFF,
-                           jnp.uint32)
-    else:
-        # traced base (distributed shard_map path): uint64 under x64 keeps
-        # the full range; 32-bit ints cover per-device ranges in tests
-        b = jnp.asarray(dev_chunk_base)
-        if b.dtype in (jnp.uint64, jnp.int64):
-            base_hi = (b >> 32).astype(jnp.uint32).reshape(1, 1)
-            base_lo = b.astype(jnp.uint32).reshape(1, 1)
-        else:
-            base_hi = jnp.zeros((1, 1), jnp.uint32) * b.astype(jnp.uint32)
-            base_lo = b.astype(jnp.uint32).reshape(1, 1)
-        base_hi = base_hi.reshape(1, 1)
+    base_hi, base_lo = device_base_u32(dev_chunk_base)
     sched = _signed_const_schedule(Wu)
     if mode == "schedmat":
         sel = jnp.asarray(_sched_select_host(sched, n_pad), dtype)

@@ -103,7 +103,11 @@ def permanent_main(argv=None) -> int:
         val, report = solver.execute(plan, return_report=True)
     dt = time.time() - t0
 
-    print(f"[superman] perm(A) = {val:+.17e}   ({dt:.2f}s)")
+    if isinstance(val, complex):
+        print(f"[superman] perm(A) = {val.real:+.17e} {val.imag:+.17e}j"
+              f"   ({dt:.2f}s)")
+    else:
+        print(f"[superman] perm(A) = {val:+.17e}   ({dt:.2f}s)")
     if report:
         print(f"[superman] dm_removed={report.dm_removed} "
               f"fm_leaves={report.fm_leaves} dispatch={report.dispatch[:6]}")

@@ -112,21 +112,24 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
                           requests: int = 128, density: float = 1.0,
                           precision: str = "dq_acc", backend: str = "jnp",
                           repeat_pool: int = 0, deadline_s: float = 0.05,
-                          cache: bool = True, mesh=None, seed: int = 0):
+                          cache: bool = True, mesh=None,
+                          complex_entries: bool = False, seed: int = 0):
     """Drain a synthetic permanent-request stream through the solver queue.
 
     ``requests`` random n x n matrices (dense, or sparse when
-    ``density < 1``; drawn from a pool of ``repeat_pool`` distinct
-    matrices when > 0, the boson-sampling resampling shape) are submitted
-    one by one to a ``PermanentSolver``'s async queue.  Size-bucketed
+    ``density < 1``; complex when ``complex_entries`` -- the
+    boson-sampling amplitude shape; drawn from a pool of ``repeat_pool``
+    distinct matrices when > 0, the resampling shape) are submitted one
+    by one to a ``PermanentSolver``'s async queue.  Size-bucketed
     accumulation flushes each bucket at depth ``batch`` (or after
     ``deadline_s``), so batches fill from the arrival stream instead of
     being hand-rolled; repeated submatrices resolve from the solver's
     content-hash result cache without touching the device.  With ``mesh``
-    set (and ``backend="distributed"``), flushed buckets are batch-axis
-    sharded over the mesh's devices instead of running on one.  Returns
-    perms/sec and per-flush latency stats; the first flush (compile) is
-    reported separately.
+    set (and ``backend="distributed"``), flushed buckets -- complex ones
+    included, as split re/im planes -- are batch-axis sharded over the
+    mesh's devices instead of running on one.  Returns perms/sec and
+    per-flush latency stats; the first flush (compile) is reported
+    separately.
     """
     from ..core.solver import PermanentSolver, SolverConfig
 
@@ -140,9 +143,14 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
 
     def draw():
         if density < 1.0:
-            return rng.uniform(0.5, 1.5, (n, n)) \
-                * (rng.uniform(0, 1, (n, n)) < density)
-        return rng.uniform(-1, 1, (n, n))
+            M = rng.uniform(0.5, 1.5, (n, n))
+            if complex_entries:
+                M = M + 1j * rng.uniform(0.5, 1.5, (n, n))
+            return M * (rng.uniform(0, 1, (n, n)) < density)
+        M = rng.uniform(-1, 1, (n, n))
+        if complex_entries:
+            M = M + 1j * rng.uniform(-1, 1, (n, n))
+        return M
 
     if repeat_pool > 0:
         pool = [draw() for _ in range(repeat_pool)]
@@ -177,7 +185,8 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
     steady_s = sum(s for s, _ in steady)
     steady_n = sum(c for _, c in steady)
     stats = solver.stats()
-    return {"values": np.real(values), "total_s": total_s,
+    return {"values": values if complex_entries else np.real(values),
+            "total_s": total_s,
             "compile_batch_s": lat[0][0] if lat else tail_s,
             "steady_batch_s": steady_s / max(1, len(steady)),
             "tail_s": tail_s,
@@ -206,6 +215,10 @@ def serve_main(argv=None) -> int:
     ap.add_argument("--repeat-pool", type=int, default=0,
                     help="permanent mode: draw requests from this many "
                          "distinct matrices (0 = all distinct)")
+    ap.add_argument("--complex", dest="complex_entries", action="store_true",
+                    help="permanent mode: complex request matrices "
+                         "(boson-sampling amplitudes); sharded as split "
+                         "re/im planes under --mesh")
     ap.add_argument("--deadline-ms", type=float, default=50.0,
                     help="permanent mode: queue flush deadline")
     ap.add_argument("--no-cache", dest="cache", action="store_false",
@@ -234,9 +247,11 @@ def serve_main(argv=None) -> int:
             n=args.perm_n, batch=args.batch, requests=args.requests,
             density=args.density, precision=args.precision,
             backend=args.backend, repeat_pool=args.repeat_pool,
-            deadline_s=args.deadline_ms / 1e3, cache=args.cache, mesh=mesh)
-        print(f"[serve] permanents: {args.requests} reqs x n={args.perm_n} "
-              f"batch={args.batch} backend="
+            deadline_s=args.deadline_ms / 1e3, cache=args.cache, mesh=mesh,
+            complex_entries=args.complex_entries)
+        print(f"[serve] permanents: {args.requests} "
+              f"{'complex ' if args.complex_entries else ''}reqs "
+              f"x n={args.perm_n} batch={args.batch} backend="
               f"{'distributed' if mesh is not None else args.backend}")
         if out["downgrades"]:
             print(f"[serve] downgrades: {len(out['downgrades'])} "

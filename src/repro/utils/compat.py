@@ -1,19 +1,27 @@
 """JAX cross-version compatibility shims.
 
 The repo targets the modern JAX API surface (``jax.shard_map``, varying
-manual axes on ``ShapeDtypeStruct``), but must also run on JAX 0.4.x where
-``shard_map`` lives in ``jax.experimental.shard_map`` and takes
-``check_rep`` instead of ``check_vma`` (the kwarg was renamed when the
-rep-typing system became vma-typing).  Every ``shard_map`` call site in
-the repo goes through :func:`shard_map` below so the choice is made in
-exactly one place.
+manual axes on ``ShapeDtypeStruct``) and prefers the native symbols
+whenever the installed JAX provides them; the shims below exist only as
+fallbacks for older releases (ROADMAP upstream-facing item: the fallback
+is self-contained and drops out once the minimum supported JAX has
+``jax.shard_map``).  Every ``shard_map`` call site in the repo goes
+through :func:`shard_map` so the choice is made in exactly one place --
+and made ONCE, at import time, not per call.
+
+Resolution order for ``shard_map``:
+
+1. ``jax.shard_map`` (native, modern releases) -- used as-is;
+2. ``jax.experimental.shard_map.shard_map`` (0.4.x era) -- the
+   replication-check kwarg is adapted by *inspecting the signature*
+   (``check_vma`` was named ``check_rep`` before the rep-typing system
+   became vma-typing), so intermediate releases that renamed it under
+   either module path all work.
 
 Exports:
 
 * ``shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
-  -- dispatches to ``jax.shard_map`` when present, else to the legacy
-  ``jax.experimental.shard_map.shard_map`` with ``check_vma`` translated
-  to ``check_rep``.
+  -- version-portable shard_map mirroring the modern keyword API.
 * ``shape_dtype_struct(shape, dtype, vma=None)`` -- ``ShapeDtypeStruct``
   that forwards ``vma`` (varying manual axes) only on JAX versions whose
   constructor accepts it; older versions simply don't track vma, which is
@@ -23,6 +31,8 @@ Exports:
 
 from __future__ import annotations
 
+import inspect
+
 import jax
 
 __all__ = ["shard_map", "shape_dtype_struct", "HAS_NATIVE_SHARD_MAP"]
@@ -30,20 +40,45 @@ __all__ = ["shard_map", "shape_dtype_struct", "HAS_NATIVE_SHARD_MAP"]
 HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
 
 
+def _resolve_shard_map():
+    """Pick the shard_map implementation and its check-kwarg name once."""
+    if HAS_NATIVE_SHARD_MAP:
+        impl = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as impl
+    try:
+        params = inspect.signature(impl).parameters
+    except (TypeError, ValueError):      # C-level / wrapped callables:
+        params = None                    # assume the era's kwarg below
+    if params is None:
+        # signature unknown -- every call site here passes check_vma=False
+        # and NEEDS the flag forwarded, so assume the name that matches
+        # the resolved implementation's era rather than dropping it
+        check_kw = "check_vma" if HAS_NATIVE_SHARD_MAP else "check_rep"
+    elif "check_vma" in params:
+        check_kw = "check_vma"
+    elif "check_rep" in params:
+        check_kw = "check_rep"
+    else:                                # future JAX: flag dropped entirely
+        check_kw = None
+    return impl, check_kw
+
+
+_SHARD_MAP_IMPL, _CHECK_KW = _resolve_shard_map()
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     """Version-portable ``shard_map``.
 
-    Mirrors the modern ``jax.shard_map`` keyword API.  On JAX 0.4.x the
-    call is routed to ``jax.experimental.shard_map.shard_map`` and
-    ``check_vma`` becomes ``check_rep`` (same semantics: disable the
-    per-output replication/vma typing check).
+    Mirrors the modern ``jax.shard_map`` keyword API; ``check_vma``
+    travels under whatever name the resolved implementation accepts
+    (``check_rep`` on 0.4.x -- same semantics: disable the per-output
+    replication/vma typing check) and is dropped if it accepts neither.
     """
-    if HAS_NATIVE_SHARD_MAP:
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=check_vma)
-    from jax.experimental.shard_map import shard_map as _legacy_shard_map
-    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_rep=check_vma)
+    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _SHARD_MAP_IMPL(f, **kwargs)
 
 
 def shape_dtype_struct(shape, dtype, vma=None):

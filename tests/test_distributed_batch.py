@@ -72,31 +72,87 @@ def test_batch_on_mesh_validates_shape():
 
 
 # ---------------------------------------------------------------------------
-# satellite: distributed is real-only, rejected at plan/entry time
+# ISSUE 4 tentpole: complex is first-class at every distributed entry
 # ---------------------------------------------------------------------------
 
-def test_complex_rejected_at_every_distributed_entry():
-    C = RNG.normal(size=(5, 5)) + 1j * RNG.normal(size=(5, 5))
+def _rand_complex(B, n, rng=RNG):
+    return rng.normal(size=(B, n, n)) + 1j * rng.normal(size=(B, n, n))
+
+
+def test_complex_batch_on_mesh_bitwise_matches_jnp_per_precision():
+    stack = _rand_complex(5, 8)
     mesh = _mesh1()
-    with pytest.raises(ValueError, match="real-only"):
-        distributed.batch_permanents_on_mesh(
-            np.stack([C, C]), mesh)
-    with pytest.raises(ValueError, match="real-only"):
-        distributed.permanent_on_mesh(C, mesh)
-    with pytest.raises(ValueError, match="real-only"):
-        distributed.DistributedPermanent(mesh).permanent(C)
-    # plan/submit time, for both distributed backends
+    for prec in PRECISIONS:
+        got = distributed.batch_permanents_on_mesh(stack, mesh,
+                                                   precision=prec)
+        ref = np.asarray(ryser.perm_ryser_batched(stack, precision=prec))
+        assert np.array_equal(got, ref), prec
+
+
+def test_complex_sparse_batch_on_mesh_bitwise_matches_jnp():
+    sps = [sparyser.SparseMatrix.from_dense(
+        _rand_complex(1, 8)[0] * (RNG.uniform(0, 1, (8, 8)) < 0.3))
+        for _ in range(3)]
+    got = distributed.sparse_batch_permanents_on_mesh(sps, _mesh1())
+    ref = np.asarray(sparyser.perm_sparyser_batched(sps))
+    assert np.array_equal(got, ref)
+
+
+def test_complex_accepted_at_every_distributed_entry():
+    # no remaining "real-only" ValueError anywhere in core.distributed
+    C = _rand_complex(1, 6)[0]
+    mesh = _mesh1()
+    ref = complex(engine.permanent(C))
+    v = distributed.permanent_on_mesh(C, mesh)
+    assert abs(complex(v) - ref) / abs(ref) < 1e-12
+    r = distributed.DistributedPermanent(mesh).permanent(C)
+    assert isinstance(r, complex)
+    assert abs(r - ref) / abs(ref) < 1e-12
     for backend in ("distributed", "distributed_batch"):
-        solver = PermanentSolver(backend=backend)
-        with pytest.raises(ValueError, match="real-only"):
-            solver.plan(C)
-        with pytest.raises(ValueError, match="real-only"):
-            solver.plan_batch([C])
-        with pytest.raises(ValueError, match="real-only"):
-            solver.submit(C)
-        assert solver.pending == 0, "rejected submits must not enqueue"
-    with pytest.raises(ValueError, match="real-only"):
-        engine.permanent_batch([C, C], backend="distributed")
+        solver = PermanentSolver(backend=backend, distributed_ctx=mesh)
+        assert solver.plan(C).is_complex
+        assert solver.plan_batch([C]).is_complex
+        req = solver.submit(C)
+        solver.flush()
+        assert abs(req.result() - ref) / abs(ref) < 1e-12
+    vals = engine.permanent_batch([C, C], backend="distributed",
+                                  distributed_ctx=mesh)
+    np.testing.assert_allclose(vals, [ref, ref], rtol=1e-12)
+
+
+def test_complex_solver_with_mesh_shards_bitwise_no_downgrade():
+    mesh = _mesh1()
+    mats = list(_rand_complex(4, 8)) \
+        + [_rand_complex(1, 9)[0] * (RNG.uniform(0, 1, (9, 9)) < 0.25)
+           for _ in range(3)]
+    dist = PermanentSolver(SolverConfig(backend="distributed",
+                                        preprocess=False),
+                           distributed_ctx=mesh)
+    jnp_s = PermanentSolver(SolverConfig(backend="jnp", preprocess=False))
+    got, reports = dist.execute(dist.plan_batch(mats), return_report=True)
+    ref = jnp_s.execute(jnp_s.plan_batch(mats))
+    assert np.array_equal(got, ref), \
+        "sharded complex buckets must be bit-identical to jnp"
+    assert not dist.stats()["downgrades"]
+    tags = [t for r in reports for t in r.dispatch]
+    assert any(t.startswith("dense_batch") and "->" not in t for t in tags)
+
+
+def test_complex_qq_plan_tags_precision_downgrade():
+    C = _rand_complex(2, 6)
+    solver = PermanentSolver(SolverConfig(precision="qq", preprocess=False))
+    plan = solver.plan_batch(list(C))
+    assert plan.precision == "kahan"
+    assert plan.precision_downgrade == "qq->kahan"
+    assert plan.to_json()["precision_downgrade"] == "qq->kahan"
+    _, reports = solver.execute(plan, return_report=True)
+    tags = [t for r in reports for t in r.dispatch]
+    assert any("precision(qq->kahan)" in t for t in tags), tags
+    assert any("precision(qq->kahan)" in t
+               for t in solver.stats()["downgrades"])
+    # real plans carry no such tag
+    real_plan = solver.plan_batch([RNG.uniform(-1, 1, (6, 6))])
+    assert real_plan.precision_downgrade is None
 
 
 # ---------------------------------------------------------------------------
@@ -256,6 +312,64 @@ def test_eight_device_sparse_route_bitwise():
         got = distributed.sparse_batch_permanents_on_mesh(sps, mesh)
         ref = np.asarray(sparyser.perm_sparyser_batched(sps))
         assert np.array_equal(got, ref)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_eight_device_complex_dense_bitwise_with_ragged_tail():
+    out = _run_sub("""
+        rng = np.random.default_rng(6)
+        for n, B in ((8, 11), (10, 21)):    # B % 8 != 0: padded + masked
+            stack = rng.normal(size=(B, n, n)) \\
+                + 1j * rng.normal(size=(B, n, n))
+            for prec in ("dd", "dq_fast", "dq_acc", "qq", "kahan"):
+                got = distributed.batch_permanents_on_mesh(
+                    stack, mesh, precision=prec)
+                ref = np.asarray(ryser.perm_ryser_batched(
+                    stack, precision=prec))
+                assert np.array_equal(got, ref), (n, B, prec)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_eight_device_complex_sparse_route_bitwise():
+    out = _run_sub("""
+        rng = np.random.default_rng(7)
+        sps = [sparyser.SparseMatrix.from_dense(
+                   (rng.normal(size=(9, 9)) + 1j * rng.normal(size=(9, 9)))
+                   * (rng.uniform(0, 1, (9, 9)) < 0.3))
+               for _ in range(13)]          # ragged over 8 devices
+        got = distributed.sparse_batch_permanents_on_mesh(sps, mesh)
+        ref = np.asarray(sparyser.perm_sparyser_batched(sps))
+        assert np.array_equal(got, ref)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_eight_device_complex_solver_queue_and_cache():
+    out = _run_sub("""
+        rng = np.random.default_rng(8)
+        pool = [rng.normal(size=(8, 8)) + 1j * rng.normal(size=(8, 8))
+                for _ in range(6)]
+        stream = [pool[i] for i in rng.integers(0, 6, 32)]
+        dist = PermanentSolver(SolverConfig(backend="distributed",
+                                            queue_max_batch=16,
+                                            queue_max_delay_s=1e9),
+                               distributed_ctx=mesh)
+        reqs = [dist.submit(M) for M in stream]
+        dist.flush()
+        got = np.array([r.result() for r in reqs])
+        ref = engine.permanent_batch(stream)
+        assert np.array_equal(got, ref), np.abs(got - ref).max()
+        st = dist.stats()
+        assert not st["downgrades"], st["downgrades"]
+        assert st["cache"]["hits"] > 0, "repeat pool must hit the cache"
         print("OK")
     """)
     assert "OK" in out

@@ -57,6 +57,25 @@ def test_ryser_batched_complex_stack():
     np.testing.assert_allclose(got, ref, rtol=1e-9)
 
 
+def test_ryser_batched_complex_batch_shape_invariant():
+    # the split-plane engine's values must not depend on the batch extent
+    # (the basis of the sharded complex path's bit-identity contract)
+    As = RNG.normal(size=(6, 7, 7)) + 1j * RNG.normal(size=(6, 7, 7))
+    for prec in ("dd", "dq_fast", "dq_acc", "qq", "kahan"):
+        full = np.asarray(ryser.perm_ryser_batched(jnp.asarray(As),
+                                                   num_chunks=16,
+                                                   precision=prec))
+        for B in (1, 2, 5):
+            sub = np.asarray(ryser.perm_ryser_batched(jnp.asarray(As[:B]),
+                                                      num_chunks=16,
+                                                      precision=prec))
+            assert np.array_equal(sub, full[:B]), (prec, B)
+        one = complex(np.asarray(ryser.perm_ryser_chunked(
+            jnp.asarray(As[0]), num_chunks=16, precision=prec)))
+        assert one == complex(full[0]), \
+            "complex scalar straggler must match its bucket value"
+
+
 def test_ryser_batched_rejects_non_stack():
     with pytest.raises(ValueError):
         ryser.perm_ryser_batched(jnp.zeros((3, 4, 5)))
@@ -72,6 +91,19 @@ def test_sparyser_batched_matches_oracle():
     got = sparyser.perm_sparyser_batched(sps, num_chunks=64)
     ref = np.array([oracle.perm_ryser_exact(M) for M in mats])
     np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-12)
+
+
+def test_sparyser_batched_complex_matches_oracle():
+    mats = [(RNG.normal(size=(8, 8)) + 1j * RNG.normal(size=(8, 8)))
+            * (RNG.uniform(0, 1, (8, 8)) < 0.3) for _ in range(4)]
+    sps = [sparyser.SparseMatrix.from_dense(M) for M in mats]
+    got = sparyser.perm_sparyser_batched(sps, num_chunks=16)
+    ref = np.array([oracle.perm_ryser_exact(M) for M in mats])
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-12)
+    # scalar complex straggler matches its bucket value bitwise
+    one = sparyser.perm_sparyser_chunked(sps[0], num_chunks=16)
+    assert one == sparyser.perm_sparyser_batched(sps[:1],
+                                                 num_chunks=16)[0].item()
 
 
 def test_sparyser_batched_mixed_degrees_pad_to_bucket_max():
@@ -106,10 +138,30 @@ def test_pallas_batched_equals_scalar_kernel():
         np.testing.assert_allclose(got[b], one, rtol=1e-12)
 
 
-def test_pallas_batched_rejects_complex_and_schedmat():
-    Cs = jnp.asarray(RNG.uniform(-1, 1, (2, 5, 5)) + 1j)
-    with pytest.raises(ValueError):
-        ops.permanent_pallas_batched(Cs)
+def test_pallas_batched_complex_matches_oracle():
+    # ISSUE 4: complex stacks run the split-plane (batch, block) kernel
+    Cs = RNG.uniform(-1, 1, (4, 8, 8)) + 1j * RNG.uniform(-1, 1, (4, 8, 8))
+    got = np.asarray(ops.permanent_pallas_batched(
+        jnp.asarray(Cs), lanes=8, steps_per_chunk=8, window=4))
+    ref = np.array([oracle.perm_ryser_exact(C) for C in Cs])
+    np.testing.assert_allclose(got, ref, rtol=1e-9)
+
+
+def test_pallas_batched_complex_equals_scalar_complex_kernel():
+    Cs = RNG.uniform(-1, 1, (3, 9, 9)) + 1j * RNG.uniform(-1, 1, (3, 9, 9))
+    for prec in ("dd", "kahan", "dq_acc"):
+        got = np.asarray(ops.permanent_pallas_batched(
+            jnp.asarray(Cs), precision=prec, lanes=8, steps_per_chunk=8,
+            window=4))
+        for b in range(3):
+            one = complex(np.asarray(ops.permanent_pallas(
+                Cs[b], precision=prec, lanes=8, steps_per_chunk=8,
+                window=4)))
+            assert got[b] == one, \
+                "batch grid must reuse the scalar complex block body"
+
+
+def test_pallas_batched_rejects_schedmat():
     with pytest.raises(ValueError):
         ops.permanent_pallas_batched(jnp.zeros((2, 5, 5)), mode="schedmat")
 
@@ -189,7 +241,16 @@ def test_batch_dm_zeroed_matrix_gives_zero():
 def test_batch_rejects_bad_inputs():
     with pytest.raises(ValueError):
         engine.permanent_batch([np.zeros((3, 4))])
-    # distributed batches are allowed now (ISSUE 3) but real-only
-    with pytest.raises(ValueError):
-        engine.permanent_batch(np.zeros((2, 3, 3), dtype=complex),
-                               backend="distributed")
+
+
+def test_batch_complex_distributed_without_mesh_downgrades():
+    # complex distributed batches are allowed now (ISSUE 4); without a
+    # mesh ctx they downgrade to jnp with a tag, exactly like real ones
+    Cs = RNG.normal(size=(3, 6, 6)) + 1j * RNG.normal(size=(3, 6, 6))
+    got, reports = engine.permanent_batch(Cs, backend="distributed",
+                                          preprocess=False,
+                                          return_report=True)
+    ref = engine.permanent_batch(Cs, preprocess=False)
+    np.testing.assert_allclose(got, ref, rtol=0)
+    tags = [t for r in reports for t in r.dispatch]
+    assert any("distributed->jnp" in t for t in tags), tags

@@ -74,10 +74,9 @@ def test_plan_validates_shapes():
         solver.plan(np.zeros((3, 4)))
     with pytest.raises(ValueError):
         solver.plan_batch([np.zeros((3, 4))])
-    # distributed batch plans are allowed now (ISSUE 3), but real-only
-    with pytest.raises(ValueError):
-        PermanentSolver(backend="distributed").plan_batch(
-            [np.eye(3, dtype=complex)])
+    # complex distributed batch plans are first-class now (ISSUE 4)
+    assert PermanentSolver(backend="distributed").plan_batch(
+        [np.eye(3, dtype=complex)]).is_complex
     assert PermanentSolver(backend="distributed").plan_batch(
         [np.eye(3)]).batched
 
@@ -262,17 +261,19 @@ def test_queue_result_forces_flush():
     np.testing.assert_allclose(req.result(), engine.permanent(A), rtol=1e-12)
 
 
-def test_queue_accepts_distributed_backend_rejects_complex():
-    # ISSUE 3 lifted the jnp|pallas-only guard: real submits queue and
-    # flush (downgrading to jnp without a mesh), complex fails fast
+def test_queue_accepts_distributed_backend_and_complex():
+    # ISSUE 3 lifted the jnp|pallas-only guard; ISSUE 4 the real-only one:
+    # complex submits queue and flush like any other request (downgrading
+    # to jnp without a mesh)
     solver = PermanentSolver(backend="distributed")
-    with pytest.raises(ValueError):
-        solver.submit(np.eye(5, dtype=complex))
-    assert solver.pending == 0, "rejected submits must not enqueue"
+    C = RNG.normal(size=(5, 5)) + 1j * RNG.normal(size=(5, 5))
+    creq = solver.submit(C)
+    assert solver.pending == 1
     A = RNG.uniform(-1, 1, (5, 5))
     req = solver.submit(A)
-    assert solver.pending == 1
     np.testing.assert_allclose(req.result(), engine.permanent(A), rtol=1e-12)
+    np.testing.assert_allclose(creq.result(), engine.permanent(C),
+                               rtol=1e-12)
 
 
 def test_queue_repeated_submatrices_hit_cache():
@@ -300,17 +301,19 @@ def test_sparse_route_returns_python_scalar():
     assert isinstance(vc, complex) and not isinstance(vc, np.complexfloating)
 
 
-def test_batch_complex_pallas_reports_downgrade():
+def test_batch_complex_pallas_runs_native_no_downgrade():
+    # ISSUE 4: complex buckets run the split-plane batch-grid kernel --
+    # no ``pallas->jnp`` downgrade tag on dense batch routes with n >= 4
     Cs = [RNG.normal(size=(6, 6)) + 1j * RNG.normal(size=(6, 6))
           for _ in range(3)]
     got, reports = engine.permanent_batch(Cs, backend="pallas",
                                           preprocess=False,
                                           return_report=True)
     ref = engine.permanent_batch(Cs, preprocess=False)
-    np.testing.assert_allclose(got, ref, rtol=1e-12)
+    np.testing.assert_allclose(got, ref, rtol=1e-9)
     tags = [t for r in reports for t in r.dispatch]
-    assert any("pallas->jnp" in t for t in tags), tags
-    assert all("dense_batch" in t for t in tags if "pallas" in t)
+    assert tags and not any("->" in t for t in tags), tags
+    assert all(t.startswith("dense_batch") for t in tags)
 
 
 def test_batch_real_pallas_does_not_tag_downgrade():
@@ -327,12 +330,13 @@ def test_batch_real_pallas_does_not_tag_downgrade():
 # ---------------------------------------------------------------------------
 
 def test_downgraded_bucket_caches_under_producing_backend():
-    # a complex bucket under pallas downgrades to jnp; before the fix its
-    # values were cached under the *configured* backend ("pallas"), so a
-    # jnp number could later satisfy a genuine pallas lookup
+    # a no-mesh bucket under distributed downgrades to jnp; its values
+    # must be cached under the *producing* backend ("jnp"), never the
+    # configured one, so a jnp number can never satisfy a genuine
+    # sharded-bucket lookup
     Cs = [RNG.normal(size=(6, 6)) + 1j * RNG.normal(size=(6, 6))
           for _ in range(3)]
-    solver = PermanentSolver(SolverConfig(backend="pallas",
+    solver = PermanentSolver(SolverConfig(backend="distributed",
                                           preprocess=False))
     solver.execute(solver.plan_batch(Cs))
     assert len(solver.cache._data) == 3
@@ -350,17 +354,56 @@ def test_downgraded_values_are_reusable_by_jnp_plans():
     Cs = [RNG.normal(size=(6, 6)) + 1j * RNG.normal(size=(6, 6))
           for _ in range(3)]
     shared = ResultCache(64)
-    plan_p = build_plan(Cs, SolverConfig(backend="pallas",
+    plan_d = build_plan(Cs, SolverConfig(backend="distributed",
                                          preprocess=False), batched=True)
-    totals_p, _, stats_p = execute_plan(plan_p, cache=shared)
-    assert stats_p.downgrades
+    totals_d, _, stats_d = execute_plan(plan_d, cache=shared)  # no mesh ctx
+    assert stats_d.downgrades
     plan_j = build_plan(Cs, SolverConfig(backend="jnp", preprocess=False),
                         batched=True)
     totals_j, _, stats_j = execute_plan(plan_j, cache=shared)
     assert stats_j.device_dispatches == 0, \
-        "jnp plan must be served from the downgraded pallas run's cache"
+        "jnp plan must be served from the downgraded distributed run's cache"
     assert stats_j.cache_hits == 3
-    np.testing.assert_allclose(totals_j, totals_p, rtol=0)
+    np.testing.assert_allclose(totals_j, totals_d, rtol=0)
+
+
+def test_cache_key_separates_real_and_zero_imag_complex_leaves():
+    # ISSUE 4 satellite: dtype is an explicit cache-key component -- a
+    # float64 leaf and a complex128 leaf with zero imaginary part are
+    # different computations (real engine vs split-plane engine) and must
+    # never share a cache entry
+    A = RNG.uniform(-1, 1, (6, 6))
+    solver = PermanentSolver(SolverConfig(preprocess=False))
+    vr = solver.execute(solver.plan_batch([A]))
+    vc = solver.execute(solver.plan_batch([A.astype(np.complex128)]))
+    np.testing.assert_allclose(np.real(vc), vr, rtol=1e-12)
+    dtypes = {k[5] for k in solver.cache._data}
+    assert dtypes == {"<f8", "<c16"}, dtypes
+    assert len(solver.cache._data) == 2, \
+        "real and zero-imag complex leaves must occupy distinct entries"
+    st = solver.stats()
+    assert st["cache"]["hits"] == 0, \
+        "the complex plan must not be served from the real plan's entry"
+    # and the raw key helper keeps them apart even for equal content hashes
+    kr = ResultCache.key("h", "dense", "dq_acc", "jnp", 64, "<f8")
+    kc = ResultCache.key("h", "dense", "dq_acc", "jnp", 64, "<c16")
+    assert kr != kc
+
+
+def test_complex_qq_caches_under_effective_precision():
+    # plan.precision is the effective one: complex qq stores under kahan,
+    # and a later explicit-kahan plan over the same matrices is a pure
+    # cache hit (identical numerics), while real qq entries stay separate
+    C = RNG.normal(size=(6, 6)) + 1j * RNG.normal(size=(6, 6))
+    solver = PermanentSolver(SolverConfig(precision="qq",
+                                          preprocess=False))
+    v_qq = solver.execute(solver.plan_batch([C]))
+    assert all(k[2] == "kahan" for k in solver.cache._data)
+    kah = PermanentSolver(SolverConfig(precision="kahan", preprocess=False))
+    kah.cache = solver.cache
+    v_k = kah.execute(kah.plan_batch([C]))
+    np.testing.assert_allclose(v_k, v_qq, rtol=0)
+    assert kah.stats()["cache"]["hits"] == 1
 
 
 def test_genuine_pallas_values_keep_their_own_cache_identity():
