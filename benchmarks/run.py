@@ -42,7 +42,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default="",
                     help="comma list: table3,table4,table5,fig7,batch,"
                          "solver_cache,batch_sharding,batch_complex,"
-                         "roofline")
+                         "batch_sparse,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="smaller n (CI-sized)")
     ap.add_argument("--check", action="store_true",
@@ -56,9 +56,10 @@ def main(argv=None) -> int:
     import jax
     jax.config.update("jax_enable_x64", True)
 
-    from . import (batch_complex, batch_sharding, batch_throughput,
-                   fig7_scaling, roofline_report, solver_cache,
-                   table3_precision, table4_dense, table5_sparse)
+    from . import (batch_complex, batch_sharding, batch_sparse,
+                   batch_throughput, fig7_scaling, roofline_report,
+                   solver_cache, table3_precision, table4_dense,
+                   table5_sparse)
 
     t0 = time.time()
     if not only or "batch" in only:
@@ -95,6 +96,18 @@ def main(argv=None) -> int:
         print_rows("batch_complex", rows)
         if args.check and not batch_complex.check(rows):
             print("# batch_complex gate RED -- complex pallas/sharded "
+                  "buckets below 0.9x jnp or values diverged")
+            return 1
+    if not only or "batch_sparse" in only:
+        # forced 8-device mesh in a subprocess, like batch_complex; fast
+        # mode keeps only the gated density
+        rows = batch_sparse.run(
+            densities=batch_sparse.DENSITIES[-1:] if args.fast
+            else batch_sparse.DENSITIES,
+            repeats=3 if args.fast else 5)
+        print_rows("batch_sparse", rows)
+        if args.check and not batch_sparse.check(rows):
+            print("# batch_sparse gate RED -- sparse pallas/sharded "
                   "buckets below 0.9x jnp or values diverged")
             return 1
     if not only or "table3" in only:

@@ -32,7 +32,10 @@ as the jnp backend (``ryser.batched_values_complex`` /
 are bit-identical to the local engines per precision mode and shard
 shape; the step-space split carries complex through its twofloat psums
 (TwoSum is componentwise-exact under complex addition) and, under
-``backend="pallas"``, runs the split-plane kernel per device.
+``backend="pallas"``, runs the split-plane kernel per device.  The
+sparse batch entry accepts ``backend="pallas"`` too: each device
+launches the padded-CCS SpaRyser kernel on its sub-stack (1e-9 kernel
+tolerance vs jnp; the default jnp body keeps the bitwise contract).
 
 APIs:
   ``permanent_on_mesh``     one-shot functional API (psum reduction)
@@ -467,9 +470,32 @@ def _sparse_batch_mesh_fn_complex(mesh: Mesh, T: int, C: int,
                              check_vma=False))
 
 
+@lru_cache(maxsize=None)
+def _sparse_batch_mesh_fn_pallas(mesh: Mesh, precision: str):
+    """Per-device SpaRyser *kernel* over the local sub-stack: the sparse
+    analogue of ``permanent_on_mesh``'s ``backend="pallas"`` -- each
+    device launches the (batch, block)-grid padded-CCS kernel on the
+    matrices it owns (``kernels.ops.sparse_batched_values_pallas``; the
+    traced body splits complex planes itself, so one mesh program serves
+    real and complex buckets alike).  Kernel numerics, not the jnp trace:
+    values match the single-device pallas backend, and the jnp path to
+    the usual 1e-9 kernel tolerance rather than bitwise.
+    """
+    from ..kernels.ops import sparse_batched_values_pallas
+    axes = tuple(mesh.axis_names)
+
+    def body(A_local, rows_local, vals_local):
+        return sparse_batched_values_pallas(A_local, rows_local,
+                                            vals_local, precision=precision)
+
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(P_(axes),) * 3,
+                             out_specs=P_(axes), check_vma=False))
+
+
 def sparse_batch_permanents_on_mesh(sps: list, mesh: Mesh, *,
                                     precision: str = "dq_acc",
-                                    num_chunks: int = 4096) -> np.ndarray:
+                                    num_chunks: int = 4096,
+                                    backend: str = "jnp") -> np.ndarray:
     """Sparse-bucket analogue of :func:`batch_permanents_on_mesh`.
 
     The bucket is packed once on the host (``sparyser.pack_padded_ccs``,
@@ -479,12 +505,20 @@ def sparse_batch_permanents_on_mesh(sps: list, mesh: Mesh, *,
     axis.  Bit-identical to ``sparyser.perm_sparyser_batched`` -- complex
     buckets included (split re/im planes through
     ``sparyser.sparse_batched_values_complex``).
+
+    ``backend="pallas"`` runs the SpaRyser *kernel* per device instead of
+    the jnp trace (real or complex, one body) -- the last ``--mesh``
+    route that used to have no kernel option.  Kernel values agree with
+    the jnp path to the established 1e-9 pallas tolerance (the bitwise
+    contract is jnp<->distributed's, not the kernel's).
     """
     from .sparyser import pack_padded_ccs, perm_sparyser_chunked
     assert sps, "empty bucket"
     n = sps[0].n
     if n <= 2:
-        return np.array([perm_sparyser_chunked(sp) for sp in sps])
+        return np.array([perm_sparyser_chunked(sp, num_chunks=num_chunks,
+                                               precision=precision)
+                         for sp in sps])
     A_stack, rows_stack, vals_stack = pack_padded_ccs(sps)
     B = A_stack.shape[0]
     pad = _batch_pad(B, mesh)
@@ -500,6 +534,12 @@ def sparse_batch_permanents_on_mesh(sps: list, mesh: Mesh, *,
     axes = tuple(mesh.axis_names)
     T, C, _ = chunk_geometry(n, num_chunks)
     shard = NamedSharding(mesh, P_(axes))
+    if backend == "pallas":
+        vals = _sparse_batch_mesh_fn_pallas(mesh, precision)(
+            jax.device_put(A_stack, shard),
+            jax.device_put(rows_stack, shard),
+            jax.device_put(vals_stack, shard))
+        return np.asarray(vals)[:B]
     if np.iscomplexobj(vals_stack):
         vr, vi = _sparse_batch_mesh_fn_complex(
             mesh, T, C, complex_precision(precision))(

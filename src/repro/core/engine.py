@@ -94,7 +94,10 @@ def permanent_batch(As, *, precision: str = "dq_acc", preprocess: bool = True,
         are first-class on both -- split-plane engine / split-plane
         kernel -- with no downgrade;
       * sparse buckets run ``sparyser.perm_sparyser_batched`` (padded-CCS
-        stacks, one jit per (n, maxdeg) bucket);
+        stacks, one jit per (n, maxdeg) bucket) or, under
+        ``backend="pallas"`` with n >= 4, the batch-grid SpaRyser kernel
+        (``kernels.ops.permanent_pallas_sparse_batched``) -- no more
+        ``pallas->jnp`` sparse downgrade;
       * ragged stragglers -- buckets holding a single leaf -- fall back to
         the scalar per-leaf path, so mixed-size inputs still work.
 

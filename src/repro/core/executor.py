@@ -113,10 +113,7 @@ class Backend:
 
     def sparse(self, sp, *, precision: str, num_chunks: int,
                ctx: Any | None = None) -> complex | float:
-        # Alg. 4's SpaRyser has no scalar kernel/mesh variant yet: every
-        # backend shares the chunked jnp path (normalized to a scalar).
-        return _scalar(S.perm_sparyser_chunked(sp, num_chunks=num_chunks,
-                                               precision=precision))
+        raise NotImplementedError
 
     def dense_batch(self, stack: np.ndarray, *, precision: str,
                     num_chunks: int,
@@ -132,10 +129,10 @@ class Backend:
         """Registry name of the strategy whose numerics produce this
         leaf's value.  Cache keys use THIS name, not the configured
         backend, so downgraded (jnp-computed) values are stored -- and
-        found -- under ``jnp``.  (No ``is_complex`` parameter since the
-        split-plane refactor: complex is first-class on every strategy.)"""
-        if route == ROUTE_SPARSE and not batched:
-            return "jnp"             # shared scalar SpaRyser path
+        found -- under ``jnp``.  Produced-by logic is uniform across the
+        dense and sparse routes (no sparse hardcode since the SpaRyser
+        kernel landed: sparse leaves are kernel-served too); strategies
+        that fall back for some shapes override this accordingly."""
         return self.name
 
 
@@ -147,6 +144,10 @@ class JnpBackend(Backend):
     def dense(self, M, *, precision, num_chunks, ctx=None):
         return _scalar(R.perm_ryser_chunked(M, num_chunks=num_chunks,
                                             precision=precision))
+
+    def sparse(self, sp, *, precision, num_chunks, ctx=None):
+        return _scalar(S.perm_sparyser_chunked(sp, num_chunks=num_chunks,
+                                               precision=precision))
 
     def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
         return np.asarray(R.perm_ryser_batched(stack, num_chunks=num_chunks,
@@ -160,10 +161,12 @@ class JnpBackend(Backend):
 class PallasBackend(JnpBackend):
     """TPU kernel (interpret-mode on CPU); real OR complex, n >= 4.
 
-    Complex leaves run the split re/im plane kernels (same batch grid and
-    geometry as the real ones); only tiny matrices fall back to the jnp
-    engines -- scalar falls back silently (legacy contract), batched
-    with a ``pallas->jnp`` downgrade tag emitted by the dispatcher.
+    Dense AND sparse leaves run the kernels (sparse: the padded-CCS
+    SpaRyser kernels in ``kernels.ryser_sparse``, same batch grid and
+    window schedule); complex leaves run the split re/im plane variants.
+    Only tiny matrices fall back to the jnp engines -- scalar dense falls
+    back silently (legacy contract), scalar sparse and every batch with a
+    ``pallas->jnp`` downgrade tag emitted by the dispatcher.
     """
 
     name = "pallas"
@@ -181,6 +184,14 @@ class PallasBackend(JnpBackend):
             return _scalar(K.permanent_pallas(M, precision=precision))
         return super().dense(M, precision=precision, num_chunks=num_chunks)
 
+    def sparse(self, sp, *, precision, num_chunks, ctx=None):
+        if self._kernel_ok(sp.n):
+            from ..kernels import ops as K
+            return _scalar(K.permanent_pallas_sparse(sp,
+                                                     precision=precision))
+        return super().sparse(sp, precision=precision,
+                              num_chunks=num_chunks)
+
     def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
         if self._supported(stack):
             from ..kernels import ops as K
@@ -189,12 +200,16 @@ class PallasBackend(JnpBackend):
         return None                  # dispatcher falls back + tags downgrade
 
     def sparse_batch(self, sps, *, precision, num_chunks, ctx=None):
-        return None                  # no sparse kernel: jnp fallback, tagged
+        if self._kernel_ok(sps[0].n):
+            from ..kernels import ops as K
+            return np.asarray(K.permanent_pallas_sparse_batched(
+                sps, precision=precision))
+        return None                  # tiny bucket: jnp fallback, tagged
 
     def value_backend(self, route, n, *, batched, ctx=None):
-        if route == ROUTE_DENSE and self._kernel_ok(n):
+        if self._kernel_ok(n):       # dense and sparse kernels alike
             return self.name
-        return "jnp"                 # silent scalar fallback / tagged batch
+        return "jnp"                 # tiny-n fallback to the jnp engines
 
 
 class DistributedBatchBackend(JnpBackend):
@@ -339,7 +354,18 @@ def _run_leaf(leaf: LeafTask, plan: ExecutionPlan, backend: Backend,
     n = leaf.n
     cfg = plan.config
     if leaf.route == ROUTE_SPARSE:
-        report.dispatch.append(f"sparse(n={n})")
+        # scalar sparse tags carry backend attribution like every batch
+        # tag: ``sparse(n=..,<backend>)``, with a ``cfg->produced``
+        # downgrade suffix when another strategy's numerics serve the
+        # leaf -- so --plan-json reports where sparse values came from
+        produced = backend.value_backend(ROUTE_SPARSE, n, batched=False,
+                                         ctx=ctx)
+        if produced == cfg.backend:
+            tag = f"sparse(n={n},{produced})"
+        else:
+            tag = f"sparse(n={n},{cfg.backend}->{produced})"
+            stats.downgrades.append(tag)
+        report.dispatch.append(tag)
         sp = S.SparseMatrix.from_dense(leaf.matrix)
         val = backend.sparse(sp, precision=plan.precision,
                              num_chunks=cfg.num_chunks, ctx=ctx)

@@ -417,7 +417,12 @@ def perm_sparyser_batched(sps: list[SparseMatrix], num_chunks: int = 4096,
     n = sps[0].n
     assert all(sp.n == n for sp in sps), "bucket must be same-size"
     if n <= 2:
-        return np.array([perm_sparyser_chunked(sp) for sp in sps])
+        # pass the caller's precision/num_chunks through to the scalar
+        # path -- dropping them silently would serve tiny buckets at the
+        # default config whatever the plan asked for
+        return np.array([perm_sparyser_chunked(sp, num_chunks=num_chunks,
+                                               precision=precision)
+                         for sp in sps])
     T, C, _ = chunk_geometry(n, num_chunks)
     A_stack, rows_stack, vals_stack = pack_padded_ccs(sps)
     if np.iscomplexobj(vals_stack):

@@ -7,10 +7,15 @@ through one dispatch helper (``_pallas_values``): geometry, padding, base
 vectors and the twofloat cross-block epilogue are computed once, and only
 the kernel entry differs -- real matrices run ``ryser_pallas``, complex
 matrices run the split re/im plane kernels in ``ryser_complex`` (same
-geometry, same window schedule).  ``block_partials_pallas`` exposes the raw
-per-block partial sums for the distributed runtime (each device runs the
-kernel over its own chunk range; the cross-device reduction is a psum,
-exactly like the jnp engine).
+geometry, same window schedule).  The sparse route has the same shape:
+``permanent_pallas_sparse(sp)`` / ``permanent_pallas_sparse_batched(sps)``
+drive the padded-CCS SpaRyser kernels (``ryser_sparse``) through the
+sparse arm of the helper (``_pallas_sparse_values``), sharing
+``kernel_geometry`` and ``kernel_reduce`` with the dense arm.
+``block_partials_pallas`` exposes the raw per-block partial sums for the
+distributed runtime (each device runs the kernel over its own chunk
+range; the cross-device reduction is a psum, exactly like the jnp
+engine).
 
 Precision passes through untouched on every route: the kernels implement
 ``dd``/``dq_fast``/``dq_acc``/``kahan`` accumulation and run ``qq`` (no
@@ -33,6 +38,8 @@ from .ryser_pallas import (kernel_geometry, ryser_pallas_call,
                            ryser_pallas_call_batched)
 
 __all__ = ["permanent_pallas", "permanent_pallas_batched",
+           "permanent_pallas_sparse", "permanent_pallas_sparse_batched",
+           "sparse_batched_values_pallas",
            "block_partials_pallas", "kernel_reduce", "pad_matrix",
            "pad_base_vector", "split_matrix_planes", "split_base_planes"]
 
@@ -113,59 +120,42 @@ def block_partials_pallas(A, *, dev_chunk_base: int = 0,
 
 
 # ---------------------------------------------------------------------------
-# The real/complex x scalar/batched dispatch helper
+# The real/complex x scalar/batched dispatch helpers
 # ---------------------------------------------------------------------------
+# Shared scaffolding: padding + NW base vectors on the way in, the
+# twofloat ``kernel_reduce`` epilogue on the way out -- one copy serving
+# both the dense and the sparse arm, which differ only in kernel entry
+# points (and the extra padded-CCS operands the sparse kernels take).
 
-def _pallas_values(As, *, batched: bool, precision: str, mode: str,
-                   lanes: int, steps_per_chunk: int, window: int,
-                   interpret: bool):
-    """One traced body behind every public pallas entry.
-
-    ``As`` is (n, n) (``batched=False``) or (B, n, n); real input launches
-    the real kernel, complex input the split-plane kernels -- everything
-    else (geometry, padding, NW base vectors, the twofloat epilogue) is
-    shared.
-    """
-    n = As.shape[-1]
-    TB, C, Wu, blocks = kernel_geometry(
-        n, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window)
-
-    if not jnp.iscomplexobj(As):
-        pad = jax.vmap(pad_matrix) if batched else pad_matrix
-        A_pads = pad(As)
-        n_pad = A_pads.shape[-1]
-        xbs = (jax.vmap(nw_base_vector) if batched else nw_base_vector)(As)
-        pad_xb = lambda x: pad_base_vector(x, n_pad)
-        xb_pads = (jax.vmap(pad_xb) if batched else pad_xb)(xbs)[..., None]
-        if batched:
-            out = ryser_pallas_call_batched(
-                A_pads, xb_pads, n=n, TB=TB, C=C, Wu=Wu, num_blocks=blocks,
-                precision=precision, mode=mode, interpret=interpret)
-        else:
-            out = ryser_pallas_call(
-                A_pads, xb_pads, 0, n=n, TB=TB, C=C, Wu=Wu,
-                num_blocks=blocks, precision=precision, mode=mode,
-                interpret=interpret)[None]
-        p0 = jnp.prod(xbs, axis=-1)
-        vals = kernel_reduce(out[:, :, 0], out[:, :, 1], p0, n, axis=1) \
-            if batched else \
-            kernel_reduce(out[0, :, 0], out[0, :, 1], p0, n)
-        return vals
-
-    from .ryser_complex import (ryser_pallas_call_complex,
-                                ryser_pallas_call_complex_batched)
-    Ar_pads, Ai_pads = split_matrix_planes(As)
-    n_pad = Ar_pads.shape[-1]
+def _prep_real(As, batched: bool):
+    """(A_pads, xb_pads, xbs) for a real matrix or stack."""
+    pad = jax.vmap(pad_matrix) if batched else pad_matrix
+    A_pads = pad(As)
+    n_pad = A_pads.shape[-1]
     xbs = (jax.vmap(nw_base_vector) if batched else nw_base_vector)(As)
-    xbr, xbi = split_base_planes(xbs, n_pad)
-    if batched:
-        out = ryser_pallas_call_complex_batched(
-            Ar_pads, Ai_pads, xbr, xbi, n=n, TB=TB, C=C, Wu=Wu,
-            num_blocks=blocks, precision=precision, interpret=interpret)
-    else:
-        out = ryser_pallas_call_complex(
-            Ar_pads, Ai_pads, xbr, xbi, 0, n=n, TB=TB, C=C, Wu=Wu,
-            num_blocks=blocks, precision=precision, interpret=interpret)[None]
+    pad_xb = lambda x: pad_base_vector(x, n_pad)
+    xb_pads = (jax.vmap(pad_xb) if batched else pad_xb)(xbs)[..., None]
+    return A_pads, xb_pads, xbs
+
+
+def _prep_complex(As, batched: bool):
+    """Split (re, im) planes + padded base-vector planes for complex."""
+    Ar_pads, Ai_pads = split_matrix_planes(As)
+    xbs = (jax.vmap(nw_base_vector) if batched else nw_base_vector)(As)
+    xbr, xbi = split_base_planes(xbs, Ar_pads.shape[-1])
+    return Ar_pads, Ai_pads, xbr, xbi, xbs
+
+
+def _reduce_real(out, xbs, n: int, batched: bool):
+    """Cross-block epilogue over (B, blocks, 2) real (hi, lo) partials."""
+    p0 = jnp.prod(xbs, axis=-1)
+    return kernel_reduce(out[:, :, 0], out[:, :, 1], p0, n, axis=1) \
+        if batched else \
+        kernel_reduce(out[0, :, 0], out[0, :, 1], p0, n)
+
+
+def _reduce_complex(out, xbs, n: int, batched: bool):
+    """Per-plane epilogue over (B, blocks, 4) split-plane partials."""
     p0 = jnp.prod(xbs, axis=-1)
     if batched:
         re = kernel_reduce(out[:, :, 0], out[:, :, 1], jnp.real(p0), n,
@@ -178,6 +168,47 @@ def _pallas_values(As, *, batched: bool, precision: str, mode: str,
     return re + 1j * im
 
 
+def _pallas_values(As, *, batched: bool, precision: str, mode: str,
+                   lanes: int, steps_per_chunk: int, window: int,
+                   interpret: bool):
+    """One traced body behind every public dense pallas entry.
+
+    ``As`` is (n, n) (``batched=False``) or (B, n, n); real input launches
+    the real kernel, complex input the split-plane kernels -- everything
+    else (geometry, padding, NW base vectors, the twofloat epilogue) is
+    shared.
+    """
+    n = As.shape[-1]
+    TB, C, Wu, blocks = kernel_geometry(
+        n, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window)
+
+    if not jnp.iscomplexobj(As):
+        A_pads, xb_pads, xbs = _prep_real(As, batched)
+        if batched:
+            out = ryser_pallas_call_batched(
+                A_pads, xb_pads, n=n, TB=TB, C=C, Wu=Wu, num_blocks=blocks,
+                precision=precision, mode=mode, interpret=interpret)
+        else:
+            out = ryser_pallas_call(
+                A_pads, xb_pads, 0, n=n, TB=TB, C=C, Wu=Wu,
+                num_blocks=blocks, precision=precision, mode=mode,
+                interpret=interpret)[None]
+        return _reduce_real(out, xbs, n, batched)
+
+    from .ryser_complex import (ryser_pallas_call_complex,
+                                ryser_pallas_call_complex_batched)
+    Ar_pads, Ai_pads, xbr, xbi, xbs = _prep_complex(As, batched)
+    if batched:
+        out = ryser_pallas_call_complex_batched(
+            Ar_pads, Ai_pads, xbr, xbi, n=n, TB=TB, C=C, Wu=Wu,
+            num_blocks=blocks, precision=precision, interpret=interpret)
+    else:
+        out = ryser_pallas_call_complex(
+            Ar_pads, Ai_pads, xbr, xbi, 0, n=n, TB=TB, C=C, Wu=Wu,
+            num_blocks=blocks, precision=precision, interpret=interpret)[None]
+    return _reduce_complex(out, xbs, n, batched)
+
+
 @partial(jax.jit, static_argnames=("batched", "precision", "mode", "lanes",
                                    "steps_per_chunk", "window", "interpret"))
 def _pallas_values_jit(As, batched, precision, mode, lanes, steps_per_chunk,
@@ -186,6 +217,93 @@ def _pallas_values_jit(As, batched, precision, mode, lanes, steps_per_chunk,
                           mode=mode, lanes=lanes,
                           steps_per_chunk=steps_per_chunk, window=window,
                           interpret=interpret)
+
+
+def _pallas_sparse_values(A_stack, rows_stack, vals_stack, *, batched: bool,
+                          precision: str, lanes: int, steps_per_chunk: int,
+                          window: int, interpret: bool):
+    """Sparse arm of the dispatch helper (SpaRyser on Pallas).
+
+    Mirrors ``_pallas_values`` over the padded-CCS layout of
+    ``sparyser.pack_padded_ccs``: ``A_stack`` is (n, n) / (B, n, n) (the
+    dense form, used only for the init matmul, NW base vectors and the
+    boundary one-hot columns -- like the jnp SpaRyser engine),
+    ``rows_stack``/``vals_stack`` are the (n, maxdeg) / (B, n, maxdeg)
+    padded column arrays driving the Gray-code updates.  Geometry,
+    padding and the twofloat epilogue (``kernel_reduce``) are shared with
+    the dense arm; real input launches the real sparse kernel, complex
+    input the split-plane ones.  The trace is specialized per
+    (n, maxdeg) -- the batched analogue of the paper's per-pattern kernel
+    generation, amortized over the bucket.
+    """
+    n = A_stack.shape[-1]
+    TB, C, Wu, blocks = kernel_geometry(
+        n, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window)
+    from .ryser_sparse import (ryser_sparse_pallas_call,
+                               ryser_sparse_pallas_call_batched,
+                               ryser_sparse_pallas_call_complex,
+                               ryser_sparse_pallas_call_complex_batched)
+
+    rows_stack = jnp.asarray(rows_stack)
+    if not jnp.iscomplexobj(vals_stack):
+        A_pads, xb_pads, xbs = _prep_real(A_stack, batched)
+        if batched:
+            out = ryser_sparse_pallas_call_batched(
+                A_pads, rows_stack, vals_stack, xb_pads, n=n, TB=TB, C=C,
+                Wu=Wu, num_blocks=blocks, precision=precision,
+                interpret=interpret)
+        else:
+            out = ryser_sparse_pallas_call(
+                A_pads, rows_stack, vals_stack, xb_pads, 0, n=n, TB=TB,
+                C=C, Wu=Wu, num_blocks=blocks, precision=precision,
+                interpret=interpret)[None]
+        return _reduce_real(out, xbs, n, batched)
+
+    Ar_pads, Ai_pads, xbr, xbi, xbs = _prep_complex(A_stack, batched)
+    vr = jnp.real(vals_stack)
+    vi = jnp.imag(vals_stack)
+    if batched:
+        out = ryser_sparse_pallas_call_complex_batched(
+            Ar_pads, Ai_pads, rows_stack, vr, vi, xbr, xbi, n=n, TB=TB,
+            C=C, Wu=Wu, num_blocks=blocks, precision=precision,
+            interpret=interpret)
+    else:
+        out = ryser_sparse_pallas_call_complex(
+            Ar_pads, Ai_pads, rows_stack, vr, vi, xbr, xbi, 0, n=n, TB=TB,
+            C=C, Wu=Wu, num_blocks=blocks, precision=precision,
+            interpret=interpret)[None]
+    return _reduce_complex(out, xbs, n, batched)
+
+
+@partial(jax.jit, static_argnames=("batched", "precision", "lanes",
+                                   "steps_per_chunk", "window", "interpret"))
+def _pallas_sparse_values_jit(A_stack, rows_stack, vals_stack, batched,
+                              precision, lanes, steps_per_chunk, window,
+                              interpret):
+    return _pallas_sparse_values(A_stack, rows_stack, vals_stack,
+                                 batched=batched, precision=precision,
+                                 lanes=lanes,
+                                 steps_per_chunk=steps_per_chunk,
+                                 window=window, interpret=interpret)
+
+
+def sparse_batched_values_pallas(A_stack, rows_stack, vals_stack, *,
+                                 precision: str = "dq_acc",
+                                 lanes: int = 128,
+                                 steps_per_chunk: int = 64,
+                                 window: int = 16, interpret: bool = True):
+    """Traced (B,) sparse kernel values of a packed padded-CCS stack.
+
+    The un-jitted traced body behind ``permanent_pallas_sparse_batched``,
+    exposed so ``distributed.sparse_batch_permanents_on_mesh`` can run it
+    per device under ``shard_map`` (``backend="pallas"``) -- the sparse
+    analogue of the dense kernels' traced-chunk-base reuse.
+    """
+    return _pallas_sparse_values(A_stack, rows_stack, vals_stack,
+                                 batched=True, precision=precision,
+                                 lanes=lanes,
+                                 steps_per_chunk=steps_per_chunk,
+                                 window=window, interpret=interpret)
 
 
 def permanent_pallas(A, *, precision: str = "dq_acc", mode: str = "baseline",
@@ -233,3 +351,55 @@ def permanent_pallas_batched(As, *, precision: str = "dq_acc",
         raise ValueError(f"batch grid supports baseline|batched, got {mode}")
     return _pallas_values_jit(As, True, precision, mode, lanes,
                               steps_per_chunk, window, interpret)
+
+
+def permanent_pallas_sparse(sp, *, precision: str = "dq_acc",
+                            lanes: int = 128, steps_per_chunk: int = 64,
+                            window: int = 16, interpret: bool = True):
+    """perm of one ``sparyser.SparseMatrix`` via the SpaRyser kernel.
+
+    The scalar sparse entry the executor's pallas backend dispatches to:
+    the matrix's padded CCS columns drive the Gray-code updates, the
+    dense form serves only the init matmul / base vector / boundary
+    one-hots.  Complex matrices run the split re/im plane sparse kernel.
+    """
+    n = sp.n
+    A = jnp.asarray(sp.to_dense())
+    if n == 1:
+        return A[0, 0]
+    if n == 2:
+        return A[0, 0] * A[1, 1] + A[0, 1] * A[1, 0]
+    rows, vals = sp.padded_columns()
+    return _pallas_sparse_values_jit(A, jnp.asarray(rows),
+                                     jnp.asarray(vals), False, precision,
+                                     lanes, steps_per_chunk, window,
+                                     interpret)
+
+
+def permanent_pallas_sparse_batched(sps, *, precision: str = "dq_acc",
+                                    lanes: int = 128,
+                                    steps_per_chunk: int = 64,
+                                    window: int = 16,
+                                    interpret: bool = True):
+    """perms of a same-size ``SparseMatrix`` bucket via ONE (batch, block)
+    grid SpaRyser kernel launch.
+
+    The bucket is packed once on the host (``sparyser.pack_padded_ccs``,
+    bucket-wide maxdeg; the extra padding scatters into the dummy row and
+    never perturbs numerics) and a single ``pallas_call`` covers every
+    matrix's full 2^{n-1} step space -- the sparse analogue of
+    ``permanent_pallas_batched``.  Complex buckets launch the split-plane
+    sparse kernel with the same grid and geometry.
+    """
+    from ..core.sparyser import pack_padded_ccs
+    assert sps, "empty bucket"
+    n = sps[0].n
+    if n <= 2:
+        return jnp.stack([jnp.asarray(permanent_pallas_sparse(
+            sp, precision=precision)) for sp in sps])
+    A_stack, rows_stack, vals_stack = pack_padded_ccs(sps)
+    return _pallas_sparse_values_jit(jnp.asarray(A_stack),
+                                     jnp.asarray(rows_stack),
+                                     jnp.asarray(vals_stack), True,
+                                     precision, lanes, steps_per_chunk,
+                                     window, interpret)

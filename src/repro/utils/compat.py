@@ -1,22 +1,19 @@
 """JAX cross-version compatibility shims.
 
 The repo targets the modern JAX API surface (``jax.shard_map``, varying
-manual axes on ``ShapeDtypeStruct``) and prefers the native symbols
-whenever the installed JAX provides them; the shims below exist only as
-fallbacks for older releases (ROADMAP upstream-facing item: the fallback
-is self-contained and drops out once the minimum supported JAX has
-``jax.shard_map``).  Every ``shard_map`` call site in the repo goes
-through :func:`shard_map` so the choice is made in exactly one place --
-and made ONCE, at import time, not per call.
-
-Resolution order for ``shard_map``:
-
-1. ``jax.shard_map`` (native, modern releases) -- used as-is;
-2. ``jax.experimental.shard_map.shard_map`` (0.4.x era) -- the
-   replication-check kwarg is adapted by *inspecting the signature*
-   (``check_vma`` was named ``check_rep`` before the rep-typing system
-   became vma-typing), so intermediate releases that renamed it under
-   either module path all work.
+manual axes on ``ShapeDtypeStruct``) and resolves the native symbols ONCE
+at import time, never per call.  The dual-path signature-sniffing layer
+that used to probe ``check_vma``/``check_rep`` under every module path is
+gone (ROADMAP upstream-facing item): resolution is a single two-way
+branch -- ``jax.shard_map`` when it exists (one signature probe picks the
+check kwarg: releases that promoted the symbol before the
+``check_rep -> check_vma`` rename still take the old name), else
+``jax.experimental.shard_map`` with its ``check_rep`` kwarg (same
+semantics: disable the per-output replication/vma typing check), covering
+the still-supported 0.4.x line.  That fallback CANNOT be dropped yet: the
+CI floor pins ``jax>=0.4.30,<0.5``, and no 0.4.x release ever shipped the
+native symbol -- delete the ``else`` branch (and this paragraph) when the
+floor moves to a JAX with ``jax.shard_map``.
 
 Exports:
 
@@ -39,46 +36,25 @@ __all__ = ["shard_map", "shape_dtype_struct", "HAS_NATIVE_SHARD_MAP"]
 
 HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
 
-
-def _resolve_shard_map():
-    """Pick the shard_map implementation and its check-kwarg name once."""
-    if HAS_NATIVE_SHARD_MAP:
-        impl = jax.shard_map
-    else:
-        from jax.experimental.shard_map import shard_map as impl
+if HAS_NATIVE_SHARD_MAP:
+    _SHARD_MAP_IMPL = jax.shard_map
+    # the symbol went top-level before the check_rep -> check_vma rename:
+    # probe the native signature once rather than assume the modern name
     try:
-        params = inspect.signature(impl).parameters
-    except (TypeError, ValueError):      # C-level / wrapped callables:
-        params = None                    # assume the era's kwarg below
-    if params is None:
-        # signature unknown -- every call site here passes check_vma=False
-        # and NEEDS the flag forwarded, so assume the name that matches
-        # the resolved implementation's era rather than dropping it
-        check_kw = "check_vma" if HAS_NATIVE_SHARD_MAP else "check_rep"
-    elif "check_vma" in params:
-        check_kw = "check_vma"
-    elif "check_rep" in params:
-        check_kw = "check_rep"
-    else:                                # future JAX: flag dropped entirely
-        check_kw = None
-    return impl, check_kw
-
-
-_SHARD_MAP_IMPL, _CHECK_KW = _resolve_shard_map()
+        _CHECK_KW = "check_vma" if "check_vma" in inspect.signature(
+            _SHARD_MAP_IMPL).parameters else "check_rep"
+    except (TypeError, ValueError):  # unsignaturable wrapper: modern kwarg
+        _CHECK_KW = "check_vma"
+else:  # JAX 0.4.x (the CI floor): pre-vma-typing era, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _SHARD_MAP_IMPL
+    _CHECK_KW = "check_rep"
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
-    """Version-portable ``shard_map``.
-
-    Mirrors the modern ``jax.shard_map`` keyword API; ``check_vma``
-    travels under whatever name the resolved implementation accepts
-    (``check_rep`` on 0.4.x -- same semantics: disable the per-output
-    replication/vma typing check) and is dropped if it accepts neither.
-    """
-    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
-    if _CHECK_KW is not None:
-        kwargs[_CHECK_KW] = check_vma
-    return _SHARD_MAP_IMPL(f, **kwargs)
+    """Version-portable ``shard_map`` mirroring the modern keyword API;
+    ``check_vma`` travels as ``check_rep`` on the 0.4.x fallback."""
+    return _SHARD_MAP_IMPL(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **{_CHECK_KW: check_vma})
 
 
 def shape_dtype_struct(shape, dtype, vma=None):

@@ -1,16 +1,51 @@
-"""SparseMatrix storage, SpaRyser engine, and the Alg.-4 dispatcher."""
+"""SparseMatrix storage, SpaRyser engine (jnp + Pallas), Alg.-4 dispatch.
+
+ISSUE 5 additions: the padded-CCS SpaRyser *kernel* (kernels/ryser_sparse)
+against the oracle and the jnp engine per precision mode, the dense/sparse
+cross-parity suite (the same matrix through both routes), the scalar
+sparse dispatch-tag / tiny-bucket passthrough regressions, and the
+8-device ragged sparse bucket subprocess (mesh jnp bitwise, mesh pallas
+kernel 1e-9).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import pytest
 
-from repro.core import engine, oracle
-from repro.core.sparyser import SparseMatrix, perm_sparyser_chunked
+from repro.core import engine, oracle, ryser, sparyser
+from repro.core.sparyser import (SparseMatrix, perm_sparyser_batched,
+                                 perm_sparyser_chunked)
+from repro.kernels import ops
 
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 RNG = np.random.default_rng(23)
+
+PRECISIONS = ("dd", "dq_fast", "dq_acc", "qq", "kahan")
+# small kernel geometry: full coverage of the step space, CI-sized blocks
+KGEO = dict(lanes=8, steps_per_chunk=8, window=4)
 
 
 def _rand_sparse(n, density, rng=RNG):
     A = rng.uniform(0.5, 1.5, (n, n)) * (rng.uniform(0, 1, (n, n)) < density)
+    return A
+
+
+def _rand_sparse_ns(n, density, rng=RNG, cx=False):
+    """Sparse test matrix with a guaranteed nonzero permanent (unit-ish
+    diagonal kept dense) and guaranteed sub-switch density, so the
+    Alg.-4 router always takes the sparse route regardless of RNG
+    history -- relative-error checks need a live reference."""
+    while True:
+        mask = (rng.uniform(0, 1, (n, n)) < density) | np.eye(n, dtype=bool)
+        if mask.sum() / (n * n) < 0.29:
+            break
+    A = rng.uniform(0.5, 1.5, (n, n)) * mask
+    if cx:
+        A = A + 1j * rng.normal(size=(n, n)) * mask
     return A
 
 
@@ -106,3 +141,217 @@ def test_engine_identity_and_permutation():
     assert round(engine.permanent(np.eye(8))) == 1
     P = np.eye(8)[RNG.permutation(8)]
     assert round(engine.permanent(P)) == 1
+
+
+# ---------------------------------------------------------- sparse kernel
+@pytest.mark.parametrize("n,density", [(4, 0.5), (6, 0.4), (8, 0.25),
+                                       (11, 0.25), (12, 0.5)])
+def test_sparse_kernel_matches_exact(n, density):
+    A = _rand_sparse(n, density)
+    want = oracle.perm_ryser_exact(A)
+    got = float(np.asarray(ops.permanent_pallas_sparse(
+        SparseMatrix.from_dense(A), **KGEO)))
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-12)
+
+
+def test_sparse_kernel_complex_matches_exact():
+    A = _rand_sparse_ns(8, 0.3, cx=True)
+    want = oracle.perm_ryser_exact(A)
+    got = complex(np.asarray(ops.permanent_pallas_sparse(
+        SparseMatrix.from_dense(A), **KGEO)))
+    assert abs(got - want) / abs(want) < 1e-9
+
+
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_sparse_kernel_batched_matches_jnp(precision):
+    sps = [SparseMatrix.from_dense(_rand_sparse_ns(9, 0.2))
+           for _ in range(4)]
+    ref = np.asarray(perm_sparyser_batched(sps, precision=precision))
+    got = np.asarray(ops.permanent_pallas_sparse_batched(
+        sps, precision=precision, **KGEO))
+    np.testing.assert_allclose(got, ref, rtol=1e-9)
+
+
+def test_sparse_kernel_batched_complex_matches_jnp():
+    sps = [SparseMatrix.from_dense(_rand_sparse_ns(8, 0.25, cx=True))
+           for _ in range(3)]
+    ref = np.asarray(perm_sparyser_batched(sps))
+    got = np.asarray(ops.permanent_pallas_sparse_batched(sps, **KGEO))
+    assert np.max(np.abs(got - ref) / np.abs(ref)) < 1e-9
+
+
+def test_sparse_kernel_default_geometry():
+    # the executor's default launch parameters, not just the tiny CI ones
+    A = _rand_sparse_ns(12, 0.3)
+    got = float(np.asarray(ops.permanent_pallas_sparse(
+        SparseMatrix.from_dense(A))))
+    np.testing.assert_allclose(got, oracle.perm_ryser_exact(A), rtol=1e-9)
+
+
+def test_sparse_kernel_scalar_matches_batched_member():
+    # scalar launch and bucket launch share one block body: a ragged
+    # straggler served scalar must agree with the same leaf in a bucket
+    # (they share the "pallas" cache identity)
+    sps = [SparseMatrix.from_dense(_rand_sparse_ns(9, 0.2))
+           for _ in range(3)]
+    bucket = np.asarray(ops.permanent_pallas_sparse_batched(sps, **KGEO))
+    solo = np.array([float(np.asarray(ops.permanent_pallas_sparse(
+        sp, **KGEO))) for sp in sps])
+    assert np.array_equal(bucket, solo)
+
+
+# ------------------------------------------- dense/sparse cross-parity
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_cross_parity_real_per_precision(precision):
+    """The same matrix through all four route/backend pairs agrees to the
+    established 1e-9 pallas tolerance per precision mode."""
+    A = _rand_sparse_ns(10, 0.25)
+    sp = SparseMatrix.from_dense(A)
+    vals = {
+        "jnp_dense": float(np.asarray(ryser.perm_ryser_chunked(
+            A, precision=precision))),
+        "jnp_sparse": float(perm_sparyser_chunked(sp, precision=precision)),
+        "pallas_dense": float(np.asarray(ops.permanent_pallas(
+            A, precision=precision, **KGEO))),
+        "pallas_sparse": float(np.asarray(ops.permanent_pallas_sparse(
+            sp, precision=precision, **KGEO))),
+    }
+    ref = vals["jnp_dense"]
+    for name, v in vals.items():
+        assert abs(v - ref) / abs(ref) < 1e-9, (name, v, ref)
+
+
+def test_cross_parity_complex():
+    A = _rand_sparse_ns(8, 0.25, cx=True)
+    sp = SparseMatrix.from_dense(A)
+    ref = complex(np.asarray(ryser.perm_ryser_chunked(A)))
+    for name, v in (
+            ("jnp_sparse", complex(perm_sparyser_chunked(sp))),
+            ("pallas_dense", complex(np.asarray(
+                ops.permanent_pallas(A, **KGEO)))),
+            ("pallas_sparse", complex(np.asarray(
+                ops.permanent_pallas_sparse(sp, **KGEO))))):
+        assert abs(v - ref) / abs(ref) < 1e-9, (name, v, ref)
+
+
+def test_cross_parity_distributed_vs_jnp_bitwise():
+    # the jnp<->distributed pairing keeps its stronger contract: a mesh-
+    # sharded sparse bucket is BIT-identical to the local jnp engine
+    import jax
+    mesh = jax.make_mesh((1,), ("data",))
+    from repro.core import distributed
+    sps = [SparseMatrix.from_dense(_rand_sparse_ns(9, 0.2))
+           for _ in range(3)]
+    for prec in PRECISIONS:
+        got = distributed.sparse_batch_permanents_on_mesh(
+            sps, mesh, precision=prec)
+        ref = np.asarray(perm_sparyser_batched(sps, precision=prec))
+        assert np.array_equal(got, ref), prec
+
+
+def test_mesh_pallas_sparse_matches_jnp():
+    import jax
+    mesh = jax.make_mesh((1,), ("data",))
+    from repro.core import distributed
+    sps = [SparseMatrix.from_dense(_rand_sparse_ns(9, 0.2, cx=cx))
+           for cx in (False, False, True)]
+    for group in (sps[:2], sps[2:]):
+        got = distributed.sparse_batch_permanents_on_mesh(
+            group, mesh, backend="pallas")
+        ref = np.asarray(perm_sparyser_batched(group))
+        assert np.max(np.abs(got - ref) / np.abs(ref)) < 1e-9
+
+
+# ----------------------------------------------- ISSUE 5 satellite fixes
+def test_tiny_bucket_fallback_passes_precision_and_chunks():
+    # regression (ISSUE 5): the n <= 2 fallback used to call the scalar
+    # path with DEFAULT precision/num_chunks, silently dropping the
+    # caller's config
+    sps = [SparseMatrix.from_dense(RNG.uniform(0.5, 1.5, (2, 2)))
+           for _ in range(3)]
+    got = perm_sparyser_batched(sps, num_chunks=8, precision="kahan")
+    ref = np.array([perm_sparyser_chunked(sp, num_chunks=8,
+                                          precision="kahan")
+                    for sp in sps])
+    assert np.array_equal(got, ref)
+
+
+def test_scalar_sparse_tags_name_backend():
+    # regression (ISSUE 5): scalar sparse dispatch tags carry backend
+    # attribution (and a downgrade suffix when another strategy serves
+    # the leaf), like every batch tag
+    A = _rand_sparse_ns(9, 0.2)
+    _, rep = engine.permanent(A, preprocess=False, return_report=True)
+    assert rep.dispatch == ["sparse(n=9,jnp)"]
+    _, rep = engine.permanent(A, backend="pallas", preprocess=False,
+                              return_report=True)
+    assert rep.dispatch == ["sparse(n=9,pallas)"]
+    # n < 4: the kernel can't run -- tagged downgrade, not a silent lie
+    # (2 nonzeros in 9 cells keeps an n=3 leaf under the density switch)
+    T = np.zeros((3, 3))
+    T[0, 0], T[1, 1] = 1.0, 2.0
+    _, rep = engine.permanent(T, backend="pallas", preprocess=False,
+                              return_report=True)
+    assert rep.dispatch == ["sparse(n=3,pallas->jnp)"]
+
+
+def test_sparse_bucket_pallas_no_downgrade_tag():
+    # acceptance (ISSUE 5): no ``pallas->jnp`` downgrade tag on sparse
+    # buckets with n >= 4 -- the bucket runs the batch-grid SpaRyser
+    # kernel natively
+    mats = [_rand_sparse_ns(9, 0.2) for _ in range(4)]
+    got, reports = engine.permanent_batch(mats, backend="pallas",
+                                          preprocess=False,
+                                          return_report=True)
+    ref = engine.permanent_batch(mats, preprocess=False)
+    np.testing.assert_allclose(got, ref, rtol=1e-9)
+    tags = [t for r in reports for t in r.dispatch]
+    assert tags and not any("->" in t for t in tags), tags
+    assert any(t.startswith("sparse_batch") for t in tags)
+
+
+def test_scalar_sparse_pallas_matches_engine():
+    A = _rand_sparse_ns(10, 0.22)
+    ref = engine.permanent(A, preprocess=False)
+    got = engine.permanent(A, backend="pallas", preprocess=False)
+    assert abs(got - ref) / abs(ref) < 1e-9
+
+
+# ------------------------------------------- 8-device subprocess (slow)
+@pytest.mark.slow
+def test_eight_device_ragged_sparse_bucket_pallas_and_jnp():
+    """Mesh-sharded ragged sparse bucket on 8 forced host devices: the
+    jnp body stays bitwise vs the local engine, the pallas body (kernel
+    per device) agrees to the 1e-9 kernel tolerance -- real and complex."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    code = textwrap.dedent("""
+        import jax; jax.config.update("jax_enable_x64", True)
+        import numpy as np
+        from repro.core import distributed, sparyser
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(55)
+        for cx in (False, True):
+            mask = lambda n: (rng.uniform(0, 1, (n, n)) < 0.25) \\
+                | np.eye(n, dtype=bool)
+            def mat(n):
+                m = mask(n)
+                A = rng.uniform(0.5, 1.5, (n, n)) * m
+                if cx:
+                    A = A + 1j * rng.normal(size=(n, n)) * m
+                return sparyser.SparseMatrix.from_dense(A)
+            sps = [mat(10) for _ in range(13)]   # ragged over 8 devices
+            ref = np.asarray(sparyser.perm_sparyser_batched(sps))
+            got = distributed.sparse_batch_permanents_on_mesh(sps, mesh)
+            assert np.array_equal(got, ref), ("jnp body bitwise", cx)
+            gpl = distributed.sparse_batch_permanents_on_mesh(
+                sps, mesh, backend="pallas")
+            rel = np.max(np.abs(gpl - ref) / np.abs(ref))
+            assert rel < 1e-9, ("pallas body", cx, rel)
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout

@@ -294,7 +294,7 @@ def test_queue_repeated_submatrices_hit_cache():
 def test_sparse_route_returns_python_scalar():
     Ssp = _rand_sparse(10, 0.2)
     v, report = engine.permanent(Ssp, preprocess=False, return_report=True)
-    assert report.dispatch == ["sparse(n=10)"]
+    assert report.dispatch == ["sparse(n=10,jnp)"]
     assert isinstance(v, float) and not isinstance(v, np.floating)
     vc = engine.permanent(Ssp.astype(np.complex128) * (1 + 0.5j),
                           preprocess=False)
@@ -365,6 +365,29 @@ def test_downgraded_values_are_reusable_by_jnp_plans():
         "jnp plan must be served from the downgraded distributed run's cache"
     assert stats_j.cache_hits == 3
     np.testing.assert_allclose(totals_j, totals_d, rtol=0)
+
+
+def test_pallas_and_jnp_sparse_values_use_distinct_cache_keys():
+    # ISSUE 5 satellite: sparse attribution follows the same produced-by
+    # logic as dense -- a pallas-sparse value (kernel numerics) and a
+    # jnp-sparse value must never collide under one cache key
+    mats = [_rand_sparse(9, 0.22) for _ in range(3)]
+    pall = PermanentSolver(SolverConfig(backend="pallas",
+                                        preprocess=False))
+    pall.execute(pall.plan_batch(mats))
+    assert pall.cache._data and \
+        all(k[3] == "pallas" for k in pall.cache._data), \
+        "sparse kernel values must carry the pallas cache identity"
+    jnp_s = PermanentSolver(SolverConfig(backend="jnp", preprocess=False))
+    jnp_s.execute(jnp_s.plan_batch(mats))
+    assert all(k[3] == "jnp" for k in jnp_s.cache._data)
+    # same leaves, same config except backend: the key sets are disjoint
+    assert not (set(pall.cache._data) & set(jnp_s.cache._data))
+    # scalar sparse path carries the same identity as the bucket path
+    scal = PermanentSolver(SolverConfig(backend="pallas",
+                                        preprocess=False))
+    scal.execute(scal.plan(mats[0]))
+    assert all(k[3] == "pallas" for k in scal.cache._data)
 
 
 def test_cache_key_separates_real_and_zero_imag_complex_leaves():
