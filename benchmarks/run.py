@@ -42,7 +42,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default="",
                     help="comma list: table3,table4,table5,fig7,batch,"
                          "solver_cache,batch_sharding,batch_complex,"
-                         "batch_sparse,roofline")
+                         "batch_sparse,campaign,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="smaller n (CI-sized)")
     ap.add_argument("--check", action="store_true",
@@ -57,9 +57,9 @@ def main(argv=None) -> int:
     jax.config.update("jax_enable_x64", True)
 
     from . import (batch_complex, batch_sharding, batch_sparse,
-                   batch_throughput, fig7_scaling, roofline_report,
-                   solver_cache, table3_precision, table4_dense,
-                   table5_sparse)
+                   batch_throughput, campaign_resume, fig7_scaling,
+                   roofline_report, solver_cache, table3_precision,
+                   table4_dense, table5_sparse)
 
     t0 = time.time()
     if not only or "batch" in only:
@@ -109,6 +109,18 @@ def main(argv=None) -> int:
         if args.check and not batch_sparse.check(rows):
             print("# batch_sparse gate RED -- sparse pallas/sharded "
                   "buckets below 0.9x jnp or values diverged")
+            return 1
+    if not only or "campaign" in only:
+        # forced 8-device meshes in subprocesses: direct-vs-campaign
+        # throughput plus SIGKILL/resume bitwise identity
+        rows = campaign_resume.run(
+            n=campaign_resume.N_FAST if args.fast
+            else campaign_resume.N_FULL,
+            repeats=3 if args.fast else 5)
+        print_rows("campaign_resume", rows)
+        if args.check and not campaign_resume.check(rows):
+            print("# campaign gate RED -- campaign below 0.9x direct "
+                  "mesh throughput or resume not bitwise-identical")
             return 1
     if not only or "table3" in only:
         if args.fast:

@@ -63,6 +63,18 @@ def load_pytree(path: str, template):
             if tuple(arr.shape) != tuple(leaf.shape):
                 raise ValueError(f"shape mismatch for {key}: "
                                  f"{arr.shape} vs {leaf.shape}")
+            # dtype is part of the template contract too: silently
+            # restoring a float32 leaf into a float64 template (or a real
+            # array into a complex slot) corrupts numerics downstream.
+            # Extension dtypes (bfloat16, float8) come back from .npz as
+            # raw void of the same width -- view them through the template.
+            want = np.dtype(leaf.dtype)
+            if arr.dtype != want:
+                if arr.dtype.kind == "V" and arr.dtype.itemsize == want.itemsize:
+                    arr = arr.view(want)
+                else:
+                    raise ValueError(f"dtype mismatch for {key}: "
+                                     f"{arr.dtype} vs {leaf.dtype}")
             out.append(arr)
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(template), out)

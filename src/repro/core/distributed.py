@@ -1,48 +1,45 @@
-"""Distributed permanent computation (paper Sec. 6.3, scaled to pods).
+"""Distributed permanent execution bodies (paper Sec. 6.3, scaled to pods).
 
-The paper's MPI layer statically splits the 2^{n-1} Gray-step space over
-GPUs; communication is a single final reduction.  We generalize to a JAX
-mesh with any number of axes (e.g. ("pod", "data", "model")):
+Post-campaign-refactor layering -- this module owns every *mesh program*
+(shard_map bodies and their compiled-fn caches); policy lives above it:
 
-* **two-level split** -- space -> per-device ranges (shard_map) -> per-device
-  chunks (Alg. 3 / CEG inside the chunk engine).
-* **over-decomposition** -- every device's range is further cut into
-  ``slices_per_device`` slices; slice results are independent partial sums.
-  This is the straggler-mitigation / fault-tolerance granularity: a
-  restarted or re-scaled job only recomputes unfinished slices.
-* **deterministic reduction** -- per-slice twofloat sums are psum'd over all
-  mesh axes (one scalar pair; the paper's "communication is negligible").
-
-Besides the step-space split there is a *batch-axis* split (ROADMAP:
-batch sharding over the device mesh): millions-of-requests traffic is
-dominated by many moderate-n permanents, so ``batch_permanents_on_mesh``
-/ ``sparse_batch_permanents_on_mesh`` shard a same-size bucket's leading
-axis over the mesh instead -- every device owns whole matrices (the
-matrices are tiny; each shard is replicated per-device work), ragged
-tails are padded to the device count and masked out on the host, and no
-psum is needed.  The per-device body is the *same trace* as the
-single-device batched engines (``ryser.batched_values`` /
-``sparyser.sparse_batched_values``), so sharded values are bit-identical
-to the ``jnp`` backend per precision mode.
+* **step-space split** (one huge matrix over the Gray-step space):
+  ``permanent_on_mesh`` is the one-shot psum path (the paper's MPI
+  reduce); ``slice_sums_on_mesh`` is the wave primitive underneath the
+  campaign -- one slice per device, no reduction, sentinel-padded lanes
+  masked out.  ``run_campaign`` drives waves of pending slices through
+  it with checkpointed twofloat partials (``core.resume.JobState``):
+  deterministic slice decomposition (``core.stepspace.plan_slices``),
+  elastic device count, failed waves re-queued, and a fixed-order final
+  reduction -- a killed-and-resumed campaign is bitwise-identical to an
+  uninterrupted one.
+* **batch-axis split** (many moderate matrices): ``batch_permanents_on_mesh``
+  / ``sparse_batch_permanents_on_mesh`` shard a same-size bucket's
+  leading axis; each device owns whole matrices, ragged tails are padded
+  and masked, and the per-device body shares the single-device engines'
+  trace, so sharded values are bit-identical to the ``jnp`` backend per
+  precision mode.
+* **dispatch** happens one layer up: ``core.planner`` routes a leaf to
+  ``step_sharded`` (campaign) when its step-cost estimate exceeds
+  ``SolverConfig.campaign_threshold``, and ``core.executor``'s
+  ``CampaignBackend`` / ``DistributedBackend`` / ``DistributedBatchBackend``
+  strategies call down into this module.  ``DistributedPermanent`` remains
+  as a thin pre-plan-era wrapper over ``run_campaign``.
 
 Complex input is first-class everywhere: the batch-axis entry points
 shard the matrices' split (re, im) planes through the same shard_map body
-as the jnp backend (``ryser.batched_values_complex`` /
-``sparyser.sparse_batched_values_complex``), so sharded complex values
-are bit-identical to the local engines per precision mode and shard
-shape; the step-space split carries complex through its twofloat psums
-(TwoSum is componentwise-exact under complex addition) and, under
-``backend="pallas"``, runs the split-plane kernel per device.  The
-sparse batch entry accepts ``backend="pallas"`` too: each device
-launches the padded-CCS SpaRyser kernel on its sub-stack (1e-9 kernel
-tolerance vs jnp; the default jnp body keeps the bitwise contract).
+as the jnp backend; the step-space split carries complex through its
+twofloat sums (TwoSum is componentwise-exact under complex addition)
+and, under ``backend="pallas"``, runs the split-plane kernel per device.
 
 APIs:
-  ``permanent_on_mesh``     one-shot functional API (psum reduction)
+  ``permanent_on_mesh``     one-shot step-space split (psum reduction)
   ``slice_sums_on_mesh``    per-device slice sums, no reduction (wave mode)
+  ``run_campaign``          checkpointed, elastic, resumable wave driver
+  ``CampaignPaused``        control-flow signal for wave-budgeted runs
   ``batch_permanents_on_mesh``         batch-axis sharded dense bucket
   ``sparse_batch_permanents_on_mesh``  batch-axis sharded sparse bucket
-  ``DistributedPermanent``  checkpoint/restart + elastic runner (core.resume)
+  ``DistributedPermanent``  legacy wrapper over ``run_campaign``
 """
 
 from __future__ import annotations
@@ -59,30 +56,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P_
 from ..utils.compat import shard_map
 from . import gray as G
 from . import precision as P
+from .resume import JobState
 from .ryser import (batched_values, batched_values_complex, chunk_geometry,
                     complex_precision, nw_base_vector, _final_factor)
+from .stepspace import plan_slices
 
-__all__ = ["permanent_on_mesh", "slice_sums_on_mesh",
+__all__ = ["permanent_on_mesh", "slice_sums_on_mesh", "run_campaign",
+           "CampaignPaused",
            "batch_permanents_on_mesh", "sparse_batch_permanents_on_mesh",
            "DistributedPermanent", "plan_slices"]
-
-
-def plan_slices(n: int, num_devices: int, slices_per_device: int = 8,
-                lanes_per_device: int = 1024):
-    """Static decomposition of the 2^{n-1} step space.
-
-    Returns (total_slices, chunks_per_slice, chunk_size) such that
-    ``total_slices * chunks_per_slice * chunk_size == 2^{n-1}`` with
-    power-of-two chunk_size >= 2 (CEG alignment) and total_slices a
-    power-of-two multiple of num_devices when possible.
-    """
-    want_chunks = num_devices * slices_per_device * lanes_per_device
-    T, C, _ = chunk_geometry(n, want_chunks)
-    ts = num_devices * slices_per_device
-    ts = 1 << int(math.ceil(math.log2(ts)))
-    while ts > 1 and (T % ts != 0 or T // ts < 1):
-        ts //= 2
-    return ts, T // ts, C
 
 
 def _dyn_chunk_partials(A, first_chunk, T: int, C: int, precision: str):
@@ -263,43 +245,65 @@ def permanent_on_mesh(A, mesh: Mesh, *, precision: str = "dq_acc",
     return P.tf_value(total) * _final_factor(n)
 
 
+@lru_cache(maxsize=None)
+def _wave_fn(mesh: Mesh, chunks_per_slice: int, chunk_size: int,
+             precision: str, backend: str):
+    """Compiled per-wave mesh program for one (mesh, geometry, precision,
+    backend) -- cached so a many-wave campaign compiles ONCE per
+    configuration instead of once per wave (jit caches on function
+    identity; a fresh closure per call would retrace every wave).
+
+    The body masks sentinel lanes (slice id < 0): a padded device runs an
+    arithmetically-discarded slice-0 program -- under SPMD every device
+    executes the same wave program, so the masked work costs no wall
+    clock -- and its (hi, lo) contribution is multiplied to exact zero.
+    """
+    axes = tuple(mesh.axis_names)
+
+    def body(A_rep, slices_local):
+        sid = slices_local[0, 0]
+        first_chunk = jnp.maximum(sid, 0) * chunks_per_slice
+        if backend == "pallas":
+            fn = _pallas_device_partials_complex \
+                if jnp.iscomplexobj(A_rep) else _pallas_device_partials
+            parts = fn(A_rep, first_chunk, chunks_per_slice, chunk_size,
+                       precision, vma=frozenset(axes))
+        else:
+            parts = _dyn_chunk_partials(A_rep, first_chunk,
+                                        chunks_per_slice,
+                                        chunk_size, precision)
+        # sentinel mask: live lanes multiply by exactly 1.0 (identity
+        # under IEEE-754), padded lanes by 0.0
+        m = (sid >= 0).astype(A_rep.dtype)
+        h, l = P.two_sum(jnp.sum(parts.hi) * m, jnp.sum(parts.lo) * m)
+        return h[None], l[None]
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(P_(), P_(axes)),
+                             out_specs=(P_(axes), P_(axes)),
+                             check_vma=False))
+
+
 def slice_sums_on_mesh(A, mesh: Mesh, slice_ids: np.ndarray, *,
                        chunks_per_slice: int, chunk_size: int,
                        precision: str = "dq_acc", backend: str = "jnp"):
     """Per-slice twofloat sums for one wave of D slices (no reduction).
 
-    slice_ids: (D,) int32, one slice per device (pad with any id; the host
-    discards dead entries).  Returns (his, los) of shape (D,).
+    slice_ids: (D,) int32, one slice per device.  Entries < 0 are
+    sentinel padding for short waves: their lanes return exact zeros and
+    callers must discard them explicitly (``run_campaign`` does) -- no
+    already-done slice is ever re-recorded.  Returns (his, los) of shape
+    (D,).
     """
     A = jnp.asarray(A)
     D = math.prod(mesh.devices.shape)
+    slice_ids = np.asarray(slice_ids, dtype=np.int32)
     assert slice_ids.shape == (D,)
     axes = tuple(mesh.axis_names)
     dev_slices = jax.device_put(slice_ids.reshape(D, 1),
                                 NamedSharding(mesh, P_(axes)))
-
-    @jax.jit
-    def run(A, dev_slices):
-        def body(A_rep, slices_local):
-            first_chunk = slices_local[0, 0] * chunks_per_slice
-            if backend == "pallas":
-                fn = _pallas_device_partials_complex \
-                    if jnp.iscomplexobj(A_rep) else _pallas_device_partials
-                parts = fn(A_rep, first_chunk, chunks_per_slice, chunk_size,
-                           precision, vma=frozenset(axes))
-            else:
-                parts = _dyn_chunk_partials(A_rep, first_chunk,
-                                            chunks_per_slice,
-                                            chunk_size, precision)
-            h, l = P.two_sum(jnp.sum(parts.hi), jnp.sum(parts.lo))
-            return h[None], l[None]
-
-        return shard_map(body, mesh=mesh,
-                         in_specs=(P_(), P_(axes)),
-                         out_specs=(P_(axes), P_(axes)),
-                         check_vma=False)(A, dev_slices)
-
-    his, los = run(A, dev_slices)
+    his, los = _wave_fn(mesh, chunks_per_slice, chunk_size,
+                        precision, backend)(A, dev_slices)
     return np.asarray(his), np.asarray(los)
 
 
@@ -555,14 +559,108 @@ def sparse_batch_permanents_on_mesh(sps: list, mesh: Mesh, *,
     return np.asarray(vals)[:B]
 
 
+class CampaignPaused(Exception):
+    """A wave-budgeted campaign ran out of ``max_waves`` with slices still
+    pending.  Carries the in-memory :class:`JobState` so the caller can
+    keep driving the same job (``run_campaign(..., state=exc.state)``)
+    without re-reading the checkpoint."""
+
+    def __init__(self, state: JobState):
+        self.state = state
+        super().__init__(
+            f"campaign paused at {state.fraction_done():.1%} "
+            f"({len(state.pending_slices())} of {state.total_slices} "
+            "slices pending)")
+
+
+def run_campaign(A, mesh: Mesh, *, total_slices: int, chunks_per_slice: int,
+                 chunk_size: int, precision: str = "dq_acc",
+                 backend: str = "jnp", checkpoint_path: str | None = None,
+                 state: JobState | None = None, progress_cb=None,
+                 max_waves: int | None = None, max_wave_retries: int = 2):
+    """Execute a step-space campaign in device-count-sized waves.
+
+    The unit of work is a *slice* (contiguous block of ``chunks_per_slice``
+    chunks of ``chunk_size`` Gray steps); the decomposition comes from the
+    caller (``core.stepspace.plan_slices`` via the planner's
+    ``CampaignSpec``) and is independent of the runtime device count, so:
+
+    * waves are re-formed from the pending slice set each iteration --
+      a resumed job may use any mesh (elastic);
+    * a failed/preempted wave records nothing; its slices stay pending
+      and are re-queued into the next wave (straggler rebalance at wave
+      granularity; after ``max_wave_retries`` consecutive failures the
+      error propagates);
+    * after each wave the twofloat per-slice partials are checkpointed
+      (``JobState``, config-safe ``.npz``), losing at most one wave to a
+      SIGKILL;
+    * the final reduction is a fixed slice-id-order twofloat sum, so a
+      killed-and-resumed run -- under any device count -- is
+      bitwise-identical to an uninterrupted one.
+
+    Returns ``(value, state)``; ``value`` is ``None`` when ``max_waves``
+    paused the run with slices still pending (callers that need the
+    pause as control flow raise :class:`CampaignPaused`, e.g. the
+    executor's ``CampaignBackend``).
+    """
+    A = np.asarray(A)
+    n = A.shape[0]
+    D = math.prod(mesh.devices.shape)
+    if state is None:
+        state = JobState.load_or_create(
+            checkpoint_path, A, total_slices, precision=precision,
+            backend=backend, chunks_per_slice=chunks_per_slice,
+            chunk_size=chunk_size)
+    waves = 0
+    retries = 0
+    while True:
+        pending = state.pending_slices()
+        if not pending:
+            break
+        if max_waves is not None and waves >= max_waves:
+            return None, state
+        wave = pending[:D]
+        ids = np.array(wave + [-1] * (D - len(wave)), dtype=np.int32)
+        try:
+            his, los = slice_sums_on_mesh(
+                A, mesh, ids, chunks_per_slice=chunks_per_slice,
+                chunk_size=chunk_size, precision=precision, backend=backend)
+        except Exception:
+            # preempted/straggling wave: nothing recorded, its slices
+            # stay pending and the next iteration re-forms the wave
+            retries += 1
+            if retries > max_wave_retries:
+                raise
+            continue
+        retries = 0
+        # discard sentinel-padded lanes explicitly: only the wave's own
+        # slice ids are recorded
+        state.record_wave(wave, his[:len(wave)], los[:len(wave)])
+        waves += 1
+        if checkpoint_path:
+            state.save(checkpoint_path)
+        if progress_cb:
+            progress_cb(state)
+
+    hi, lo = state.reduce()
+    p0 = np.prod(np.asarray(nw_base_vector(jnp.asarray(A)))).item()
+    total = P.tf_add_acc(
+        P.TwoFloat(jnp.asarray(hi), jnp.asarray(lo)), jnp.asarray(p0))
+    # .item(): float for real jobs (the legacy return type), complex
+    # for complex jobs
+    value = np.asarray(P.tf_value(total)).item() * _final_factor(n)
+    return value, state
+
+
 @dataclass
 class DistributedPermanent:
-    """Checkpointable, elastic multi-slice permanent job.
+    """Checkpointable, elastic multi-slice permanent job (legacy wrapper).
 
-    The unit of work is a *slice* (contiguous block of chunks).  ``run()``
-    executes unfinished slices in device-count-sized waves, checkpointing
-    after each wave; it can resume under a different mesh (elastic) because
-    slice sums are position-independent addends.
+    Pre-plan-era entry point kept for direct library use; the slice
+    decomposition is derived from THIS mesh's device count, and the wave
+    loop is :func:`run_campaign`.  New code should route through the
+    planner (``SolverConfig.campaign_threshold``) so the decomposition is
+    recorded in the ``ExecutionPlan`` and independent of the mesh.
     """
     mesh: Mesh
     precision: str = "dq_acc"
@@ -572,32 +670,14 @@ class DistributedPermanent:
     backend: str = "jnp"          # "pallas" -> per-device TPU kernel
 
     def permanent(self, A, progress_cb=None):
-        from .resume import JobState  # local import to avoid cycle
         A = np.asarray(A)
         n = A.shape[0]
         D = math.prod(self.mesh.devices.shape)
         total_slices, chunks_per_slice, C = plan_slices(
             n, D, self.slices_per_device, self.lanes_per_device)
-        state = JobState.load_or_create(self.checkpoint_path, matrix=A,
-                                        total_slices=total_slices)
-        pending = state.pending_slices()
-        for w0 in range(0, len(pending), D):
-            wave = pending[w0:w0 + D]
-            ids = np.array(list(wave) + [0] * (D - len(wave)), dtype=np.int32)
-            his, los = slice_sums_on_mesh(
-                A, self.mesh, ids, chunks_per_slice=chunks_per_slice,
-                chunk_size=C, precision=self.precision,
-                backend=self.backend)
-            state.record_wave(wave, his[:len(wave)], los[:len(wave)])
-            if self.checkpoint_path:
-                state.save(self.checkpoint_path)
-            if progress_cb:
-                progress_cb(state)
-
-        hi, lo = state.reduce()
-        p0 = np.prod(np.asarray(nw_base_vector(jnp.asarray(A)))).item()
-        total = P.tf_add_acc(
-            P.TwoFloat(jnp.asarray(hi), jnp.asarray(lo)), jnp.asarray(p0))
-        # .item(): float for real jobs (the legacy return type), complex
-        # for complex jobs
-        return np.asarray(P.tf_value(total)).item() * _final_factor(n)
+        value, _ = run_campaign(
+            A, self.mesh, total_slices=total_slices,
+            chunks_per_slice=chunks_per_slice, chunk_size=C,
+            precision=self.precision, backend=self.backend,
+            checkpoint_path=self.checkpoint_path, progress_cb=progress_cb)
+        return value

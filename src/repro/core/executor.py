@@ -4,8 +4,11 @@
 objects: each :class:`Backend` knows how to run one dense/sparse leaf and
 (optionally) a whole same-size bucket; ``register_backend`` adds new
 strategies without touching the dispatcher (the ``jnp`` / ``pallas`` /
-``distributed`` / ``distributed_batch`` quartet registers itself at
-import).
+``distributed`` / ``distributed_batch`` / ``campaign`` strategies
+register themselves at import).  ``campaign`` is special: it is never
+selected by ``SolverConfig.backend`` -- the planner routes individual
+oversized leaves to it (``route == "step_sharded"``) and it executes
+them as checkpointed step-space waves (see :class:`CampaignBackend`).
 
 **Batch contract.**  ``dense_batch(stack, *, precision, num_chunks, ctx)``
 and ``sparse_batch(sps, *, precision, num_chunks, ctx)`` run one
@@ -54,11 +57,12 @@ import numpy as np
 from . import ryser as R
 from . import sparyser as S
 from .cache import ResultCache
-from .planner import (ROUTE_DENSE, ROUTE_INLINE, ROUTE_SPARSE, ExecutionPlan,
+from .planner import (ROUTE_CAMPAIGN, ROUTE_DENSE, ROUTE_INLINE,
+                      ROUTE_SPARSE, CampaignSpec, ExecutionPlan,
                       LeafTask, PermanentReport)
 
 __all__ = ["Backend", "JnpBackend", "PallasBackend", "DistributedBackend",
-           "DistributedBatchBackend",
+           "DistributedBatchBackend", "CampaignBackend",
            "register_backend", "get_backend", "available_backends",
            "ExecStats", "execute_plan"]
 
@@ -296,6 +300,46 @@ class DistributedBackend(JnpBackend):
         return "jnp"
 
 
+class CampaignBackend(Backend):
+    """Checkpointed step-space waves for ROUTE_CAMPAIGN leaves.
+
+    Not selected through ``SolverConfig.backend`` -- the planner routes a
+    leaf here when its step-cost estimate crosses
+    ``campaign_threshold``, and the :class:`CampaignSpec` it records
+    (slice geometry + wave-body backend + precision) fully determines the
+    numerics.  Execution is ``core.distributed.run_campaign``: waves of
+    :func:`~repro.core.distributed.slice_sums_on_mesh` over the ctx mesh
+    (or a flat 1D mesh over every visible device when no ctx is
+    attached), twofloat partials checkpointed to
+    ``SolverConfig.campaign_checkpoint`` after each wave, fixed-order
+    final reduce.  A ``campaign_max_waves`` budget that expires with
+    slices pending raises :class:`~repro.core.distributed.CampaignPaused`
+    through ``execute_plan`` (the checkpoint holds the progress).
+    """
+
+    name = "campaign"
+
+    def campaign(self, M: np.ndarray, spec: CampaignSpec, *,
+                 ctx: Any | None = None, checkpoint_path: str | None = None,
+                 progress_cb=None,
+                 max_waves: int | None = None) -> complex | float:
+        from . import distributed as Dm
+        mesh = _ctx_mesh(ctx)
+        if mesh is None:
+            import jax
+            from jax.sharding import Mesh
+            mesh = Mesh(np.array(jax.devices()), ("step",))
+        value, state = Dm.run_campaign(
+            M, mesh, total_slices=spec.total_slices,
+            chunks_per_slice=spec.chunks_per_slice,
+            chunk_size=spec.chunk_size, precision=spec.precision,
+            backend=spec.backend, checkpoint_path=checkpoint_path,
+            progress_cb=progress_cb, max_waves=max_waves)
+        if value is None:
+            raise Dm.CampaignPaused(state)
+        return _scalar(value)
+
+
 _BACKENDS: dict[str, Backend] = {}
 
 
@@ -321,6 +365,7 @@ register_backend(JnpBackend())
 register_backend(PallasBackend())
 register_backend(DistributedBackend())
 register_backend(DistributedBatchBackend())
+register_backend(CampaignBackend())
 
 _FALLBACK = "jnp"
 
@@ -384,13 +429,16 @@ def _inline_value(m: np.ndarray) -> complex | float:
 
 
 def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
-                 distributed_ctx: Any | None = None):
+                 distributed_ctx: Any | None = None,
+                 campaign_progress=None):
     """Dispatch every leaf of ``plan`` and accumulate per-matrix totals.
 
     Returns ``(totals, reports, stats)`` where ``totals`` is a (B,)
     complex128 array (callers extract the real part for real plans),
     ``reports`` one PermanentReport per planned matrix, and ``stats`` the
-    dispatch/cache accounting.
+    dispatch/cache accounting.  ``campaign_progress`` is an optional
+    ``JobState -> None`` callback fired after every checkpointed wave of
+    a ROUTE_CAMPAIGN leaf.
     """
     cfg = plan.config
     backend = get_backend(cfg.backend)
@@ -414,21 +462,56 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
         for r in reports:
             r.dispatch.append(ptag)
 
-    def produced_by(route: str, n: int, batched: bool) -> str:
-        """Name of the strategy whose numerics will serve this leaf."""
-        return backend.value_backend(route, n, batched=batched,
+    def produced_by(leaf: LeafTask, batched: bool) -> str:
+        """Name of the strategy whose numerics will serve this leaf.
+
+        Campaign leaves key under the full wave-body identity recorded in
+        their spec -- backend AND slice geometry -- because the twofloat
+        wave partials depend on the decomposition, not just the engine."""
+        if leaf.route == ROUTE_CAMPAIGN:
+            s = leaf.campaign
+            return (f"campaign[{s.backend},{s.total_slices}x"
+                    f"{s.chunks_per_slice}x{s.chunk_size}]")
+        return backend.value_backend(leaf.route, leaf.n, batched=batched,
                                      ctx=distributed_ctx)
 
     def lookup(leaf: LeafTask, batched: bool):
         if cache is None:
             return None, None
-        key = _cache_key(leaf, plan, produced_by(leaf.route, leaf.n, batched))
+        key = _cache_key(leaf, plan, produced_by(leaf, batched))
         val = cache.get(key)
         if val is None:
             stats.cache_misses += 1
         else:
             stats.cache_hits += 1
         return key, val
+
+    campaign_leaves = [l for l in plan.leaves if l.route == ROUTE_CAMPAIGN]
+
+    def campaign_ckpt(leaf: LeafTask) -> str | None:
+        """Checkpoint path for a campaign leaf: the configured path
+        verbatim for a single-campaign plan, leaf-key-suffixed when
+        several leaves campaign (their JobStates must not collide)."""
+        base = cfg.campaign_checkpoint
+        if base is None:
+            return None
+        if len(campaign_leaves) == 1:
+            return base
+        return f"{base}.{leaf.key[:12]}.npz"
+
+    def run_campaign_leaf(leaf: LeafTask) -> complex | float:
+        spec = leaf.campaign
+        reports[leaf.owner].dispatch.append(
+            f"step_sharded(n={leaf.n},slices={spec.total_slices},"
+            f"{spec.backend})")
+        val = get_backend("campaign").campaign(
+            leaf.matrix, spec, ctx=distributed_ctx,
+            checkpoint_path=campaign_ckpt(leaf),
+            progress_cb=campaign_progress,
+            max_waves=cfg.campaign_max_waves)
+        stats.device_dispatches += 1
+        stats.scalar_leaves += 1
+        return val
 
     if not plan.batched:
         # scalar mode: strict plan-order per-leaf dispatch (legacy
@@ -438,6 +521,10 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
             if val is not None:
                 reports[leaf.owner].dispatch.append(
                     f"cache({leaf.route},n={leaf.n})")
+            elif leaf.route == ROUTE_CAMPAIGN:
+                val = run_campaign_leaf(leaf)
+                if key is not None:
+                    cache.put(key, val)
             else:
                 val = _run_leaf(leaf, plan, backend, reports[leaf.owner],
                                 stats, distributed_ctx)
@@ -466,7 +553,7 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
                 stats.inline_leaves += 1
                 continue
             if cache is not None:
-                key = _cache_key(leaf, plan, produced_by(route, n, True))
+                key = _cache_key(leaf, plan, produced_by(leaf, True))
                 if key in computed:
                     followers.append(leaf)
                     continue
@@ -483,13 +570,25 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
 
     for (route, n), idxs in sorted(pending.items()):
         leaves = [plan.leaves[j] for j in idxs]
-        bname = produced_by(route, n, True)
+        bname = produced_by(leaves[0], True)
+        if route == ROUTE_CAMPAIGN:
+            # campaign leaves never share a device program: each is its
+            # own checkpointed wave sequence (probe key == store key --
+            # the campaign identity is batched-independent)
+            for leaf in leaves:
+                val = run_campaign_leaf(leaf)
+                if cache is not None:
+                    k = _cache_key(leaf, plan, bname)
+                    cache.put(k, val)
+                    computed[k] = val
+                totals[leaf.owner] += leaf.coef * complex(val)
+            continue
         # ragged straggler: scalar path -- but only while the scalar
         # strategy produces the same numerics family as the bucket one
         # (under distributed+mesh the scalar path is the step-space
         # split, which is NOT bit-identical to the batch engines and
         # would be stored under a key the batched probes never use)
-        if len(leaves) == 1 and bname == produced_by(route, n, False):
+        if len(leaves) == 1 and bname == produced_by(leaves[0], False):
             leaf = leaves[0]
             val = _run_leaf(leaf, plan, backend, reports[leaf.owner],
                             stats, distributed_ctx)
@@ -532,14 +631,13 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
             if cache is not None:
                 cache.put(_cache_key(leaf, plan, bname), v)
                 computed[_cache_key(leaf, plan,
-                                    produced_by(route, n, True))] = v
+                                    produced_by(leaf, True))] = v
             totals[leaf.owner] += leaf.coef * v
 
     for leaf in followers:                 # duplicates of scheduled leaves
         # resolve from this call's own results, not the shared cache -- an
         # LRU smaller than the batch may already have evicted the entry
-        val = computed[_cache_key(leaf, plan,
-                                  produced_by(leaf.route, leaf.n, True))]
+        val = computed[_cache_key(leaf, plan, produced_by(leaf, True))]
         assert val is not None, "scheduled leaf must have been computed"
         cache.hits += 1                    # in-flight dedup is still a hit
         stats.cache_hits += 1

@@ -35,11 +35,13 @@ from typing import Any
 import numpy as np
 
 from . import decompose as D
+from .stepspace import plan_slices
 
 __all__ = [
     "DENSITY_SWITCH",
     "SolverConfig",
     "PermanentReport",
+    "CampaignSpec",
     "LeafTask",
     "MatrixPlan",
     "ExecutionPlan",
@@ -52,6 +54,7 @@ DENSITY_SWITCH = 0.30
 ROUTE_DENSE = "dense"
 ROUTE_SPARSE = "sparse"
 ROUTE_INLINE = "inline"        # n <= 2 closed form, no device program
+ROUTE_CAMPAIGN = "step_sharded"  # 2^{n-1} step space sliced across waves
 
 
 @dataclass(frozen=True)
@@ -69,6 +72,16 @@ class SolverConfig:
     dm: bool | None = None           # override DM elimination
     fm: bool | None = None           # override Forbert-Marx compression
     num_chunks: int = 4096           # Alg. 3 tau (rounded to power of two)
+    # Step-space campaign routing: a single leaf whose Ryser-step estimate
+    # exceeds campaign_threshold re-routes to ROUTE_CAMPAIGN -- its step
+    # space is cut into resumable slices (geometry recorded in the plan as
+    # a CampaignSpec) and the executor's CampaignBackend runs them in
+    # checkpointed waves.  None disables the route; negative forces it.
+    campaign_threshold: float | None = float(2 ** 34)
+    campaign_slices: int = 64        # plan_slices() slice-count target
+    campaign_lanes: int = 1024       # plan_slices() chunk-count target
+    campaign_checkpoint: str | None = None   # JobState .npz path
+    campaign_max_waves: int | None = None    # pause (CampaignPaused) after
     cache: bool = True               # content-hash result cache on leaves
     cache_entries: int = 4096        # LRU capacity of the result cache
     queue_max_batch: int = 32        # flush a size bucket at this depth
@@ -102,13 +115,34 @@ class PermanentReport:
     backend: str = "jnp"
 
 
+@dataclass(frozen=True)
+class CampaignSpec:
+    """The resumable step-space decomposition of one ROUTE_CAMPAIGN leaf.
+
+    Fixed at plan time from the campaign knobs alone (never the runtime
+    device count), so the same plan -- and any checkpoint it wrote -- can
+    be executed or resumed under any mesh size.  ``total_slices *
+    chunks_per_slice * chunk_size == 2^{n-1}``.
+    """
+    total_slices: int
+    chunks_per_slice: int
+    chunk_size: int
+    precision: str                   # effective precision of the wave body
+    backend: str                     # per-device slice body: jnp | pallas
+
+    def as_tuple(self) -> tuple:
+        return (self.total_slices, self.chunks_per_slice, self.chunk_size,
+                self.precision, self.backend)
+
+
 @dataclass
 class LeafTask:
     """coef * perm(matrix) is one additive contribution to owner's result."""
     owner: int                       # index into the planned matrix list
     coef: complex | float
     matrix: np.ndarray               # post-DM/FM leaf (float64 / complex128)
-    route: str                       # dense | sparse | inline
+    route: str                       # dense | sparse | inline | step_sharded
+    campaign: CampaignSpec | None = None   # set iff route == step_sharded
     _key: str | None = None
 
     @property
@@ -185,7 +219,8 @@ class ExecutionPlan:
                     for f in self._NUMERIC_FIELDS)
         return (
             cfg, self.batched, self.is_complex, self.precision,
-            tuple((l.owner, complex(l.coef), l.route, l.key)
+            tuple((l.owner, complex(l.coef), l.route, l.key,
+                   l.campaign.as_tuple() if l.campaign else None)
                   for l in self.leaves),
             tuple(sorted((r, n, tuple(idx))
                          for (r, n), idx in self.buckets.items())),
@@ -217,7 +252,8 @@ class ExecutionPlan:
                 for e in self.entries],
             "leaves": [
                 {"owner": l.owner, "n": l.n, "route": l.route,
-                 "coef": _num(l.coef), "key": l.key}
+                 "coef": _num(l.coef), "key": l.key,
+                 "campaign": asdict(l.campaign) if l.campaign else None}
                 for l in self.leaves],
             "buckets": [
                 {"route": r, "n": n, "size": len(idx), "leaves": list(idx)}
@@ -322,6 +358,26 @@ def build_plan(mats: list[np.ndarray], config: SolverConfig, *,
                 continue
             leaves.append(LeafTask(owner=i, coef=leaf.coef, matrix=m,
                                    route=_route(m, batched)))
+
+    # Campaign re-route: any dense/sparse leaf whose step-cost estimate
+    # exceeds the threshold becomes a step_sharded leaf with a resumable
+    # slice decomposition recorded in the plan.  The geometry depends only
+    # on the plan knobs (never the runtime device count) -- that is what
+    # makes the checkpoint elastic.
+    thr = config.campaign_threshold
+    if thr is not None:
+        for leaf in leaves:
+            if leaf.route in (ROUTE_DENSE, ROUTE_SPARSE) and \
+                    _leaf_cost(leaf.matrix, leaf.route) > thr:
+                ts, cps, C = plan_slices(
+                    leaf.n, config.campaign_slices, 1,
+                    config.campaign_lanes)
+                leaf.route = ROUTE_CAMPAIGN
+                leaf.campaign = CampaignSpec(
+                    total_slices=ts, chunks_per_slice=cps, chunk_size=C,
+                    precision=precision,
+                    backend="pallas" if config.backend == "pallas"
+                    else "jnp")
 
     buckets: dict[tuple[str, int], list[int]] = {}
     for j, leaf in enumerate(leaves):

@@ -1,13 +1,22 @@
-"""Checkpoint / restart state for distributed permanent jobs.
+"""Checkpoint / restart state for step-space campaign jobs.
 
-A permanent job's durable state is tiny: the matrix fingerprint, the slice
-decomposition, and per-slice twofloat partial sums.  Slices are independent
-addends, so:
+A permanent campaign's durable state is tiny: the matrix fingerprint, the
+slice decomposition *and the configuration that produced it*, plus
+per-slice twofloat partial sums.  Slices are independent addends, so:
 
 * a crashed job resumes from the last snapshot, losing at most one wave;
 * a resumed job may use a different device count (elastic) -- waves are
   re-formed from the pending slice set;
 * stragglers only delay their own wave; completed slices are never redone.
+
+Config safety: partial sums are only meaningful under the exact
+(precision, backend, chunk geometry) that computed them -- merging a
+``dd`` wave into a ``qq`` reduction, or slices cut at a different
+``chunk_size``, silently corrupts the result at the ulp level.  The
+``.npz`` therefore persists ``precision`` / ``backend`` /
+``chunks_per_slice`` / ``chunk_size`` plus a format version, and
+``load_or_create`` fails loudly on any mismatch (including checkpoints
+written by the pre-versioned seed format).
 
 The file format is a single ``.npz`` (atomic rename on save).
 """
@@ -17,13 +26,17 @@ from __future__ import annotations
 import hashlib
 import os
 import tempfile
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
-from . import precision as P
+__all__ = ["JobState", "FORMAT_VERSION"]
 
-__all__ = ["JobState"]
+# v2: config-safety fields (precision/backend/chunk geometry) added; v1
+# (the unversioned seed format) checkpoints are rejected at load.
+FORMAT_VERSION = 2
+
+_CONFIG_KEYS = ("precision", "backend", "chunks_per_slice", "chunk_size")
 
 
 def matrix_fingerprint(A: np.ndarray) -> str:
@@ -42,10 +55,18 @@ class JobState:
     done: np.ndarray          # (total_slices,) bool
     hi: np.ndarray            # (total_slices,) f64/c128 partial sums
     lo: np.ndarray            # (total_slices,) f64/c128 compensation terms
+    precision: str = "dq_acc"
+    backend: str = "jnp"      # per-device slice body: jnp | pallas
+    chunks_per_slice: int = 0
+    chunk_size: int = 0
+    version: int = FORMAT_VERSION
 
     # ------------------------------------------------------------------
     @staticmethod
-    def create(matrix: np.ndarray, total_slices: int) -> "JobState":
+    def create(matrix: np.ndarray, total_slices: int, *,
+               precision: str = "dq_acc", backend: str = "jnp",
+               chunks_per_slice: int = 0,
+               chunk_size: int = 0) -> "JobState":
         # complex jobs checkpoint complex slice sums: the twofloat
         # reduction below is add/sub only, which is componentwise-exact
         # under complex arithmetic
@@ -55,19 +76,40 @@ class JobState:
             total_slices=total_slices,
             done=np.zeros(total_slices, dtype=bool),
             hi=np.zeros(total_slices, dtype=dtype),
-            lo=np.zeros(total_slices, dtype=dtype))
+            lo=np.zeros(total_slices, dtype=dtype),
+            precision=precision, backend=backend,
+            chunks_per_slice=chunks_per_slice, chunk_size=chunk_size)
 
     @staticmethod
     def load(path: str) -> "JobState":
         with np.load(path, allow_pickle=False) as z:
+            if "version" not in z.files:
+                raise ValueError(
+                    f"checkpoint {path!r} predates the config-safety "
+                    f"format (v{FORMAT_VERSION}): it does not record the "
+                    "precision/backend/chunk geometry its partial sums "
+                    "were computed under and cannot be resumed safely")
+            version = int(z["version"])
+            if version != FORMAT_VERSION:
+                raise ValueError(
+                    f"checkpoint {path!r} has format v{version}, this "
+                    f"code reads v{FORMAT_VERSION}")
             return JobState(
                 fingerprint=str(z["fingerprint"]),
                 total_slices=int(z["total_slices"]),
-                done=z["done"], hi=z["hi"], lo=z["lo"])
+                done=z["done"], hi=z["hi"], lo=z["lo"],
+                precision=str(z["precision"]),
+                backend=str(z["backend"]),
+                chunks_per_slice=int(z["chunks_per_slice"]),
+                chunk_size=int(z["chunk_size"]),
+                version=version)
 
     @staticmethod
     def load_or_create(path: str | None, matrix: np.ndarray,
-                       total_slices: int) -> "JobState":
+                       total_slices: int, *,
+                       precision: str = "dq_acc", backend: str = "jnp",
+                       chunks_per_slice: int = 0,
+                       chunk_size: int = 0) -> "JobState":
         if path and os.path.exists(path):
             state = JobState.load(path)
             if state.fingerprint != matrix_fingerprint(matrix):
@@ -77,10 +119,27 @@ class JobState:
             if state.total_slices != total_slices:
                 raise ValueError(
                     f"checkpoint has {state.total_slices} slices, plan has "
-                    f"{total_slices}; re-plan with matching slices_per_device"
-                    " x devices or finish with the original decomposition")
+                    f"{total_slices}; re-plan with the original slice "
+                    "decomposition or finish with the code that wrote it")
+            want = {"precision": precision, "backend": backend,
+                    "chunks_per_slice": chunks_per_slice,
+                    "chunk_size": chunk_size}
+            bad = [k for k in _CONFIG_KEYS
+                   if getattr(state, k) != want[k]]
+            if bad:
+                detail = ", ".join(
+                    f"{k}: checkpoint={getattr(state, k)!r} "
+                    f"plan={want[k]!r}" for k in bad)
+                raise ValueError(
+                    "checkpoint config mismatch -- partial sums computed "
+                    "under a different configuration cannot be merged "
+                    f"({detail}); resume with the original config or "
+                    "restart from scratch")
             return state
-        return JobState.create(matrix, total_slices)
+        return JobState.create(matrix, total_slices, precision=precision,
+                               backend=backend,
+                               chunks_per_slice=chunks_per_slice,
+                               chunk_size=chunk_size)
 
     # ------------------------------------------------------------------
     def pending_slices(self) -> list[int]:
@@ -96,7 +155,12 @@ class JobState:
         return float(self.done.mean())
 
     def reduce(self):
-        """Twofloat sum of all completed slice partials (deterministic)."""
+        """Twofloat sum of all completed slice partials (deterministic).
+
+        Fixed slice-id order, independent of wave composition and device
+        count -- the reduction a killed-and-resumed campaign replays
+        bitwise-identically.
+        """
         hi, lo = 0.0, 0.0
         for i in np.nonzero(self.done)[0]:
             s, e = _two_sum_host(hi, self.hi[i])
@@ -114,7 +178,10 @@ class JobState:
         try:
             np.savez(tmp, fingerprint=self.fingerprint,
                      total_slices=self.total_slices,
-                     done=self.done, hi=self.hi, lo=self.lo)
+                     done=self.done, hi=self.hi, lo=self.lo,
+                     precision=self.precision, backend=self.backend,
+                     chunks_per_slice=self.chunks_per_slice,
+                     chunk_size=self.chunk_size, version=self.version)
             # np.savez appends .npz to names without it
             produced = tmp if tmp.endswith(".npz") else tmp + ".npz"
             if os.path.exists(produced) and produced != tmp:

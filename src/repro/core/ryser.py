@@ -116,18 +116,9 @@ def perm_ryser_seq(A):
 # Chunked / vectorized (faithful Alg. 3 + CEG chunking)
 # ---------------------------------------------------------------------------
 
-def chunk_geometry(n: int, num_chunks: int):
-    """Power-of-2, window-aligned chunking of the 2^{n-1}-step space.
-
-    Returns (T, C, k): T chunks of C = 2^k local steps; T * C == 2^{n-1},
-    k >= 1 (so chunk starts are even and the accumulation sign is
-    chunk-uniform).  Step ``w`` of chunk ``t`` is global step ``g = t*C + w``.
-    """
-    space = 1 << (n - 1)
-    T = max(1, min(num_chunks, space // 2))
-    T = 1 << int(math.floor(math.log2(T)))  # power of two
-    C = space // T
-    return T, C, int(math.log2(C))
+# chunk_geometry lives in core.stepspace (pure host math shared with the
+# jax-free planner); re-exported here for the engines and their callers.
+from .stepspace import chunk_geometry  # noqa: E402
 
 
 class _CEGSchedules:

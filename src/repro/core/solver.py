@@ -97,6 +97,9 @@ class PermanentSolver:
         self._queue: dict[int, tuple[float, list[PermanentRequest]]] = {}
         self._stats = ExecStats()
         self.flushes = 0
+        # optional JobState -> None callback fired after every
+        # checkpointed wave of a step_sharded (campaign) leaf
+        self.campaign_progress: Callable | None = None
 
     # -- plan ---------------------------------------------------------------
 
@@ -120,7 +123,8 @@ class PermanentSolver:
         """Dispatch a plan; scalar plans return a Python scalar, batch
         plans a (B,) ndarray (complex128 when the plan is complex)."""
         totals, reports, stats = execute_plan(
-            plan, cache=self.cache, distributed_ctx=self.distributed_ctx)
+            plan, cache=self.cache, distributed_ctx=self.distributed_ctx,
+            campaign_progress=self.campaign_progress)
         self._merge_stats(stats)
         out = totals if plan.is_complex else np.real(totals)
         for i, r in enumerate(reports):

@@ -1,0 +1,62 @@
+"""Pure step-space decomposition math (no jax, no devices).
+
+The 2^{n-1}-step Gray iteration space is split twice:
+
+* :func:`chunk_geometry` -- chunks: the intra-device parallelism unit
+  (Alg. 3's tau lanes; every chunk is a power-of-two, window-aligned run
+  of Gray steps so the CEG schedules are chunk-uniform).
+* :func:`plan_slices` -- slices: the campaign / fault-tolerance unit (a
+  contiguous block of chunks).  Slice sums are independent addends, so a
+  killed-and-resumed job recomputes only unfinished slices and the final
+  fixed-order reduction is identical no matter how slices were grouped
+  into waves or how many devices ran them.
+
+Both functions are pure host math: ``core.planner`` calls them while
+building an :class:`~repro.core.planner.ExecutionPlan` (planning must not
+import jax), and ``core.ryser`` / ``core.distributed`` re-export them for
+the device engines.
+"""
+
+from __future__ import annotations
+
+import math
+
+__all__ = ["chunk_geometry", "plan_slices"]
+
+
+def chunk_geometry(n: int, num_chunks: int):
+    """Power-of-2, window-aligned chunking of the 2^{n-1}-step space.
+
+    Returns (T, C, k): T chunks of C = 2^k local steps; T * C == 2^{n-1},
+    k >= 1 (so chunk starts are even and the accumulation sign is
+    chunk-uniform).  Step ``w`` of chunk ``t`` is global step ``g = t*C + w``.
+    """
+    space = 1 << (n - 1)
+    T = max(1, min(num_chunks, space // 2))
+    T = 1 << int(math.floor(math.log2(T)))  # power of two
+    C = space // T
+    return T, C, int(math.log2(C))
+
+
+def plan_slices(n: int, num_devices: int, slices_per_device: int = 8,
+                lanes_per_device: int = 1024):
+    """Static decomposition of the 2^{n-1} step space.
+
+    Returns (total_slices, chunks_per_slice, chunk_size) such that
+    ``total_slices * chunks_per_slice * chunk_size == 2^{n-1}`` with
+    power-of-two chunk_size >= 2 (CEG alignment) and total_slices a
+    power-of-two multiple of num_devices when possible.
+
+    The decomposition depends only on its arguments -- never on the
+    runtime device count -- which is what makes campaign checkpoints
+    portable across elastic restarts: the planner fixes
+    (total_slices, chunks_per_slice, chunk_size) once and any mesh can
+    execute the pending slice set in waves of its own size.
+    """
+    want_chunks = num_devices * slices_per_device * lanes_per_device
+    T, C, _ = chunk_geometry(n, want_chunks)
+    ts = num_devices * slices_per_device
+    ts = 1 << int(math.ceil(math.log2(ts)))
+    while ts > 1 and (T % ts != 0 or T // ts < 1):
+        ts //= 2
+    return ts, T // ts, C

@@ -1,0 +1,141 @@
+"""Campaign CLI: drive one huge permanent as a resumable step-space job.
+
+    PYTHONPATH=src python -m repro.launch.campaign --n 40 \
+        --checkpoint job.npz                  # run until done (or killed)
+    PYTHONPATH=src python -m repro.launch.campaign --n 40 \
+        --checkpoint job.npz                  # ... rerun: resumes
+    PYTHONPATH=src python -m repro.launch.campaign --n 40 \
+        --checkpoint job.npz --max-waves 4    # budgeted: exit 3 if pending
+
+The run goes through the plan/execute stack: the planner routes the
+matrix to the ``step_sharded`` campaign route (``--threshold`` is forced
+negative by default so even small test matrices campaign), the executor's
+``CampaignBackend`` runs waves of ``slice_sums_on_mesh`` over a flat
+("step",) mesh and checkpoints after every wave.  One ``[campaign] wave``
+line is printed per wave, AFTER the checkpoint is durable -- a SIGKILL
+any time after the first such line loses at most the in-flight wave, and
+the resumed run is bitwise-identical to an uninterrupted one at any
+device count (tests/test_campaign.py kills this CLI mid-wave to prove
+it).
+
+Exit codes: 0 value printed, 3 paused by --max-waves with slices pending.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+__all__ = ["campaign_main"]
+
+
+def _load_matrix(args) -> np.ndarray:
+    rng = np.random.default_rng(args.seed)
+    if args.matrix:
+        return np.load(args.matrix)
+    if args.family == "allones":
+        return np.full((args.n, args.n), 1.0)
+    if args.family == "fibonacci":
+        A = np.zeros((args.n, args.n))
+        for i in range(args.n):
+            for j in range(args.n):
+                if abs(i - j) <= 1:
+                    A[i, j] = 1.0
+        return A
+    A = rng.uniform(0.2, 1.2, (args.n, args.n))
+    if args.complex:
+        A = A + 1j * rng.uniform(0.2, 1.2, (args.n, args.n))
+    return A
+
+
+def campaign_main(argv=None) -> int:
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--matrix", help=".npy file with a square matrix")
+    ap.add_argument("--n", type=int, default=20)
+    ap.add_argument("--family", choices=("allones", "fibonacci"))
+    ap.add_argument("--complex", action="store_true",
+                    help="random complex matrix (with --n)")
+    ap.add_argument("--checkpoint", required=True,
+                    help="JobState .npz (created, appended, resumed)")
+    ap.add_argument("--precision", default="dq_acc",
+                    choices=("dd", "dq_fast", "dq_acc", "qq", "kahan"))
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
+                    help="per-device wave body")
+    ap.add_argument("--slices", type=int, default=64,
+                    help="slice-count target (plan_slices)")
+    ap.add_argument("--lanes", type=int, default=1024,
+                    help="chunk-count target (plan_slices)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="use only the first N visible devices")
+    ap.add_argument("--max-waves", type=int, default=None,
+                    help="pause (exit 3) after this many waves")
+    ap.add_argument("--threshold", type=float, default=-1.0,
+                    help="campaign_threshold (default -1: always campaign)")
+    ap.add_argument("--preprocess", action="store_true",
+                    help="enable DM/FM (default off: campaign the matrix "
+                         "as-is so the checkpoint geometry is the whole "
+                         "step space)")
+    ap.add_argument("--plan-json", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from jax.sharding import Mesh
+
+    from ..core.distributed import CampaignPaused
+    from ..core.solver import PermanentSolver, SolverConfig
+
+    A = _load_matrix(args)
+    n = A.shape[0]
+    avail = jax.devices()
+    D = len(avail) if args.devices is None else int(args.devices)
+    if not 1 <= D <= len(avail):
+        raise SystemExit(f"need 1 <= --devices <= {len(avail)}, got {D}")
+    mesh = Mesh(np.array(avail[:D]), ("step",))
+
+    solver = PermanentSolver(SolverConfig(
+        precision=args.precision,
+        backend=args.backend if args.backend == "pallas" else "jnp",
+        preprocess=args.preprocess,
+        campaign_threshold=args.threshold,
+        campaign_slices=args.slices, campaign_lanes=args.lanes,
+        campaign_checkpoint=args.checkpoint,
+        campaign_max_waves=args.max_waves), distributed_ctx=mesh)
+    t0 = time.time()
+
+    def progress(state):
+        # printed AFTER the wave's checkpoint hit disk: the kill/resume
+        # harness SIGKILLs on the first of these lines knowing the
+        # recorded progress is durable
+        print(f"[campaign] wave done={state.fraction_done():.4f} "
+              f"pending={len(state.pending_slices())} "
+              f"t={time.time() - t0:.2f}s", flush=True)
+
+    solver.campaign_progress = progress
+    plan = solver.plan(A)
+    print(f"[campaign] n={n} devices={D} {plan.summary()}", flush=True)
+    if args.plan_json:
+        print(plan.json(indent=2), flush=True)
+
+    try:
+        val = solver.execute(plan)
+    except CampaignPaused as e:
+        print(f"[campaign] paused: {e}", flush=True)
+        return 3
+    dt = time.time() - t0
+    # %.17e round-trips float64 exactly: the kill/resume tests compare
+    # these printed values bitwise
+    if isinstance(val, complex):
+        print(f"[campaign] perm(A) = {val.real:+.17e} {val.imag:+.17e}j"
+              f"   ({dt:.2f}s)", flush=True)
+    else:
+        print(f"[campaign] perm(A) = {val:+.17e}   ({dt:.2f}s)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(campaign_main())

@@ -9,11 +9,13 @@ device count.
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 
 __all__ = ["make_production_mesh", "make_local_mesh", "make_batch_mesh",
-           "mesh_device_count"]
+           "CampaignMesh", "make_campaign_mesh", "mesh_device_count"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -49,6 +51,45 @@ def make_batch_mesh(num_devices: int | None = None):
     if not 1 <= n <= len(avail):
         raise ValueError(f"need 1 <= num_devices <= {len(avail)}, got {n}")
     return Mesh(np.array(avail[:n]), ("data",))
+
+
+@dataclass(frozen=True)
+class CampaignMesh:
+    """2D (batch x step) device grid for mixed serving + campaign traffic.
+
+    ``mesh`` is the full ``("batch", "step")`` grid; ``batch_mesh`` (the
+    grid's first column) serves ``distributed_batch`` bucket flushes and
+    ``step_mesh`` (the grid's first row) runs step-space campaign waves.
+    The two sub-meshes overlap only at grid[0, 0] -- on this
+    host-reproduction setup that corner device time-slices between the
+    two roles, which is exactly the contention the serve loop's
+    wave-between-flushes interleaving amortizes.  On real hardware the
+    step extent dwarfs the batch extent (one big matrix, many devices).
+    """
+    mesh: Any          # jax.sharding.Mesh, ("batch", "step")
+    batch_mesh: Any    # ("batch",) sub-mesh: bucket traffic
+    step_mesh: Any     # ("step",) sub-mesh: campaign waves
+
+
+def make_campaign_mesh(batch: int, step: int) -> CampaignMesh:
+    """Carve the first ``batch * step`` visible devices into a 2D grid
+    whose step axis runs a resumable campaign while the batch axis keeps
+    serving bucket flushes (ROADMAP: 2D batch x step sharding)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    avail = jax.devices()
+    if batch < 1 or step < 1:
+        raise ValueError(f"need batch >= 1 and step >= 1, got "
+                         f"{batch}x{step}")
+    if batch * step > len(avail):
+        raise ValueError(f"mesh {batch}x{step} needs {batch * step} "
+                         f"devices, only {len(avail)} visible")
+    grid = np.array(avail[:batch * step]).reshape(batch, step)
+    return CampaignMesh(
+        mesh=Mesh(grid, ("batch", "step")),
+        batch_mesh=Mesh(grid[:, 0], ("batch",)),
+        step_mesh=Mesh(grid[0, :], ("step",)))
 
 
 def mesh_device_count(mesh) -> int:

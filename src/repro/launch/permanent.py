@@ -9,9 +9,13 @@
 Matrix sources: --matrix <.npy>, --n <random dense>, --sparse-n/--density
 (random sparse), --family allones|fibonacci (known-permanent families).
 
-Non-distributed runs go through the plan/execute API: the CLI prints the
-``ExecutionPlan`` summary (leaves, routes, buckets, step estimate) before
-dispatching, and ``--plan-json`` dumps the whole serialized plan.
+EVERY backend -- distributed included -- goes through the plan/execute
+API: the CLI prints the ``ExecutionPlan`` summary (leaves, routes,
+buckets, step estimate) before dispatching, and ``--plan-json`` dumps the
+whole serialized plan.  ``--checkpoint`` turns the run into a resumable
+step-space campaign (forces the ``step_sharded`` route unless
+``--campaign-threshold`` overrides it); dedicated campaign driving lives
+in ``repro.launch.campaign``.
 """
 
 from __future__ import annotations
@@ -21,7 +25,6 @@ import time
 
 import numpy as np
 
-from ..core.distributed import DistributedPermanent
 from ..core.oracle import all_ones_permanent
 from ..core.solver import PermanentSolver, SolverConfig
 from .mesh import make_local_mesh
@@ -69,7 +72,16 @@ def permanent_main(argv=None) -> int:
     ap.add_argument("--backend", default="jnp",
                     choices=("jnp", "pallas", "distributed"))
     ap.add_argument("--no-preprocess", action="store_true")
-    ap.add_argument("--checkpoint", help="resumable job state (.npz)")
+    ap.add_argument("--checkpoint", help="resumable job state (.npz); "
+                    "forces the step_sharded campaign route")
+    ap.add_argument("--campaign-threshold", type=float, default=None,
+                    help="step-cost estimate above which a leaf becomes a "
+                         "resumable campaign (default: forced with "
+                         "--checkpoint, 2^34 otherwise)")
+    ap.add_argument("--slices", type=int, default=64,
+                    help="campaign slice-count target (plan_slices)")
+    ap.add_argument("--lanes", type=int, default=1024,
+                    help="campaign chunk-count target (plan_slices)")
     ap.add_argument("--chunks", type=int, default=4096)
     ap.add_argument("--plan-json", action="store_true",
                     help="dump the full ExecutionPlan as JSON before "
@@ -84,23 +96,25 @@ def permanent_main(argv=None) -> int:
           f"backend={args.backend}")
 
     t0 = time.time()
-    if args.backend == "distributed":
-        mesh = make_local_mesh()
-        runner = DistributedPermanent(mesh, precision=args.precision,
-                                      checkpoint_path=args.checkpoint)
-        val = runner.permanent(
-            A, progress_cb=lambda s: print(
-                f"[superman] {s.fraction_done():6.1%} done", flush=True))
-        report = None
-    else:
-        solver = PermanentSolver(SolverConfig(
-            precision=args.precision, backend=args.backend,
-            preprocess=not args.no_preprocess, num_chunks=args.chunks))
-        plan = solver.plan(A)
-        print(f"[superman] {plan.summary()}")
-        if args.plan_json:
-            print(plan.json(indent=2))
-        val, report = solver.execute(plan, return_report=True)
+    threshold = args.campaign_threshold
+    if threshold is None:
+        # --checkpoint means "this run must be resumable" -> campaign
+        threshold = -1.0 if args.checkpoint \
+            else SolverConfig().campaign_threshold
+    ctx = make_local_mesh() if args.backend == "distributed" else None
+    solver = PermanentSolver(SolverConfig(
+        precision=args.precision, backend=args.backend,
+        preprocess=not args.no_preprocess, num_chunks=args.chunks,
+        campaign_threshold=threshold, campaign_slices=args.slices,
+        campaign_lanes=args.lanes, campaign_checkpoint=args.checkpoint),
+        distributed_ctx=ctx)
+    solver.campaign_progress = lambda s: print(
+        f"[superman] {s.fraction_done():6.1%} done", flush=True)
+    plan = solver.plan(A)
+    print(f"[superman] {plan.summary()}")
+    if args.plan_json:
+        print(plan.json(indent=2))
+    val, report = solver.execute(plan, return_report=True)
     dt = time.time() - t0
 
     if isinstance(val, complex):

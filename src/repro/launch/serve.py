@@ -113,7 +113,12 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
                           precision: str = "dq_acc", backend: str = "jnp",
                           repeat_pool: int = 0, deadline_s: float = 0.05,
                           cache: bool = True, mesh=None,
-                          complex_entries: bool = False, seed: int = 0):
+                          complex_entries: bool = False, seed: int = 0,
+                          campaign_matrix=None, campaign_mesh=None,
+                          campaign_waves: int = 1,
+                          campaign_checkpoint: str | None = None,
+                          campaign_slices: int = 64,
+                          campaign_lanes: int = 1024):
     """Drain a synthetic permanent-request stream through the solver queue.
 
     ``requests`` random n x n matrices (dense, or sparse when
@@ -130,6 +135,14 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
     mesh's devices instead of running on one.  Returns perms/sec and
     per-flush latency stats; the first flush (compile) is reported
     separately.
+
+    With ``campaign_matrix`` set, a long-running step-space campaign for
+    that single huge matrix (checkpointed via ``campaign_checkpoint``)
+    advances ``campaign_waves`` waves on ``campaign_mesh`` after every
+    bucket flush -- the 2D batch x step picture: the batch axis keeps
+    serving the request stream while the step axis grinds through one
+    n >= 40 permanent -- then runs to completion once the stream drains.
+    The result dict gains ``campaign_fraction`` / ``campaign_value``.
     """
     from ..core.solver import PermanentSolver, SolverConfig
 
@@ -162,6 +175,37 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
         precision=precision, backend=backend, cache=cache,
         queue_max_batch=batch, queue_max_delay_s=deadline_s),
         distributed_ctx=mesh)
+
+    # -- interleaved step-space campaign (2D batch x step sharding) -----
+    camp = {"state": None, "value": None}
+    if campaign_matrix is not None:
+        from ..core.distributed import run_campaign
+        from ..core.stepspace import plan_slices
+        cmat = np.asarray(campaign_matrix)
+        if campaign_mesh is None:
+            from jax.sharding import Mesh
+            campaign_mesh = Mesh(np.array(jax.devices()), ("step",))
+        ts, cps, C = plan_slices(cmat.shape[0], campaign_slices, 1,
+                                 campaign_lanes)
+
+        def _advance_campaign(waves):
+            """Run up to ``waves`` campaign waves (None = to completion);
+            state threads across calls so each flush resumes in place."""
+            if campaign_state_done():
+                return
+            val, st = run_campaign(
+                cmat, campaign_mesh, total_slices=ts,
+                chunks_per_slice=cps, chunk_size=C, precision=precision,
+                checkpoint_path=campaign_checkpoint,
+                state=camp["state"], max_waves=waves)
+            camp["state"], camp["value"] = st, val
+
+        def campaign_state_done():
+            return camp["value"] is not None
+    else:
+        def _advance_campaign(waves):
+            return
+
     lat = []                     # (seconds, served requests) per flush
     reqs = []
     t_all = time.time()
@@ -171,12 +215,16 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
         reqs.append(solver.submit(M))
         if solver.flushes > served_before:   # this submit triggered a flush
             lat.append((time.time() - t0, batch))
+            # the step axis advances while the batch axis is between
+            # flushes -- the big job progresses without stalling serving
+            _advance_campaign(campaign_waves)
     tail = solver.pending
     tail_s = 0.0
     if tail:
         t0 = time.time()
         solver.flush()
         tail_s = time.time() - t0
+    _advance_campaign(None)      # stream drained: finish the campaign
     total_s = time.time() - t_all
     values = np.array([r.result() for r in reqs], dtype=np.complex128)
     # steady state excludes the first flush (compile) and the ragged tail
@@ -185,7 +233,10 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
     steady_s = sum(s for s, _ in steady)
     steady_n = sum(c for _, c in steady)
     stats = solver.stats()
+    camp_frac = camp["state"].fraction_done() if camp["state"] else None
     return {"values": values if complex_entries else np.real(values),
+            "campaign_value": camp["value"],
+            "campaign_fraction": camp_frac,
             "total_s": total_s,
             "compile_batch_s": lat[0][0] if lat else tail_s,
             "steady_batch_s": steady_s / max(1, len(steady)),
@@ -227,28 +278,62 @@ def serve_main(argv=None) -> int:
     ap.add_argument("--backend", default="jnp",
                     choices=("jnp", "pallas", "distributed"))
     ap.add_argument("--mesh", nargs="?", const="auto", default=None,
-                    metavar="N",
+                    metavar="N|BxS",
                     help="permanent mode: shard flushed buckets over a "
                          "N-device ('data',) mesh (default: all devices; "
-                         "implies --backend distributed).  Force host "
-                         "devices with XLA_FLAGS="
+                         "implies --backend distributed).  BxS (e.g. 2x4) "
+                         "builds a 2D (batch x step) CampaignMesh: the "
+                         "batch column serves buckets, the step row runs "
+                         "--campaign waves.  Force host devices with "
+                         "XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8")
+    ap.add_argument("--campaign", metavar="NPY|N", default=None,
+                    help="permanent mode: advance a step-space campaign "
+                         "for this matrix (.npy path, or an integer for a "
+                         "random NxN) between bucket flushes")
+    ap.add_argument("--campaign-checkpoint", default=None,
+                    help="JobState .npz for the --campaign job")
+    ap.add_argument("--campaign-waves", type=int, default=1,
+                    help="campaign waves to run per bucket flush")
     args = ap.parse_args(argv)
     if args.mode == "permanent":
         jax.config.update("jax_enable_x64", True)
         mesh = None
-        if args.mesh is not None:
+        campaign_mesh = None
+        if args.mesh is not None and "x" in str(args.mesh):
+            from .mesh import make_campaign_mesh
+            b, s = (int(v) for v in str(args.mesh).lower().split("x"))
+            cm = make_campaign_mesh(b, s)
+            mesh, campaign_mesh = cm.batch_mesh, cm.step_mesh
+            print(f"[serve] 2D campaign mesh {b}x{s}: buckets on the "
+                  f"{b}-device batch column, campaign waves on the "
+                  f"{s}-device step row")
+        elif args.mesh is not None:
             from .mesh import make_batch_mesh
             mesh = make_batch_mesh(
                 None if args.mesh == "auto" else int(args.mesh))
             print(f"[serve] batch-sharding buckets over "
                   f"{mesh.devices.size}-device mesh {mesh.axis_names}")
+        campaign_matrix = None
+        if args.campaign is not None:
+            if args.campaign.isdigit():
+                cn = int(args.campaign)
+                campaign_matrix = np.random.default_rng(7).uniform(
+                    0.2, 1.2, (cn, cn))
+            else:
+                campaign_matrix = np.load(args.campaign)
+            print(f"[serve] campaign: n={campaign_matrix.shape[0]} "
+                  f"ckpt={args.campaign_checkpoint} "
+                  f"waves/flush={args.campaign_waves}")
         out = run_permanent_serving(
             n=args.perm_n, batch=args.batch, requests=args.requests,
             density=args.density, precision=args.precision,
             backend=args.backend, repeat_pool=args.repeat_pool,
             deadline_s=args.deadline_ms / 1e3, cache=args.cache, mesh=mesh,
-            complex_entries=args.complex_entries)
+            complex_entries=args.complex_entries,
+            campaign_matrix=campaign_matrix, campaign_mesh=campaign_mesh,
+            campaign_waves=args.campaign_waves,
+            campaign_checkpoint=args.campaign_checkpoint)
         print(f"[serve] permanents: {args.requests} "
               f"{'complex ' if args.complex_entries else ''}reqs "
               f"x n={args.perm_n} batch={args.batch} backend="
@@ -264,6 +349,11 @@ def serve_main(argv=None) -> int:
                   f"{out['cache']['misses']} misses "
                   f"(hit rate {out['cache']['hit_rate']:.1%}), "
                   f"{out['device_dispatches']} device dispatches")
+        if out["campaign_fraction"] is not None:
+            cv = out["campaign_value"]
+            vtxt = "pending" if cv is None else f"{cv:+.17e}"
+            print(f"[serve] campaign: {out['campaign_fraction']:.1%} done, "
+                  f"perm = {vtxt}")
         return 0
     out = run_serving(args.arch, prompt_len=args.prompt_len, gen=args.gen,
                       batch=args.batch, reduced=args.reduced)

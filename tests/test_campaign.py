@@ -1,0 +1,308 @@
+"""Step-space campaign route: planning, execution, kill/resume identity.
+
+Fast tests exercise the planner's ``step_sharded`` routing, the
+``CampaignBackend`` numerics on one device, the JobState config-safety
+contract and the sentinel wave padding in-process.  The slow tests drive
+the ``repro.launch.campaign`` CLI in subprocesses -- SIGKILL mid-wave at
+one forced device count, resume at another -- and assert the printed
+value is bitwise-identical to an uninterrupted run, per precision mode,
+real and complex (XLA_FLAGS must be set before jax initializes, hence
+subprocesses; the main test process keeps 1 device).
+"""
+
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import distributed, oracle, resume
+from repro.core.planner import ROUTE_CAMPAIGN, SolverConfig, build_plan
+from repro.core.solver import PermanentSolver
+from repro.core.stepspace import chunk_geometry, plan_slices
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _campaign_cfg(**kw):
+    base = dict(preprocess=False, campaign_threshold=1.0,
+                campaign_slices=8, campaign_lanes=8)
+    base.update(kw)
+    return SolverConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+
+def test_plan_routes_large_leaf_to_campaign():
+    A = np.random.default_rng(0).uniform(0.2, 1.0, (10, 10))
+    plan = build_plan([A], _campaign_cfg(), batched=False)
+    (leaf,) = plan.leaves
+    assert leaf.route == ROUTE_CAMPAIGN
+    spec = leaf.campaign
+    assert spec is not None
+    assert spec.total_slices * spec.chunks_per_slice * spec.chunk_size \
+        == 1 << 9
+    assert spec.backend == "jnp" and spec.precision == plan.precision
+    # the spec is part of the serialized plan and the summary
+    j = plan.to_json()
+    assert j["leaves"][0]["campaign"]["total_slices"] == spec.total_slices
+    assert "step_sharded" in plan.summary()
+
+
+def test_plan_threshold_none_disables_campaign():
+    A = np.random.default_rng(0).uniform(0.2, 1.0, (10, 10))
+    plan = build_plan([A], _campaign_cfg(campaign_threshold=None),
+                      batched=False)
+    assert plan.leaves[0].route == "dense"
+    assert plan.leaves[0].campaign is None
+
+
+def test_plan_fingerprint_sees_campaign_spec():
+    A = np.random.default_rng(0).uniform(0.2, 1.0, (10, 10))
+    p1 = build_plan([A], _campaign_cfg(), batched=False)
+    p2 = build_plan([A], _campaign_cfg(), batched=False)
+    p3 = build_plan([A], _campaign_cfg(campaign_lanes=16), batched=False)
+    assert p1 == p2
+    assert p1 != p3          # different slice geometry -> different plan
+
+
+def test_stepspace_decomposition_invariants():
+    for n in (8, 12, 20, 33):
+        for slices in (1, 8, 64):
+            ts, cps, C = plan_slices(n, slices, 1, 32)
+            assert ts * cps * C == 1 << (n - 1)
+            assert C >= 2 and (C & (C - 1)) == 0
+        T, C, k = chunk_geometry(n, 64)
+        assert T * C == 1 << (n - 1) and C == 1 << k
+
+
+# ---------------------------------------------------------------------------
+# execution (single device)
+# ---------------------------------------------------------------------------
+
+def test_campaign_backend_matches_oracle_real():
+    A = np.random.default_rng(1).uniform(0.2, 1.0, (10, 10))
+    ref = oracle.perm_ryser_exact(A)
+    solver = PermanentSolver(_campaign_cfg())
+    plan = solver.plan(A)
+    assert plan.leaves[0].route == ROUTE_CAMPAIGN
+    got = solver.execute(plan)
+    np.testing.assert_allclose(got, ref, rtol=1e-10)
+
+
+def test_campaign_backend_matches_oracle_complex():
+    rng = np.random.default_rng(2)
+    C = rng.uniform(0.2, 1.0, (8, 8)) + 1j * rng.uniform(0.2, 1.0, (8, 8))
+    ref = oracle.perm_ryser_exact(C)
+    solver = PermanentSolver(_campaign_cfg())
+    got = solver.execute(solver.plan(C))
+    np.testing.assert_allclose(got, ref, rtol=1e-10)
+
+
+def test_campaign_pause_resume_through_solver(tmp_path):
+    A = np.random.default_rng(3).uniform(0.2, 1.0, (10, 10))
+    ckpt = str(tmp_path / "job.npz")
+    # 64 slices: a 2-wave budget cannot finish the campaign even when
+    # XLA_FLAGS forces a multi-device host (wave size == device count)
+    cfg = _campaign_cfg(campaign_checkpoint=ckpt, campaign_slices=64,
+                        campaign_lanes=2)
+    budgeted = PermanentSolver(cfg.replace(campaign_max_waves=2))
+    with pytest.raises(distributed.CampaignPaused):
+        budgeted.execute(budgeted.plan(A))
+    st = resume.JobState.load(ckpt)
+    assert 0 < st.fraction_done() < 1
+    # a fresh solver resumes from the checkpoint and matches an
+    # uninterrupted run bitwise
+    resumed = PermanentSolver(cfg)
+    got = resumed.execute(resumed.plan(A))
+    clean = PermanentSolver(_campaign_cfg(campaign_slices=64,
+                                          campaign_lanes=2))
+    ref = clean.execute(clean.plan(A))
+    assert np.float64(got) == np.float64(ref)
+
+
+def test_sentinel_slices_contribute_exact_zero():
+    # wave padding regression: idle lanes carry slice id -1 and must be
+    # masked to exactly 0.0, never recompute slice 0
+    A = np.random.default_rng(4).uniform(0.2, 1.0, (10, 10))
+    mesh = jax.make_mesh((1,), ("step",))
+    ts, cps, C = plan_slices(10, 1, 4, 8)
+    his, los = distributed.slice_sums_on_mesh(
+        A, mesh, np.array([-1], dtype=np.int32),
+        chunks_per_slice=cps, chunk_size=C)
+    assert his[0] == 0.0 and los[0] == 0.0
+    real0, reallo0 = distributed.slice_sums_on_mesh(
+        A, mesh, np.array([0], dtype=np.int32),
+        chunks_per_slice=cps, chunk_size=C)
+    assert real0[0] != 0.0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint config safety
+# ---------------------------------------------------------------------------
+
+def _one_wave(A, ckpt, **kw):
+    mesh = jax.make_mesh((1,), ("step",))
+    ts, cps, C = plan_slices(A.shape[0], 8, 1, 8)
+    args = dict(total_slices=ts, chunks_per_slice=cps, chunk_size=C,
+                max_waves=1)
+    args.update(kw)
+    return distributed.run_campaign(A, mesh, checkpoint_path=ckpt, **args)
+
+
+def test_checkpoint_rejects_config_mismatch(tmp_path):
+    A = np.random.default_rng(5).uniform(0.2, 1.0, (10, 10))
+    ckpt = str(tmp_path / "job.npz")
+    val, st = _one_wave(A, ckpt)
+    assert val is None and st.fraction_done() > 0
+    for bad in (dict(precision="dd"), dict(backend="pallas"),
+                dict(chunk_size=4, chunks_per_slice=2 * st.chunks_per_slice)):
+        with pytest.raises(ValueError, match="config mismatch"):
+            _one_wave(A, ckpt, **bad)
+    # different total_slices fails on the slice count, not silently
+    with pytest.raises(ValueError):
+        mesh = jax.make_mesh((1,), ("step",))
+        distributed.run_campaign(
+            A, mesh, total_slices=2 * st.total_slices,
+            chunks_per_slice=st.chunks_per_slice // 2,
+            chunk_size=st.chunk_size, checkpoint_path=ckpt)
+    # and the matching config still resumes fine
+    val2, _ = _one_wave(A, ckpt, max_waves=None)
+    assert val2 is not None
+
+
+def test_checkpoint_rejects_preversion_format(tmp_path):
+    # a seed-format (v1) checkpoint has no version/config fields
+    p = str(tmp_path / "old.npz")
+    np.savez(p, fingerprint="abc", total_slices=4,
+             done=np.zeros(4, bool), hi=np.zeros(4), lo=np.zeros(4))
+    with pytest.raises(ValueError, match="config-safety"):
+        resume.JobState.load(p)
+
+
+def test_jobstate_persists_config_fields(tmp_path):
+    A = np.random.default_rng(6).uniform(0.2, 1.0, (8, 8))
+    st = resume.JobState.create(A, 4, precision="kahan", backend="pallas",
+                                chunks_per_slice=2, chunk_size=16)
+    p = str(tmp_path / "s.npz")
+    st.save(p)
+    st2 = resume.JobState.load(p)
+    assert (st2.precision, st2.backend) == ("kahan", "pallas")
+    assert (st2.chunks_per_slice, st2.chunk_size) == (2, 16)
+    assert st2.version == resume.FORMAT_VERSION
+
+
+def test_load_pytree_rejects_dtype_mismatch(tmp_path):
+    from repro.ckpt import checkpoint as ck
+    p = str(tmp_path / "t.npz")
+    tree = {"w": np.ones((3, 3), np.float32)}
+    ck.save_pytree(p, tree)
+    # same shape, different dtype: must fail loudly, not silently cast
+    template = {"w": np.ones((3, 3), np.float64)}
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        ck.load_pytree(p, template)
+    # matching template still round-trips
+    got, _ = ck.load_pytree(p, tree)
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# kill/resume bitwise identity (subprocess, forced device counts)
+# ---------------------------------------------------------------------------
+
+def _cli_env(devices: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    return env
+
+
+def _cli(args, devices):
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.campaign", *args],
+        env=_cli_env(devices), capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr[-3000:]
+    return r.stdout
+
+
+def _value_of(out: str) -> str:
+    # compare the %.17e-printed value as a string: exact round-trip of
+    # the float64 (pair), i.e. bitwise comparison across processes
+    for line in out.splitlines():
+        if "perm(A) =" in line:
+            return line.split("perm(A) =")[1].split("  (")[0].strip()
+    raise AssertionError(f"no value line in output:\n{out}")
+
+
+def _run_and_kill_mid_wave(args, devices):
+    """Start the CLI, SIGKILL it right after its first durable wave."""
+    p = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.campaign", *args],
+        env=_cli_env(devices), stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT, text=True)
+    try:
+        for line in p.stdout:
+            if "[campaign] wave" in line:
+                # the line prints only after its checkpoint hit disk
+                os.kill(p.pid, signal.SIGKILL)
+                break
+        p.wait(timeout=120)
+    finally:
+        p.stdout.close()
+        if p.poll() is None:
+            p.kill()
+            p.wait(timeout=120)
+
+
+CASES = [
+    (False, "dd"), (False, "dq_acc"), (False, "kahan"),
+    (True, "dq_acc"), (True, "qq"),
+]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("use_complex,precision", CASES)
+def test_sigkill_resume_bitwise_identical(tmp_path, use_complex, precision):
+    ckpt = str(tmp_path / "job.npz")
+    base = ["--n", "16", "--slices", "64", "--lanes", "8",
+            "--precision", precision, "--seed", "9"]
+    if use_complex:
+        base.append("--complex")
+
+    # reference: uninterrupted run on 8 devices
+    ref = _value_of(_cli([*base, "--checkpoint",
+                          str(tmp_path / "ref.npz")], devices=8))
+
+    # kill mid-campaign on a 2-device mesh (32 waves: the SIGKILL lands
+    # with most slices still pending)
+    _run_and_kill_mid_wave([*base, "--checkpoint", ckpt, "--devices", "2"],
+                           devices=8)
+    st = resume.JobState.load(ckpt)
+    assert 0 < st.fraction_done() < 1, "kill landed outside the campaign"
+    # the checkpoint records the EFFECTIVE precision (complex qq plans
+    # execute under kahan -- the planner's documented downgrade)
+    expect = "kahan" if use_complex and precision == "qq" else precision
+    assert st.precision == expect
+
+    # resume under a DIFFERENT device count; value must match bitwise
+    got = _value_of(_cli([*base, "--checkpoint", ckpt], devices=8))
+    assert got == ref, (got, ref)
+
+
+@pytest.mark.slow
+def test_campaign_cli_pause_exit_code(tmp_path):
+    ckpt = str(tmp_path / "job.npz")
+    args = ["--n", "14", "--slices", "16", "--lanes", "8",
+            "--checkpoint", ckpt, "--max-waves", "1"]
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.campaign", *args],
+        env=_cli_env(4), capture_output=True, text=True, timeout=600)
+    assert r.returncode == 3, r.stdout + r.stderr[-2000:]
+    assert "paused" in r.stdout
+    assert resume.JobState.load(ckpt).fraction_done() < 1
