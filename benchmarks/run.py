@@ -42,7 +42,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default="",
                     help="comma list: table3,table4,table5,fig7,batch,"
                          "solver_cache,batch_sharding,batch_complex,"
-                         "batch_sparse,campaign,roofline")
+                         "batch_sparse,campaign,soak,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="smaller n (CI-sized)")
     ap.add_argument("--check", action="store_true",
@@ -58,8 +58,8 @@ def main(argv=None) -> int:
 
     from . import (batch_complex, batch_sharding, batch_sparse,
                    batch_throughput, campaign_resume, fig7_scaling,
-                   roofline_report, solver_cache, table3_precision,
-                   table4_dense, table5_sparse)
+                   roofline_report, serve_soak, solver_cache,
+                   table3_precision, table4_dense, table5_sparse)
 
     t0 = time.time()
     if not only or "batch" in only:
@@ -121,6 +121,16 @@ def main(argv=None) -> int:
         if args.check and not campaign_resume.check(rows):
             print("# campaign gate RED -- campaign below 0.9x direct "
                   "mesh throughput or resume not bitwise-identical")
+            return 1
+    if not only or "soak" in only:
+        # two cold subprocesses sharing a compile-cache dir: Poisson
+        # service soak + the no-retrace-storm cold-start property
+        rows = serve_soak.run(
+            requests=24 if args.fast else serve_soak.REQUESTS)
+        print_rows("serve_soak", rows)
+        if args.check and not serve_soak.check(rows):
+            print("# serve_soak gate RED -- SLO, typed-shed, metrics "
+                  "consistency, or warm-compile-cache cold start failed")
             return 1
     if not only or "table3" in only:
         if args.fast:

@@ -58,6 +58,9 @@ print(f"cache after re-solve: {cs['hits']} hits / {cs['misses']} misses "
 # --- 4. the async request queue: serving traffic ---------------------------
 # submit() accumulates requests in size buckets; a bucket flushes when it
 # reaches queue_max_batch or its oldest request ages past the deadline.
+# (For production traffic, the layer above this queue is
+# repro.serve.PermanentService -- continuous batching, priority lanes,
+# typed load-shedding, SLO metrics; see examples/service.py.)
 qsolver = PermanentSolver(SolverConfig(queue_max_batch=4,
                                        queue_max_delay_s=0.5))
 reqs = [qsolver.submit(rng.uniform(-1, 1, (8, 8))) for _ in range(10)]

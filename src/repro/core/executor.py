@@ -49,6 +49,7 @@ Returns per-matrix totals plus :class:`PermanentReport`s and an
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -64,7 +65,7 @@ from .planner import (ROUTE_CAMPAIGN, ROUTE_DENSE, ROUTE_INLINE,
 __all__ = ["Backend", "JnpBackend", "PallasBackend", "DistributedBackend",
            "DistributedBatchBackend", "CampaignBackend",
            "register_backend", "get_backend", "available_backends",
-           "ExecStats", "execute_plan"]
+           "ExecStats", "LeafTiming", "execute_plan"]
 
 
 def _ctx_mesh(ctx):
@@ -84,6 +85,38 @@ def _scalar(v) -> complex | float:
 
 
 @dataclass
+class LeafTiming:
+    """Wall-clock accounting for one dispatch-site key.
+
+    One key is one (route, n, producing-backend) device program family,
+    e.g. ``dense_batch(n=12,jnp)`` or ``sparse(n=9,pallas)``; ``count``
+    is device dispatches, ``leaves`` the leaf results they produced
+    (a bucket dispatch serves many leaves).
+    """
+    count: int = 0
+    leaves: int = 0
+    total_s: float = 0.0
+    max_s: float = 0.0
+
+    def add(self, seconds: float, leaves: int = 1) -> None:
+        self.count += 1
+        self.leaves += leaves
+        self.total_s += seconds
+        self.max_s = max(self.max_s, seconds)
+
+    def merge(self, other: "LeafTiming") -> None:
+        self.count += other.count
+        self.leaves += other.leaves
+        self.total_s += other.total_s
+        self.max_s = max(self.max_s, other.max_s)
+
+    def to_json(self) -> dict:
+        return {"count": self.count, "leaves": self.leaves,
+                "total_s": self.total_s, "max_s": self.max_s,
+                "mean_s": self.total_s / self.count if self.count else 0.0}
+
+
+@dataclass
 class ExecStats:
     """What one execute_plan call actually did (for tests/benchmarks)."""
     device_dispatches: int = 0       # scalar leaf calls + bucket programs
@@ -93,6 +126,14 @@ class ExecStats:
     cache_hits: int = 0
     cache_misses: int = 0
     downgrades: list[str] = field(default_factory=list)
+    # per-dispatch-site wall-clock timing (serve/metrics.py exports these
+    # through the one snapshot schema; PermanentSolver.stats() aggregates
+    # them across calls as ``leaf_timings``)
+    timings: dict[str, LeafTiming] = field(default_factory=dict)
+
+    def record_time(self, key: str, seconds: float,
+                    leaves: int = 1) -> None:
+        self.timings.setdefault(key, LeafTiming()).add(seconds, leaves)
 
 
 # ---------------------------------------------------------------------------
@@ -412,12 +453,20 @@ def _run_leaf(leaf: LeafTask, plan: ExecutionPlan, backend: Backend,
             stats.downgrades.append(tag)
         report.dispatch.append(tag)
         sp = S.SparseMatrix.from_dense(leaf.matrix)
+        t0 = time.perf_counter()
         val = backend.sparse(sp, precision=plan.precision,
                              num_chunks=cfg.num_chunks, ctx=ctx)
+        stats.record_time(f"sparse(n={n},{produced})",
+                          time.perf_counter() - t0)
     else:
+        produced = backend.value_backend(ROUTE_DENSE, n, batched=False,
+                                         ctx=ctx)
         report.dispatch.append(f"dense(n={n})")
+        t0 = time.perf_counter()
         val = backend.dense(leaf.matrix, precision=plan.precision,
                             num_chunks=cfg.num_chunks, ctx=ctx)
+        stats.record_time(f"dense(n={n},{produced})",
+                          time.perf_counter() - t0)
     stats.device_dispatches += 1
     stats.scalar_leaves += 1
     return val
@@ -504,11 +553,14 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
         reports[leaf.owner].dispatch.append(
             f"step_sharded(n={leaf.n},slices={spec.total_slices},"
             f"{spec.backend})")
+        t0 = time.perf_counter()
         val = get_backend("campaign").campaign(
             leaf.matrix, spec, ctx=distributed_ctx,
             checkpoint_path=campaign_ckpt(leaf),
             progress_cb=campaign_progress,
             max_waves=cfg.campaign_max_waves)
+        stats.record_time(f"step_sharded(n={leaf.n},{spec.backend})",
+                          time.perf_counter() - t0)
         stats.device_dispatches += 1
         stats.scalar_leaves += 1
         return val
@@ -598,6 +650,7 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
             totals[leaf.owner] += leaf.coef * complex(val)
             continue
         tag = f"{route}_batch(n={n},b={len(leaves)})"
+        t_bucket = time.perf_counter()
         if route == ROUTE_DENSE:
             stack = np.stack([l.matrix for l in leaves])
             vals = backend.dense_batch(stack, precision=plan.precision,
@@ -624,6 +677,9 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
                 bname = _FALLBACK
         stats.device_dispatches += 1
         stats.batched_leaves += len(leaves)
+        stats.record_time(f"{route}_batch(n={n},{bname})",
+                          time.perf_counter() - t_bucket,
+                          leaves=len(leaves))
         vals = np.asarray(vals)
         for leaf, v in zip(leaves, vals):
             v = _scalar(v)

@@ -86,6 +86,11 @@ class SolverConfig:
     cache_entries: int = 4096        # LRU capacity of the result cache
     queue_max_batch: int = 32        # flush a size bucket at this depth
     queue_max_delay_s: float = 0.05  # ... or when its oldest request ages out
+    # Injected time source for the queue's deadline triggers (None =
+    # time.monotonic).  Queue policy only -- it decides WHEN buckets
+    # flush, never what is computed -- so it is excluded from plan
+    # fingerprints, equality, and to_json (callables aren't JSON).
+    clock: Any = field(default=None, compare=False, repr=False)
 
     def replace(self, **kw) -> "SolverConfig":
         return replace(self, **kw)
@@ -238,8 +243,10 @@ class ExecutionPlan:
         def _num(x):
             x = complex(x)
             return x.real if x.imag == 0 else [x.real, x.imag]
+        cfg = asdict(self.config)
+        cfg.pop("clock", None)       # queue-policy callable, not JSON
         return {
-            "config": asdict(self.config),
+            "config": cfg,
             "batched": self.batched,
             "is_complex": self.is_complex,
             "precision": self.precision,

@@ -43,10 +43,21 @@ from typing import Any, Callable, Sequence
 import numpy as np
 
 from .cache import ResultCache
-from .executor import ExecStats, execute_plan
+from .executor import ExecStats, LeafTiming, execute_plan
 from .planner import ExecutionPlan, PermanentReport, SolverConfig, build_plan
 
-__all__ = ["PermanentSolver", "PermanentRequest", "SolverConfig"]
+__all__ = ["PermanentSolver", "PermanentRequest", "SolverConfig",
+           "SolverError"]
+
+
+class SolverError(RuntimeError):
+    """Typed failure from the solver's queue/flush machinery.
+
+    Raised (instead of a bare ``assert``, which vanishes under
+    ``python -O``) when a bucket flush fails to resolve every queued
+    request -- the message names the bucket and the pending count so an
+    always-on service can log and shed instead of dying opaquely.
+    """
 
 
 class PermanentRequest:
@@ -69,7 +80,12 @@ class PermanentRequest:
         """
         if not self.done:
             self._solver._flush_bucket(self.n)
-        assert self.done, "bucket flush must resolve every queued request"
+        if not self.done:
+            _, reqs = self._solver._queue.get(self.n, (0.0, []))
+            raise SolverError(
+                f"flush of size bucket n={self.n} left "
+                f"{len(reqs)} request(s) unresolved (this future among "
+                f"them) -- bucket flush must resolve every queued request")
         return self.value
 
     def _resolve(self, value, report) -> None:
@@ -83,7 +99,7 @@ class PermanentSolver:
 
     def __init__(self, config: SolverConfig | None = None, *,
                  distributed_ctx: Any | None = None,
-                 clock: Callable[[], float] = time.monotonic,
+                 clock: Callable[[], float] | None = None,
                  **overrides):
         config = config or SolverConfig()
         if overrides:
@@ -92,7 +108,10 @@ class PermanentSolver:
         self.distributed_ctx = distributed_ctx
         self.cache = ResultCache(config.cache_entries) if config.cache \
             else None
-        self._clock = clock
+        # clock precedence: explicit kwarg > SolverConfig.clock > monotonic
+        # (injectable so deadline behavior is deterministic under test)
+        self._clock = clock if clock is not None \
+            else (config.clock or time.monotonic)
         # size-keyed request queue: n -> (first-enqueue time, requests)
         self._queue: dict[int, tuple[float, list[PermanentRequest]]] = {}
         self._stats = ExecStats()
@@ -100,6 +119,12 @@ class PermanentSolver:
         # optional JobState -> None callback fired after every
         # checkpointed wave of a step_sharded (campaign) leaf
         self.campaign_progress: Callable | None = None
+        # admission/flush observability hooks (serve/metrics.py installs
+        # these): on_submit(request) fires after a request is enqueued
+        # (before any flush it triggers); on_flush(n, served, seconds)
+        # fires after a bucket flush resolves its futures
+        self.on_submit: Callable[[PermanentRequest], None] | None = None
+        self.on_flush: Callable[[int, int, float], None] | None = None
 
     # -- plan ---------------------------------------------------------------
 
@@ -150,6 +175,8 @@ class PermanentSolver:
         t0, reqs = self._queue.setdefault(A.shape[0],
                                           (self._clock(), []))
         reqs.append(req)
+        if self.on_submit is not None:
+            self.on_submit(req)
         if len(reqs) >= self.config.queue_max_batch:
             self._flush_bucket(A.shape[0])
         self.poll()
@@ -179,12 +206,15 @@ class PermanentSolver:
             return 0
         # plan + execute BEFORE dequeuing: if either raises, the bucket
         # stays queued and the pending futures remain resolvable
+        t0 = time.perf_counter()
         plan = self.plan_batch([r.matrix for r in reqs])
         _, reports = self.execute(plan, return_report=True)
         self._queue.pop(n, None)
         for req, report in zip(reqs, reports):
             req._resolve(report.value, report)
         self.flushes += 1
+        if self.on_flush is not None:
+            self.on_flush(n, len(reqs), time.perf_counter() - t0)
         return len(reqs)
 
     # -- accounting ---------------------------------------------------------
@@ -198,15 +228,27 @@ class PermanentSolver:
         t.cache_hits += s.cache_hits
         t.cache_misses += s.cache_misses
         t.downgrades.extend(s.downgrades)
+        for key, lt in s.timings.items():
+            t.timings.setdefault(key, LeafTiming()).merge(lt)
 
     def stats(self) -> dict:
-        """Dispatch + cache + queue accounting for the session."""
+        """Dispatch + cache + queue accounting for the session.
+
+        ``leaf_timings`` aggregates the executor's per-leaf device timing
+        by dispatch-site key (``dense_batch(n=12,jnp)`` -> count / leaves
+        / total_s / max_s) -- the same shape ``serve.metrics`` exports in
+        its snapshot schema, so benchmarks and the service log line read
+        identical counters.
+        """
         out = {"device_dispatches": self._stats.device_dispatches,
                "batched_leaves": self._stats.batched_leaves,
                "scalar_leaves": self._stats.scalar_leaves,
                "inline_leaves": self._stats.inline_leaves,
                "downgrades": list(self._stats.downgrades),
                "flushes": self.flushes,
-               "pending": self.pending}
+               "pending": self.pending,
+               "leaf_timings": {k: t.to_json()
+                                for k, t in sorted(
+                                    self._stats.timings.items())}}
         out["cache"] = self.cache.stats() if self.cache else None
         return out

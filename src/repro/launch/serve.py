@@ -7,6 +7,9 @@
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.serve --mode permanent \
         --perm-n 12 --batch 64 --requests 256 --mesh 8
+    PYTHONPATH=src python -m repro.launch.serve --mode permanent --soak \
+        --perm-n 12 --batch 8 --rate 50 --compile-cache .xla-cache \
+        --metrics-port 0 --metrics-json soak.json
 
 LM mode builds the serve bundle (KV sharding policy chosen per arch/mesh),
 prefills a synthetic prompt batch, then decodes greedily.  Permanent mode
@@ -33,7 +36,8 @@ from ..models.model import ShapeCell, build
 from ..train.train_step import build_serve_steps
 from .mesh import make_local_mesh
 
-__all__ = ["serve_main", "run_serving", "run_permanent_serving"]
+__all__ = ["serve_main", "run_serving", "run_permanent_serving",
+           "run_permanent_soak"]
 
 
 def run_serving(arch: str, *, prompt_len: int = 64, gen: int = 32,
@@ -143,8 +147,18 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
     serving the request stream while the step axis grinds through one
     n >= 40 permanent -- then runs to completion once the stream drains.
     The result dict gains ``campaign_fraction`` / ``campaign_value``.
+
+    Since PR 7 this is a thin wrapper over
+    :class:`repro.serve.PermanentService` in ``fill_first`` mode (bucket
+    quantization off), which reproduces the PR 6 solver-queue flush
+    composition exactly: each bucket reaches ``plan_batch`` with the
+    same matrices in the same order, so results are bitwise identical to
+    the old direct-queue implementation.  The open-loop continuous-
+    batching path is :func:`run_permanent_soak`.
     """
-    from ..core.solver import PermanentSolver, SolverConfig
+    from ..core.solver import SolverConfig
+    from ..serve import (CampaignSpec, LaneSpec, PermanentService,
+                         ServiceConfig)
 
     if batch < 1 or requests < 1:
         raise ValueError(f"need batch >= 1 and requests >= 1, got "
@@ -171,81 +185,138 @@ def run_permanent_serving(*, n: int = 10, batch: int = 32,
     else:
         mats = [draw() for _ in range(requests)]
 
-    solver = PermanentSolver(SolverConfig(
-        precision=precision, backend=backend, cache=cache,
-        queue_max_batch=batch, queue_max_delay_s=deadline_s),
-        distributed_ctx=mesh)
-
-    # -- interleaved step-space campaign (2D batch x step sharding) -----
-    camp = {"state": None, "value": None}
+    campaign = None
     if campaign_matrix is not None:
-        from ..core.distributed import run_campaign
-        from ..core.stepspace import plan_slices
-        cmat = np.asarray(campaign_matrix)
-        if campaign_mesh is None:
-            from jax.sharding import Mesh
-            campaign_mesh = Mesh(np.array(jax.devices()), ("step",))
-        ts, cps, C = plan_slices(cmat.shape[0], campaign_slices, 1,
-                                 campaign_lanes)
+        campaign = CampaignSpec(matrix=campaign_matrix, mesh=campaign_mesh,
+                                waves=campaign_waves,
+                                checkpoint=campaign_checkpoint,
+                                slices=campaign_slices,
+                                lanes=campaign_lanes)
+    svc = PermanentService(
+        SolverConfig(precision=precision, backend=backend, cache=cache,
+                     queue_max_batch=batch, queue_max_delay_s=deadline_s),
+        ServiceConfig(max_batch=batch, fill_first=True,
+                      quantize_buckets=False, deadline_s=deadline_s,
+                      lanes=(LaneSpec("default", 0, slo_s=None),),
+                      max_queue_depth=2 ** 62, log_every_s=float("inf")),
+        distributed_ctx=mesh, campaign=campaign, log=None)
 
-        def _advance_campaign(waves):
-            """Run up to ``waves`` campaign waves (None = to completion);
-            state threads across calls so each flush resumes in place."""
-            if campaign_state_done():
-                return
-            val, st = run_campaign(
-                cmat, campaign_mesh, total_slices=ts,
-                chunks_per_slice=cps, chunk_size=C, precision=precision,
-                checkpoint_path=campaign_checkpoint,
-                state=camp["state"], max_waves=waves)
-            camp["state"], camp["value"] = st, val
-
-        def campaign_state_done():
-            return camp["value"] is not None
-    else:
-        def _advance_campaign(waves):
-            return
-
-    lat = []                     # (seconds, served requests) per flush
-    reqs = []
+    tickets = []
     t_all = time.time()
     for M in mats:
-        served_before = solver.flushes
-        t0 = time.time()
-        reqs.append(solver.submit(M))
-        if solver.flushes > served_before:   # this submit triggered a flush
-            lat.append((time.time() - t0, batch))
-            # the step axis advances while the batch axis is between
-            # flushes -- the big job progresses without stalling serving
-            _advance_campaign(campaign_waves)
-    tail = solver.pending
+        tickets.append(svc.submit(M, deadline_s=None))
+        # one tick per arrival: in fill_first mode this dispatches only
+        # full or deadline-aged buckets -- the PR 6 flush triggers; the
+        # campaign's step axis advances after each dispatch
+        svc.step()
+    tail = svc.pending
     tail_s = 0.0
     if tail:
         t0 = time.time()
-        solver.flush()
+        svc.drain(finish_campaign=False)
         tail_s = time.time() - t0
-    _advance_campaign(None)      # stream drained: finish the campaign
+    svc._advance_campaign(None)  # stream drained: finish the campaign
     total_s = time.time() - t_all
-    values = np.array([r.result() for r in reqs], dtype=np.complex128)
-    # steady state excludes the first flush (compile) and the ragged tail
-    # (a never-before-seen bucket width pays a one-off retrace)
+    values = np.array([t.result() for t in tickets], dtype=np.complex128)
+    # steady state excludes the first dispatch (compile) and the ragged
+    # tail (a never-before-seen bucket width pays a one-off retrace)
+    lat = [(dt, served) for _, served, dt, trig in svc.dispatch_log
+           if trig in ("size", "age")]
     steady = lat[1:] if len(lat) > 1 else lat
     steady_s = sum(s for s, _ in steady)
     steady_n = sum(c for _, c in steady)
-    stats = solver.stats()
-    camp_frac = camp["state"].fraction_done() if camp["state"] else None
+    stats = svc.solver.stats()
     return {"values": values if complex_entries else np.real(values),
-            "campaign_value": camp["value"],
-            "campaign_fraction": camp_frac,
+            "campaign_value": svc.campaign_value,
+            "campaign_fraction": svc.campaign_fraction,
             "total_s": total_s,
             "compile_batch_s": lat[0][0] if lat else tail_s,
             "steady_batch_s": steady_s / max(1, len(steady)),
             "tail_s": tail_s,
             "perms_per_s": steady_n / steady_s if steady_s else 0.0,
-            "batches": len(lat) + (1 if tail else 0),
+            "batches": len(svc.dispatch_log),
             "cache": stats["cache"],
             "downgrades": stats["downgrades"],
-            "device_dispatches": stats["device_dispatches"]}
+            "device_dispatches": stats["device_dispatches"],
+            "snapshot": svc.snapshot()}
+
+
+def run_permanent_soak(*, n: int = 12, batch: int = 8, requests: int = 64,
+                       rate_hz: float = 50.0, density: float = 1.0,
+                       precision: str = "dq_acc", backend: str = "jnp",
+                       repeat_pool: int = 8, complex_entries: bool = False,
+                       seed: int = 0, mesh=None, slo_ms: float | None = None,
+                       compile_cache: str | None = None,
+                       warmup: bool = True, expire_every: int = 0,
+                       metrics_port: int | None = None,
+                       metrics_json: str | None = None,
+                       campaign_matrix=None, campaign_mesh=None,
+                       campaign_waves: int = 1,
+                       campaign_checkpoint: str | None = None,
+                       log=print):
+    """Open-loop soak of the continuous-batching service (``--soak``).
+
+    Unlike :func:`run_permanent_serving` (closed-loop, PR 6 flush
+    semantics), this drives :class:`repro.serve.PermanentService` in
+    continuous mode under Poisson arrivals at ``rate_hz``: partial
+    buckets dispatch whenever the device is free, padded up the
+    power-of-two ladder; lane SLOs shed late work with typed reasons;
+    ``compile_cache``/``warmup`` give a cold process a compile-free
+    first bucket.  ``metrics_port`` serves the snapshot as JSON over
+    HTTP while the soak runs; ``metrics_json`` writes the final snapshot
+    to a file.  Returns the ``run_soak`` dict (snapshot + tickets).
+    """
+    import json as _json
+
+    from ..core.solver import SolverConfig
+    from ..serve import (CampaignSpec, PermanentService, ServiceConfig,
+                         run_soak, start_metrics_server)
+
+    from ..serve import DEFAULT_LANES, LaneSpec
+
+    if mesh is not None and backend not in ("distributed",
+                                            "distributed_batch"):
+        backend = "distributed"
+    if slo_ms is None:
+        lanes = DEFAULT_LANES
+    else:
+        # one knob scales both lanes; bulk keeps its 15x-looser ratio
+        lanes = (LaneSpec("interactive", 0, slo_s=slo_ms / 1e3),
+                 LaneSpec("bulk", 1, slo_s=15 * slo_ms / 1e3))
+    campaign = None
+    if campaign_matrix is not None:
+        campaign = CampaignSpec(matrix=campaign_matrix, mesh=campaign_mesh,
+                                waves=campaign_waves,
+                                checkpoint=campaign_checkpoint)
+    svc = PermanentService(
+        SolverConfig(precision=precision, backend=backend),
+        ServiceConfig(max_batch=batch, lanes=lanes,
+                      compile_cache_dir=compile_cache,
+                      warmup_ns=(n,) if warmup else (),
+                      warmup_complex=complex_entries, log_every_s=5.0),
+        distributed_ctx=mesh, campaign=campaign, log=log)
+    if svc.warmup_report and log:
+        wr = svc.warmup_report
+        log(f"[serve] warmup: {wr['geometries']} geometries in "
+            f"{wr['seconds']:.1f}s, compile cache {wr['compile']}")
+    server = None
+    if metrics_port is not None:
+        server = start_metrics_server(svc.snapshot, port=metrics_port)
+        if log:
+            log(f"[serve] metrics on http://127.0.0.1:"
+                f"{server.server_address[1]}/metrics")
+    try:
+        out = run_soak(svc, requests=requests, rate_hz=rate_hz, n=n,
+                       density=density, complex_entries=complex_entries,
+                       repeat_pool=repeat_pool, seed=seed,
+                       expire_every=expire_every)
+    finally:
+        if server is not None:
+            server.shutdown()
+    if metrics_json:
+        with open(metrics_json, "w") as f:
+            _json.dump(out["snapshot"], f, indent=1)
+    return out
 
 
 def serve_main(argv=None) -> int:
@@ -295,6 +366,24 @@ def serve_main(argv=None) -> int:
                     help="JobState .npz for the --campaign job")
     ap.add_argument("--campaign-waves", type=int, default=1,
                     help="campaign waves to run per bucket flush")
+    ap.add_argument("--soak", action="store_true",
+                    help="permanent mode: open-loop Poisson soak of the "
+                         "continuous-batching service instead of the "
+                         "closed-loop queue drain")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="soak: Poisson arrival rate (requests/s)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="soak: interactive-lane SLO/deadline (default: "
+                         "lane defaults, 2s interactive / 30s bulk)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="soak: persistent XLA compilation cache dir")
+    ap.add_argument("--no-warmup", dest="warmup", action="store_false",
+                    help="soak: skip the kernel-geometry warm-up pass")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="soak: serve the metrics snapshot as JSON on "
+                         "this port (0 = ephemeral) while running")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="soak: write the final metrics snapshot here")
     args = ap.parse_args(argv)
     if args.mode == "permanent":
         jax.config.update("jax_enable_x64", True)
@@ -325,6 +414,34 @@ def serve_main(argv=None) -> int:
             print(f"[serve] campaign: n={campaign_matrix.shape[0]} "
                   f"ckpt={args.campaign_checkpoint} "
                   f"waves/flush={args.campaign_waves}")
+        if args.soak:
+            out = run_permanent_soak(
+                n=args.perm_n, batch=args.batch, requests=args.requests,
+                rate_hz=args.rate, density=args.density,
+                precision=args.precision, backend=args.backend,
+                repeat_pool=args.repeat_pool or 8,
+                complex_entries=args.complex_entries, mesh=mesh,
+                slo_ms=args.slo_ms, compile_cache=args.compile_cache,
+                warmup=args.warmup, metrics_port=args.metrics_port,
+                metrics_json=args.metrics_json,
+                campaign_matrix=campaign_matrix,
+                campaign_mesh=campaign_mesh,
+                campaign_waves=args.campaign_waves,
+                campaign_checkpoint=args.campaign_checkpoint)
+            snap = out["snapshot"]
+            req = snap["requests"]
+            lat = snap["latency_s"]["overall"]
+            print(f"[serve] soak: {req['admitted']} reqs @ "
+                  f"{args.rate:.0f}/s -> {req['completed']} done, "
+                  f"{req['shed_total']} shed {dict(req['shed'])}, "
+                  f"p50 {lat['p50'] * 1e3:.0f}ms p99 "
+                  f"{lat['p99'] * 1e3:.0f}ms, "
+                  f"{snap['dispatches']} dispatches (mean occupancy "
+                  f"{snap['bucket_occupancy']['mean']:.2f})")
+            if snap["campaign_fraction"] is not None:
+                print(f"[serve] campaign: "
+                      f"{snap['campaign_fraction']:.1%} done")
+            return 0
         out = run_permanent_serving(
             n=args.perm_n, batch=args.batch, requests=args.requests,
             density=args.density, precision=args.precision,

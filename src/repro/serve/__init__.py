@@ -1,0 +1,34 @@
+"""Always-on permanent service: continuous batching, priority lanes,
+SLOs, and observability over the PR 1-6 plan/execute solver stack.
+
+    from repro.serve import PermanentService, ServiceConfig
+
+    svc = PermanentService(SolverConfig(precision="dq_acc"),
+                           ServiceConfig(max_batch=32,
+                                         warmup_ns=(10,),
+                                         compile_cache_dir=".xla-cache"))
+    t = svc.submit(A, lane="interactive")
+    svc.drain()
+    print(t.result(), svc.snapshot()["latency_s"]["overall"]["p99"])
+
+Layering: ``lanes`` (admission mechanism: priority lanes, deadlines,
+typed shedding) -> ``loop`` (the service: continuous batching, back-
+pressure, campaign interleaving) -> ``metrics`` (one snapshot schema) +
+``compile_cache`` (persistent XLA cache + warm-up).  ``launch/serve.py``
+is the CLI over this package.
+"""
+
+from .compile_cache import (compile_stats, enable_compile_cache,
+                            quantized_batches, warmup)
+from .lanes import (DEFAULT_LANES, LaneQueue, LaneSpec, ServeTicket,
+                    ShedError, ShedReason, request_cost)
+from .loop import CampaignSpec, PermanentService, ServiceConfig, run_soak
+from .metrics import Histogram, ServeMetrics, start_metrics_server
+
+__all__ = [
+    "CampaignSpec", "DEFAULT_LANES", "Histogram", "LaneQueue", "LaneSpec",
+    "PermanentService", "ServeMetrics", "ServeTicket", "ServiceConfig",
+    "ShedError", "ShedReason", "compile_stats", "enable_compile_cache",
+    "quantized_batches", "request_cost", "run_soak",
+    "start_metrics_server", "warmup",
+]
