@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Static-analysis gate (ISSUE 8): permlint (the repo's determinism &
+# precision invariants, see docs/INVARIANTS.md) + the geometry auditor
+# (kernel/plan shape validation, no device work) + a ruff pyflakes
+# baseline when ruff is installed (the offline dev image may not have
+# it; CI installs it).
+#
+#   scripts/lint.sh [--no-jax]      # --no-jax skips the auditor's
+#                                   # jax-importing audits
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== permlint (invariants as lint rules)"
+python -m repro.analysis.lint src tests
+
+echo "== geometry auditor (static plan/kernel validation)"
+python -m repro.analysis.geometry --check "$@"
+
+if command -v ruff >/dev/null 2>&1; then
+    echo "== ruff (pyflakes + E9 baseline, pyproject.toml)"
+    ruff check src tests benchmarks
+else
+    echo "== ruff not installed; skipping the baseline layer" \
+         "(permlint's PLF01/PLE901 cover the F401/E9 classes)"
+fi

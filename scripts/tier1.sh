@@ -6,5 +6,6 @@
 #   scripts/tier1.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
+bash scripts/lint.sh
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -q -m "not slow" "$@"

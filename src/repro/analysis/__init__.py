@@ -1,0 +1,21 @@
+"""permlint: the repo's determinism & precision invariants as lint rules.
+
+Two jax-free AST passes plus one static plan/kernel auditor:
+
+* ``rules.py``   -- the rule registry (PL001..PL006 + pyflakes-class
+  hygiene rules), each encoding one hard-won invariant from PRs 3-7.
+* ``lint.py``    -- the walker and ``python -m repro.analysis.lint`` CLI:
+  human/JSON output, ``# permlint: disable=RULE`` inline suppressions
+  (inventoried in the report, never hidden), and the orphan-module
+  inventory over the import graph.
+* ``geometry.py`` -- the static plan/kernel auditor: enumerates every
+  registered executor route and validates kernel geometry, VMEM block
+  budgets, step-space coverage and sentinel masking of padded lanes via
+  ``kernel_geometry``/``jax.eval_shape`` -- no device work.
+
+``docs/INVARIANTS.md`` catalogs each rule and the postmortem behind it.
+"""
+
+from .rules import RULES, Finding, Rule  # noqa: F401
+
+__all__ = ["RULES", "Finding", "Rule"]

@@ -1,0 +1,352 @@
+"""Static plan/kernel auditor: ``python -m repro.analysis.geometry --check``.
+
+The AST rules in ``rules.py`` police *source*; this module polices the
+*numbers the source produces* -- kernel geometry, VMEM block budgets,
+step-space coverage, sentinel masking, and the executor's route registry
+-- entirely on the host.  Nothing here dispatches a device program:
+shape validation of the Pallas entry points goes through
+``jax.eval_shape`` (abstract evaluation only) and the wave-formation
+audit replays ``run_campaign``'s slice bookkeeping on a host ``JobState``
+with synthetic partials.  That is exactly the layer where the PR 6
+slice-0-recompute bug lived, so a regression of that shape fails here at
+lint time instead of in a multi-hour campaign.
+
+Audits (each returns a list of violation strings; empty = pass):
+
+* ``audit_kernel_geometry``  -- ``kernel_geometry`` invariants: every
+  component a power of two, ``TB * C * num_blocks == 2^{n-1}``,
+  ``2 <= Wu <= C``, over a spread of n and tiling configs.
+* ``audit_vmem_budget``      -- per-block VMEM estimate from the actual
+  BlockSpec shapes (A, xb, C0 schedule matrix, the X lane state and the
+  window matmul workspace) against the ~16 MB/core budget.
+* ``audit_step_coverage``    -- ``chunk_geometry`` / ``plan_slices``
+  products exactly tile the 2^{n-1} step space at every device count.
+* ``audit_sentinel_masking`` -- host replay of the campaign wave loop:
+  every slice recorded exactly once, sentinel (-1) padded lanes
+  discarded, straggler re-queue never double-records.
+* ``audit_routes``           -- every registered backend resolves
+  ``value_backend`` to a registered producer for both routes, batched
+  and scalar, across the n spread (the result-cache identity closure).
+* ``audit_eval_shape``       -- ``jax.eval_shape`` over the dense
+  real/complex Pallas entries: (hi, lo) partials come back as
+  ``(num_blocks, 2)`` / ``(B, num_blocks, 2|4)`` with the input's real
+  dtype, proving the launch geometry composes before any compile.
+
+The jax-importing audits are split out so ``--no-jax`` (and the lint.py
+import) stay usable in a bare interpreter.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+__all__ = ["audit_kernel_geometry", "audit_vmem_budget",
+           "audit_step_coverage", "audit_sentinel_masking",
+           "audit_routes", "audit_eval_shape", "run_audits", "main"]
+
+# The n spread: small enough to stay fast, wide enough to cross every
+# geometry regime (clamped tiny-n tiles, the lane knee at TB=lanes, and
+# multi-block step spaces past steps_per_chunk saturation).
+N_SPREAD = (3, 4, 5, 6, 8, 10, 12, 14, 16, 20, 24, 30)
+
+# (lanes, steps_per_chunk, window) tilings worth auditing: the default,
+# a narrow-lane config, and a wide-window config.
+TILINGS = ((128, 64, 16), (32, 64, 8), (128, 256, 32))
+
+# VMEM budget per core (bytes).  The TPU guide gives ~16 MiB of VMEM per
+# core; kernels must leave headroom for Mosaic's own spills, so audit
+# against half of it.
+VMEM_BYTES = 16 * 1024 * 1024
+VMEM_BUDGET = VMEM_BYTES // 2
+
+_SUBLANE = 8  # f32 sublane quantum (mirrors kernels/ops.py)
+
+
+def _pow2(x: int) -> bool:
+    return x >= 1 and (x & (x - 1)) == 0
+
+
+def _pad(n: int) -> int:
+    return max(_SUBLANE, -(-n // _SUBLANE) * _SUBLANE)
+
+
+# ---------------------------------------------------------------------------
+# jax-free audits
+# ---------------------------------------------------------------------------
+
+def audit_kernel_geometry(ns=N_SPREAD, tilings=TILINGS) -> list[str]:
+    from ..kernels.ryser_pallas import kernel_geometry
+    bad = []
+    for n in ns:
+        space = 1 << (n - 1)
+        for (lanes, spc, window) in tilings:
+            TB, C, Wu, nb = kernel_geometry(
+                n, lanes=lanes, steps_per_chunk=spc, window=window)
+            tag = f"n={n} tiling=({lanes},{spc},{window})"
+            for name, v in (("TB", TB), ("C", C), ("Wu", Wu),
+                            ("num_blocks", nb)):
+                if not _pow2(v):
+                    bad.append(f"{tag}: {name}={v} is not a power of two")
+            if TB * C * nb != space:
+                bad.append(f"{tag}: TB*C*num_blocks = {TB * C * nb} != "
+                           f"2^(n-1) = {space} -- grid does not tile the "
+                           "step space")
+            if not (2 <= Wu <= C):
+                bad.append(f"{tag}: window Wu={Wu} outside [2, C={C}]")
+    return bad
+
+
+def audit_vmem_budget(ns=N_SPREAD, tilings=TILINGS,
+                      itemsize: int = 4) -> list[str]:
+    """Bound the per-block VMEM residency of the dense kernel.
+
+    Counted per block (the BlockSpec shapes in ``ryser_pallas_call`` plus
+    the kernel's live intermediates): A (n_pad, n_pad), xb (n_pad, 1),
+    C0 (n_pad, Wu-1), the lane state X (n_pad, TB), the windowed matmul
+    product D (n_pad, Wu-1), the twofloat accumulator (2 x TB) and the
+    (1, 2) output tile.  Complex doubles the matrix-plane share.
+    """
+    from ..kernels.ryser_pallas import kernel_geometry
+    bad = []
+    for n in ns:
+        n_pad = _pad(n)
+        for (lanes, spc, window) in tilings:
+            TB, C, Wu, nb = kernel_geometry(
+                n, lanes=lanes, steps_per_chunk=spc, window=window)
+            planes = (n_pad * n_pad          # A block
+                      + n_pad                # xb block
+                      + n_pad * (Wu - 1)     # C0 schedule block
+                      + n_pad * TB           # X lane state
+                      + n_pad * (Wu - 1)     # D = A @ C0 workspace
+                      + 2 * TB               # twofloat accumulator
+                      + 2)                   # (1, 2) out tile
+            for kind, mult in (("real", 1), ("complex", 2)):
+                est = planes * mult * itemsize
+                if est > VMEM_BUDGET:
+                    bad.append(
+                        f"n={n} tiling=({lanes},{spc},{window}) {kind}: "
+                        f"block VMEM estimate {est} B exceeds budget "
+                        f"{VMEM_BUDGET} B ({VMEM_BYTES} B/core with "
+                        "Mosaic headroom)")
+    return bad
+
+
+def audit_step_coverage(ns=N_SPREAD) -> list[str]:
+    from ..core.stepspace import chunk_geometry, plan_slices
+    bad = []
+    for n in ns:
+        space = 1 << (n - 1)
+        for nc in (1, 64, 4096, space * 4):
+            T, C, k = chunk_geometry(n, nc)
+            if T * C != space:
+                bad.append(f"chunk_geometry(n={n}, num_chunks={nc}): "
+                           f"T*C = {T * C} != 2^(n-1) = {space}")
+            if not (_pow2(C) and C >= 2 and C == 1 << k):
+                bad.append(f"chunk_geometry(n={n}, num_chunks={nc}): "
+                           f"C={C}, k={k} not a power-of-two chunk >= 2")
+        for D in (1, 2, 4, 8, 32):
+            ts, cps, C = plan_slices(n, D)
+            if ts * cps * C != space:
+                bad.append(f"plan_slices(n={n}, D={D}): ts*cps*C = "
+                           f"{ts * cps * C} != 2^(n-1) = {space} -- "
+                           "campaign slices do not cover the step space")
+            if not (_pow2(C) and C >= 2):
+                bad.append(f"plan_slices(n={n}, D={D}): chunk_size={C} "
+                           "not a power-of-two >= 2")
+    return bad
+
+
+def audit_sentinel_masking(ns=(8, 12), device_counts=(1, 3, 4, 8),
+                           ) -> list[str]:
+    """Replay run_campaign's wave bookkeeping on the host.
+
+    Forms waves exactly like the driver (``pending[:D]`` padded with the
+    -1 sentinel to the device count), records synthetic per-slice
+    partials truncated to ``his[:len(wave)]``, and injects one straggler
+    failure -- then checks every slice is recorded exactly once and the
+    fixed-order reduce sees exactly the synthetic values.  This is the
+    PR 6 slice-0-recompute bug shape, caught without a mesh.
+    """
+    import numpy as np
+
+    from ..core.resume import JobState
+    from ..core.stepspace import plan_slices
+    bad = []
+    for n in ns:
+        for D in device_counts:
+            ts, cps, C = plan_slices(n, min(D, 2))
+            A = np.arange(n * n, dtype=np.float64).reshape(n, n) / n
+            state = JobState.create(A, ts, chunks_per_slice=cps,
+                                    chunk_size=C)
+            recorded: dict[int, float] = {}
+            failed_once = False
+            while True:
+                pending = state.pending_slices()
+                if not pending:
+                    break
+                wave = pending[:D]
+                ids = np.array(wave + [-1] * (D - len(wave)),
+                               dtype=np.int32)
+                if (ids < 0).any() and not (ids[:len(wave)] >= 0).all():
+                    bad.append(f"n={n} D={D}: sentinel leaked into the "
+                               f"live lane prefix: {ids}")
+                    break
+                if not failed_once and len(recorded) > 0:
+                    # straggler: the wave records nothing; its slices
+                    # must stay pending and be re-formed next round
+                    failed_once = True
+                    continue
+                his = np.array([float(s) + 1.0 for s in ids])
+                los = np.zeros_like(his)
+                state.record_wave(wave, his[:len(wave)], los[:len(wave)])
+                for s in wave:
+                    if s in recorded:
+                        bad.append(f"n={n} D={D}: slice {s} recorded "
+                                   "twice -- wave formation re-issued a "
+                                   "completed slice")
+                    recorded[s] = float(s) + 1.0
+            if len(recorded) != ts:
+                bad.append(f"n={n} D={D}: {len(recorded)} of {ts} slices "
+                           "recorded -- coverage hole in wave formation")
+            if not state.done.all():
+                bad.append(f"n={n} D={D}: JobState still has pending "
+                           "slices after the drain loop")
+            got = {i: float(state.hi[i]) for i in range(ts)}
+            want = {i: float(i) + 1.0 for i in range(ts)}
+            if got != want:
+                bad.append(f"n={n} D={D}: recorded partials corrupted by "
+                           "padded lanes (sentinel values crossed into "
+                           f"live slices): {got} != {want}")
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# jax-importing audits (abstract evaluation only -- no device programs)
+# ---------------------------------------------------------------------------
+
+def audit_routes(ns=N_SPREAD) -> list[str]:
+    from ..core.executor import available_backends, get_backend
+    from ..core.planner import ROUTE_DENSE, ROUTE_SPARSE
+    names = available_backends()
+    bad = []
+    required = {"jnp", "pallas", "distributed", "distributed_batch",
+                "campaign"}
+    missing = required - set(names)
+    if missing:
+        bad.append(f"backend registry lost routes: {sorted(missing)} "
+                   f"(registered: {sorted(names)})")
+    for name in names:
+        backend = get_backend(name)
+        for route in (ROUTE_DENSE, ROUTE_SPARSE):
+            for n in ns:
+                for batched in (False, True):
+                    try:
+                        prod = backend.value_backend(route, n,
+                                                     batched=batched)
+                    except Exception as e:  # noqa: BLE001 -- audit surface
+                        bad.append(f"{name}.value_backend({route}, n={n}, "
+                                   f"batched={batched}) raised {e!r}")
+                        continue
+                    if prod not in names:
+                        bad.append(
+                            f"{name}.value_backend({route}, n={n}, "
+                            f"batched={batched}) -> {prod!r} is not a "
+                            "registered backend -- cache keys would "
+                            "carry an unresolvable producer")
+    return bad
+
+
+def audit_eval_shape(ns=(6, 10, 14), batch: int = 3) -> list[str]:
+    """Abstract-evaluate the dense Pallas entries for every route shape.
+
+    ``jax.eval_shape`` traces ``_pallas_values``'s launch (BlockSpecs,
+    grids, the kernel jaxpr) without compiling or running anything, so a
+    grid/BlockSpec mismatch fails here on any host.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.ops import _pallas_values
+    bad = []
+    for n in ns:
+        for dtype, kind in ((jnp.float64, "real"),
+                            (jnp.complex128, "complex")):
+            for batched in (False, True):
+                shape = (batch, n, n) if batched else (n, n)
+                spec = jax.ShapeDtypeStruct(shape, dtype)
+                tag = f"n={n} {kind} batched={batched}"
+                try:
+                    out = jax.eval_shape(
+                        lambda As: _pallas_values(
+                            As, batched=batched, precision="dq_acc",
+                            mode="baseline", lanes=128, steps_per_chunk=64,
+                            window=16, interpret=True),
+                        spec)
+                except Exception as e:  # noqa: BLE001 -- audit surface
+                    bad.append(f"{tag}: eval_shape raised {e!r}")
+                    continue
+                want_shape = (batch,) if batched else ()
+                if out.shape != want_shape:
+                    bad.append(f"{tag}: value shape {out.shape} != "
+                               f"{want_shape}")
+                if (out.dtype != dtype):
+                    bad.append(f"{tag}: value dtype {out.dtype} != {dtype}")
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+AUDITS = (
+    ("kernel-geometry", audit_kernel_geometry, False),
+    ("vmem-budget", audit_vmem_budget, False),
+    ("step-coverage", audit_step_coverage, False),
+    ("sentinel-masking", audit_sentinel_masking, False),
+    ("routes", audit_routes, True),       # True: imports jax
+    ("eval-shape", audit_eval_shape, True),
+)
+
+
+def run_audits(with_jax: bool = True) -> dict[str, list[str]]:
+    results = {}
+    for name, fn, needs_jax in AUDITS:
+        if needs_jax and not with_jax:
+            continue
+        results[name] = fn()
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.geometry",
+        description="static plan/kernel geometry auditor (no device work)")
+    ap.add_argument("--check", action="store_true",
+                    help="run every audit; exit 1 on any violation")
+    ap.add_argument("--no-jax", action="store_true",
+                    help="skip the jax-importing audits (routes, "
+                         "eval-shape)")
+    args = ap.parse_args(argv)
+    if not args.check:
+        ap.print_help()
+        return 2
+
+    if not args.no_jax:
+        # eval_shape must see the dtypes the solver actually plans with
+        import jax
+        jax.config.update("jax_enable_x64", True)
+
+    failures = 0
+    for name, violations in run_audits(with_jax=not args.no_jax).items():
+        status = "ok" if not violations else f"{len(violations)} violation(s)"
+        print(f"geometry: {name}: {status}")
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        failures += len(violations)
+    print(f"geometry: {failures} violation(s) total")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

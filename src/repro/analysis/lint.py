@@ -1,0 +1,334 @@
+"""permlint walker + CLI: ``python -m repro.analysis.lint src tests``.
+
+Jax-free by construction (pure ``ast`` + ``os``): the linter must run in
+a bare interpreter before any heavy dependency imports, and in CI ahead
+of the test matrix.
+
+* Two passes: pass 1 parses every file and builds the cross-file
+  signature index (PL003 needs to know which callees accept which
+  guarded kwargs); pass 2 runs the rule registry per file.
+* ``# permlint: disable=RULE[,RULE...]`` on a flagged line (or on a
+  standalone comment line directly above it) suppresses a finding.
+  Suppressions are INVENTORIED in the report, never hidden: the exit
+  code ignores them, but the human and JSON output count every one, so
+  suppression drift shows up in review.
+* The orphan-module inventory walks the intra-repo import graph from
+  the permanent/solver/serve entry points and reports every module
+  under ``src/repro`` nothing reachable imports -- seed leftovers
+  (``models/``, ``configs/``, ``train/``) that future PRs can retire
+  deliberately.  Informational: orphans never fail the lint.
+
+Exit status: 0 when no unsuppressed findings, 1 otherwise, 2 on usage
+errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import sys
+
+from .rules import RULES, FileContext, Finding, SignatureIndex, run_rules
+
+__all__ = ["lint_paths", "lint_file", "parse_suppressions",
+           "orphan_modules", "main"]
+
+# Deliberately-bad rule fixtures live here; the fixture tests lint them
+# explicitly, the tree-wide walk must skip them.
+DEFAULT_EXCLUDES = ("lint_fixtures",)
+
+# Reachability roots for the orphan inventory: the permanent CLIs, the
+# solver session object, and the always-on serving loop.  launch/serve.py
+# is deliberately NOT a root: its module-level LM imports would mark the
+# seed's models/configs/train tree reachable, which is exactly the
+# leftover surface this inventory exists to expose.
+ENTRY_POINTS = ("repro.launch.permanent", "repro.launch.campaign",
+                "repro.core.solver", "repro.serve.loop",
+                "repro.analysis.lint", "repro.analysis.geometry")
+
+_DIRECTIVE = "# permlint: disable="
+
+
+def iter_py_files(paths, excludes=DEFAULT_EXCLUDES):
+    """Every .py file under ``paths`` (files pass through), sorted."""
+    out = []
+    for path in paths:
+        if os.path.isfile(path):
+            out.append(path)
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in excludes
+                             and not d.startswith(".")
+                             and d != "__pycache__")
+            if any(e in _norm(root) for e in excludes):
+                continue
+            out.extend(os.path.join(root, f) for f in sorted(files)
+                       if f.endswith(".py"))
+    return sorted(set(out))
+
+
+def _norm(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def parse_suppressions(source: str) -> dict[int, set[str]]:
+    """line -> rules disabled there.
+
+    A directive on a code line covers that line; a directive on a
+    comment-only line also covers the line below it (so a justification
+    comment can sit above a long call).
+    """
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        pos = line.find(_DIRECTIVE)
+        if pos < 0:
+            continue
+        spec = line[pos + len(_DIRECTIVE):].split("#")[0]
+        rules = {r.strip() for r in spec.split(",") if r.strip()}
+        out.setdefault(i, set()).update(rules)
+        if line.strip().startswith("#"):
+            out.setdefault(i + 1, set()).update(rules)
+    return out
+
+
+def lint_file(path: str, signatures: SignatureIndex,
+              only: set[str] | None = None,
+              tree: ast.Module | None = None,
+              source: str | None = None):
+    """(active findings, suppressed findings) for one file."""
+    norm = _norm(path)
+    if source is None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+    if tree is None:
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError as e:
+            return [Finding("PLE901", norm, e.lineno or 0, e.offset or 0,
+                            f"syntax error: {e.msg}")], []
+    ctx = FileContext(path=norm, tree=tree, source=source,
+                      signatures=signatures)
+    findings = run_rules(ctx, only=only)
+    disabled = parse_suppressions(source)
+    active, suppressed = [], []
+    for f in findings:
+        if f.rule in disabled.get(f.line, ()):
+            f.suppressed = True
+            suppressed.append(f)
+        else:
+            active.append(f)
+    return active, suppressed
+
+
+def lint_paths(paths, only: set[str] | None = None,
+               excludes=DEFAULT_EXCLUDES):
+    """Lint every file under ``paths``; returns the full report dict."""
+    files = iter_py_files(paths, excludes)
+    parsed: dict[str, tuple] = {}
+    signatures = SignatureIndex()
+    syntax_errors: list[Finding] = []
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError as e:
+            syntax_errors.append(Finding(
+                "PLE901", _norm(path), e.lineno or 0, e.offset or 0,
+                f"syntax error: {e.msg}"))
+            continue
+        parsed[path] = (tree, source)
+        signatures.add(tree)
+
+    findings: list[Finding] = list(syntax_errors)
+    suppressed: list[Finding] = []
+    for path, (tree, source) in parsed.items():
+        active, supp = lint_file(path, signatures, only=only,
+                                 tree=tree, source=source)
+        findings.extend(active)
+        suppressed.extend(supp)
+
+    return {"version": "permlint/1",
+            "files": len(files),
+            "findings": findings,
+            "suppressions": suppressed,
+            "orphans": orphan_modules(paths)}
+
+
+# ---------------------------------------------------------------------------
+# Orphan-module inventory
+# ---------------------------------------------------------------------------
+
+def _module_name(path: str) -> str | None:
+    """'src/repro/core/ryser.py' -> 'repro.core.ryser' (None outside src)."""
+    norm = _norm(path)
+    marker = "src/repro/"
+    pos = norm.rfind(marker)
+    if pos < 0:
+        return None
+    rel = norm[pos + len("src/"):-len(".py")]
+    if rel.endswith("/__init__"):
+        rel = rel[:-len("/__init__")]
+    return rel.replace("/", ".")
+
+
+def _import_edges(tree: ast.Module, modname: str) -> set[str]:
+    """repro.* modules imported anywhere in the file (lazy imports in
+    function bodies included -- they are real runtime edges)."""
+    pkg_parts = modname.split(".")
+    edges: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.startswith("repro"):
+                    edges.add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:           # relative: resolve against modname
+                base = pkg_parts[:-node.level] if node.level <= \
+                    len(pkg_parts) else []
+                mod = ".".join(base + ([node.module] if node.module
+                                       else []))
+            else:
+                mod = node.module or ""
+            if not mod.startswith("repro"):
+                continue
+            edges.add(mod)
+            # `from pkg import name` may bind submodule pkg.name
+            for alias in node.names:
+                edges.add(f"{mod}.{alias.name}")
+    return edges
+
+
+def orphan_modules(paths, roots=ENTRY_POINTS) -> list[str]:
+    """Modules under src/repro unreachable from the entry points."""
+    files = iter_py_files(paths)
+    graph: dict[str, set[str]] = {}
+    for path in files:
+        mod = _module_name(path)
+        if mod is None:
+            continue
+        with open(path, encoding="utf-8") as f:
+            try:
+                tree = ast.parse(f.read(), filename=path)
+            except SyntaxError:
+                continue
+        graph[mod] = _import_edges(tree, mod)
+    if not graph:
+        return []
+
+    def closure(mod: str) -> set[str]:
+        """mod + every package __init__ above it that exists."""
+        out = {mod}
+        parts = mod.split(".")
+        for i in range(1, len(parts)):
+            out.add(".".join(parts[:i + 1]))
+        return out
+
+    reachable: set[str] = set()
+    frontier = [r for r in roots if r in graph]
+    while frontier:
+        mod = frontier.pop()
+        if mod in reachable:
+            continue
+        reachable.add(mod)
+        for edge in graph.get(mod, ()):
+            # an imported name may be a module or an attr; walk up until
+            # a known module matches
+            probe = edge
+            while probe and probe not in graph and "." in probe:
+                probe = probe.rsplit(".", 1)[0]
+            if probe in graph and probe not in reachable:
+                frontier.append(probe)
+            # importing a package runs its __init__, which may import
+            # siblings -- treat the package itself as reachable too
+            for parent in closure(probe if probe in graph else edge):
+                if parent in graph and parent not in reachable:
+                    frontier.append(parent)
+    return sorted(m for m in graph if m not in reachable)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _render(report: dict, show_orphans: bool = True) -> str:
+    lines = []
+    for f in report["findings"]:
+        lines.append(f.render())
+    supp = report["suppressions"]
+    if supp:
+        lines.append(f"suppressions ({len(supp)}):")
+        lines.extend(f"  {s.render()} [suppressed]" for s in supp)
+    if show_orphans and report["orphans"]:
+        orphans = report["orphans"]
+        lines.append(f"orphan modules ({len(orphans)}, informational -- "
+                     f"unreachable from {', '.join(ENTRY_POINTS)}):")
+        lines.extend(f"  {m}" for m in orphans)
+    lines.append(
+        f"permlint: {len(report['findings'])} finding(s), "
+        f"{len(supp)} suppression(s), "
+        f"{len(report['orphans'])} orphan module(s) "
+        f"in {report['files']} file(s)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="permlint: determinism & precision invariants as "
+                    "static analysis (see docs/INVARIANTS.md)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to lint")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--rules", default=None, metavar="PL001,PL004",
+                    help="run only these rules")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered rules and exit")
+    ap.add_argument("--no-orphans", action="store_true",
+                    help="skip the orphan-module inventory")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for rule in RULES.values():
+            scope = ", ".join(rule.scope) if rule.scope else "all files"
+            print(f"{rule.name} [{rule.title}] ({scope})\n"
+                  f"    {rule.invariant}")
+        return 0
+
+    only = None
+    if args.rules:
+        only = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = only - set(RULES) - {"PLE901"}
+        if unknown:
+            print(f"unknown rule(s): {sorted(unknown)}; "
+                  f"registered: {sorted(RULES)}", file=sys.stderr)
+            return 2
+
+    paths = [p for p in args.paths if os.path.exists(p)]
+    missing = set(args.paths) - set(paths)
+    if missing:
+        print(f"path(s) not found: {sorted(missing)}", file=sys.stderr)
+        return 2
+
+    report = lint_paths(paths, only=only)
+    if args.no_orphans:
+        report["orphans"] = []
+    if args.json:
+        print(json.dumps({
+            "version": report["version"],
+            "files": report["files"],
+            "findings": [f.to_json() for f in report["findings"]],
+            "suppressions": [s.to_json() for s in report["suppressions"]],
+            "orphans": report["orphans"],
+        }, indent=1))
+    else:
+        print(_render(report, show_orphans=not args.no_orphans))
+    return 1 if report["findings"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

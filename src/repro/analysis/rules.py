@@ -1,0 +1,503 @@
+"""permlint rules: the determinism & precision invariants, machine-checked.
+
+Every rule here encodes an invariant this repo already paid for with a
+postmortem (see docs/INVARIANTS.md for the full catalog):
+
+* **PL001** fixed-order reductions: raw ``jnp.sum``/``jnp.prod``/
+  ``jnp.dot``/``jnp.matmul`` on accumulation paths reassociate per
+  program shape under XLA and broke bitwise mesh identity in PR 3.
+* **PL002** no ``vmap`` over complex engine bodies: vmap fuses across
+  the batch axis and drifted complex values by ulps between batch
+  extents in PR 4 (``lax.map`` shares the scalar trace).
+* **PL003** kwarg passthrough: tiny-n fallbacks silently dropped
+  ``precision``/``num_chunks`` twice (PRs 5 and 6) -- a function that
+  accepts a guarded kwarg must forward it to every callee that also
+  accepts it.
+* **PL004** injectable clocks: ``time.time``/``time.monotonic`` in
+  ``core/``/``serve/`` outside the ``SolverConfig.clock`` default sites
+  make deadline behavior untestable (PR 7 made all timing injectable).
+* **PL005** config classification: every ``SolverConfig`` field must be
+  explicitly numerics-affecting (``ExecutionPlan._NUMERIC_FIELDS``) or
+  policy (``_POLICY_FIELDS``) so ``fingerprint()`` can never silently
+  ignore a new knob (PR 2's fingerprint bug class).
+* **PL006** cache-key completeness: ``ResultCache.key`` call sites must
+  bind every component including ``backend`` and ``dtype`` -- kernel/jnp
+  values collided in the cache before PR 5 carried the producing
+  backend and leaf dtype.
+
+Plus two pyflakes-class hygiene rules so the tree lints clean without
+external tools (ruff runs on top when installed): **PLF01** unused
+module-level imports, **PLE901** syntax errors (emitted by the walker
+when a file fails to parse).
+
+Rules are pure ``ast`` -- no jax import anywhere in this module -- so
+the linter runs in a bare interpreter and in CI before any heavy deps.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Callable
+
+__all__ = ["Finding", "Rule", "RULES", "SignatureIndex",
+           "GUARDED_KWARGS", "build_signature_index", "run_rules"]
+
+# Kwargs whose silent loss corrupts numerics (the PR 5/6 bug class).
+GUARDED_KWARGS = ("precision", "num_chunks", "backend")
+
+# jnp reductions that XLA reassociates per program shape.
+RAW_REDUCERS = ("sum", "prod", "dot", "matmul")
+
+# Scopes are path fragments matched against '/'-normalized file paths.
+ACCUM_SCOPE = ("core/ryser.py", "core/sparyser.py", "core/distributed.py",
+               "kernels/")
+CLOCK_SCOPE = ("core/", "serve/")
+PLANNER_SCOPE = ("core/planner.py",)
+
+
+@dataclass
+class Finding:
+    """One rule violation (or, when ``suppressed``, an inventoried one)."""
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    suppressed: bool = False
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "suppressed": self.suppressed}
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+
+@dataclass
+class FileContext:
+    """Everything a rule checker sees for one file."""
+    path: str                        # '/'-normalized, repo-relative-ish
+    tree: ast.Module
+    source: str
+    signatures: "SignatureIndex"
+
+
+@dataclass
+class Rule:
+    name: str
+    title: str
+    scope: tuple[str, ...]           # () = every file
+    invariant: str                   # one-liner for --list and the docs
+    check: Callable[[FileContext], list[Finding]]
+
+    def in_scope(self, path: str) -> bool:
+        return not self.scope or any(s in path for s in self.scope)
+
+
+RULES: dict[str, Rule] = {}
+
+
+def _rule(name: str, title: str, scope: tuple[str, ...] = (),
+          invariant: str = ""):
+    def deco(fn):
+        RULES[name] = Rule(name, title, tuple(scope), invariant, fn)
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+# ---------------------------------------------------------------------------
+
+def _dotted(node) -> str | None:
+    """'jnp.sum' / 'jax.numpy.sum' / 'time.monotonic' for an attribute
+    chain rooted at a Name; None for anything fancier."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _names_in(node) -> set[str]:
+    """Every bare Name referenced anywhere under ``node``."""
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+_FUNC_DEFS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _func_params(fn) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+
+
+# ---------------------------------------------------------------------------
+# Signature index (pass 1, feeds PL003)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SignatureIndex:
+    """Guarded-kwarg acceptance per function name across the linted tree.
+
+    ``guarded[name]`` is the set of GUARDED_KWARGS accepted by EVERY
+    definition of ``name`` (intersection: a name defined both with and
+    without ``precision`` is ambiguous at a call site, so it is not
+    checked -- false negatives over false positives).
+    """
+    guarded: dict[str, set[str]] = field(default_factory=dict)
+
+    def add(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if not isinstance(node, _FUNC_DEFS):
+                continue
+            params = set(_func_params(node)) & set(GUARDED_KWARGS)
+            if node.name in self.guarded:
+                self.guarded[node.name] &= params
+            else:
+                self.guarded[node.name] = params
+
+    def accepts(self, name: str) -> set[str]:
+        return self.guarded.get(name, set())
+
+
+def build_signature_index(trees) -> SignatureIndex:
+    idx = SignatureIndex()
+    for tree in trees:
+        idx.add(tree)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# PL001 -- fixed-order reductions on accumulation paths
+# ---------------------------------------------------------------------------
+
+@_rule("PL001", "fixed-order-reduction", scope=ACCUM_SCOPE,
+       invariant="no raw jnp.sum/jnp.prod/jnp.dot/jnp.matmul on engine "
+                 "accumulation paths; use the fixed-order twofloat "
+                 "reducers (tf_tree_sum / chain_prod / kernel_reduce)")
+def _check_raw_reductions(ctx: FileContext) -> list[Finding]:
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if name is None:
+            continue
+        head, _, attr = name.rpartition(".")
+        if attr in RAW_REDUCERS and head in ("jnp", "jax.numpy"):
+            out.append(Finding(
+                "PL001", ctx.path, node.lineno, node.col_offset,
+                f"raw {name}() on an accumulation path -- XLA "
+                f"reassociates it per program shape, breaking bitwise "
+                f"mesh identity; use the fixed-order twofloat reducers "
+                f"or suppress with a shape-stability justification"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PL002 -- no vmap over complex engine bodies
+# ---------------------------------------------------------------------------
+
+@_rule("PL002", "no-vmap-complex", scope=ACCUM_SCOPE,
+       invariant="complex engine bodies batch with lax.map, never vmap "
+                 "(vmap fuses across the batch axis and drifts values "
+                 "by ulps between batch extents)")
+def _check_vmap_complex(ctx: FileContext) -> list[Finding]:
+    out = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, _FUNC_DEFS) or "complex" not in fn.name:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func)
+            if name in ("vmap", "jax.vmap"):
+                out.append(Finding(
+                    "PL002", ctx.path, node.lineno, node.col_offset,
+                    f"{name}() inside complex engine body "
+                    f"{fn.name!r} -- vmap's batch-axis fusion drifts "
+                    f"complex values between batch extents; use "
+                    f"jax.lax.map (shares the scalar trace)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PL003 -- guarded kwarg passthrough
+# ---------------------------------------------------------------------------
+
+def _alias_closure(fn, seed: str) -> set[str]:
+    """Names assigned (directly or transitively) from ``seed`` in ``fn``.
+
+    A light forward dataflow over plain assignments: ``prec = precision
+    if ... else "dq_acc"`` makes ``prec`` count as forwarding
+    ``precision``.  Two fixpoint passes cover chained aliases.
+    """
+    aliases = {seed}
+    for _ in range(2):
+        for node in ast.walk(fn):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            else:
+                continue
+            if _names_in(value) & aliases:
+                for t in targets:
+                    for leaf in ast.walk(t):
+                        if isinstance(leaf, ast.Name):
+                            aliases.add(leaf.id)
+    return aliases
+
+
+def _call_forwards(call: ast.Call, aliases: set[str]) -> bool:
+    """Does any positional/keyword argument reference one of ``aliases``?"""
+    for arg in call.args:
+        if _names_in(arg) & aliases:
+            return True
+    for kw in call.keywords:
+        if kw.arg is None:           # **kwargs splat: assume it forwards
+            return True
+        if _names_in(kw.value) & aliases:
+            return True
+    return False
+
+
+@_rule("PL003", "kwarg-passthrough",
+       invariant="a function accepting precision/num_chunks/backend must "
+                 "forward each to every call whose callee also accepts "
+                 "it (the PR 5/6 silent-drop bug class)")
+def _check_passthrough(ctx: FileContext) -> list[Finding]:
+    out = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, _FUNC_DEFS):
+            continue
+        own = set(_func_params(fn)) & set(GUARDED_KWARGS)
+        if not own:
+            continue
+        alias_cache = {g: _alias_closure(fn, g) for g in own}
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = node.func.attr if isinstance(node.func, ast.Attribute) \
+                else (node.func.id if isinstance(node.func, ast.Name)
+                      else None)
+            if callee is None or callee == fn.name:
+                continue
+            needed = ctx.signatures.accepts(callee) & own
+            for g in sorted(needed):
+                if not _call_forwards(node, alias_cache[g]):
+                    out.append(Finding(
+                        "PL003", ctx.path, node.lineno, node.col_offset,
+                        f"call to {callee}() drops {g!r}: both "
+                        f"{fn.name}() and {callee}() accept it, so the "
+                        f"callee silently runs at its default -- forward "
+                        f"it explicitly"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PL004 -- injectable clocks only
+# ---------------------------------------------------------------------------
+
+@_rule("PL004", "injectable-clock", scope=CLOCK_SCOPE,
+       invariant="no time.time/time.monotonic in core/ or serve/ outside "
+                 "the sanctioned SolverConfig.clock default sites "
+                 "(deadline behavior must be deterministic under test)")
+def _check_wall_clock(ctx: FileContext) -> list[Finding]:
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Attribute):
+            continue
+        name = _dotted(node)
+        if name in ("time.time", "time.monotonic"):
+            out.append(Finding(
+                "PL004", ctx.path, node.lineno, node.col_offset,
+                f"{name} in {ctx.path.split('/')[-2]}/: timing must flow "
+                f"through the injectable SolverConfig.clock (suppress "
+                f"only at the sanctioned default sites)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PL005 -- SolverConfig fields classified for fingerprint()
+# ---------------------------------------------------------------------------
+
+def _class_body(tree: ast.Module, name: str) -> ast.ClassDef | None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def _str_tuple_assign(cls: ast.ClassDef, name: str) -> set[str] | None:
+    """The literal string tuple assigned to ``name`` in a class body."""
+    for node in cls.body:
+        targets = node.targets if isinstance(node, ast.Assign) else \
+            [node.target] if isinstance(node, ast.AnnAssign) else []
+        if not any(isinstance(t, ast.Name) and t.id == name
+                   for t in targets):
+            continue
+        value = node.value
+        if isinstance(value, ast.Tuple) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, str)
+                for e in value.elts):
+            return {e.value for e in value.elts}
+        return None                  # assigned, but not a literal tuple
+    return None
+
+
+@_rule("PL005", "config-classification", scope=PLANNER_SCOPE,
+       invariant="every SolverConfig field is explicitly classified as "
+                 "numerics-affecting (_NUMERIC_FIELDS) or policy "
+                 "(_POLICY_FIELDS) so ExecutionPlan.fingerprint() can "
+                 "never silently ignore a new knob")
+def _check_config_classified(ctx: FileContext) -> list[Finding]:
+    cfg = _class_body(ctx.tree, "SolverConfig")
+    plan = _class_body(ctx.tree, "ExecutionPlan")
+    if cfg is None or plan is None:
+        return []
+    fields = {node.target.id for node in cfg.body
+              if isinstance(node, ast.AnnAssign)
+              and isinstance(node.target, ast.Name)}
+    out = []
+    numeric = _str_tuple_assign(plan, "_NUMERIC_FIELDS")
+    policy = _str_tuple_assign(plan, "_POLICY_FIELDS")
+    line, col = cfg.lineno, cfg.col_offset
+    if numeric is None or policy is None:
+        missing = [n for n, v in (("_NUMERIC_FIELDS", numeric),
+                                  ("_POLICY_FIELDS", policy)) if v is None]
+        out.append(Finding(
+            "PL005", ctx.path, plan.lineno, plan.col_offset,
+            f"ExecutionPlan must declare {' and '.join(missing)} as "
+            f"literal string tuples classifying every SolverConfig field"))
+        return out
+    unclassified = fields - numeric - policy
+    if unclassified:
+        out.append(Finding(
+            "PL005", ctx.path, line, col,
+            f"SolverConfig field(s) {sorted(unclassified)} are not "
+            f"classified in ExecutionPlan._NUMERIC_FIELDS or "
+            f"_POLICY_FIELDS -- decide whether each perturbs numerics "
+            f"and add it to exactly one tuple"))
+    overlap = numeric & policy
+    if overlap:
+        out.append(Finding(
+            "PL005", ctx.path, line, col,
+            f"field(s) {sorted(overlap)} appear in BOTH _NUMERIC_FIELDS "
+            f"and _POLICY_FIELDS; classification must be exclusive"))
+    unknown = (numeric | policy) - fields
+    if unknown:
+        out.append(Finding(
+            "PL005", ctx.path, line, col,
+            f"classified name(s) {sorted(unknown)} are not SolverConfig "
+            f"fields -- stale entry after a rename?"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PL006 -- cache keys carry backend + dtype
+# ---------------------------------------------------------------------------
+
+_CACHE_KEY_PARAMS = ("leaf_key", "route", "precision", "backend",
+                     "num_chunks", "dtype")
+
+
+@_rule("PL006", "cache-key-completeness",
+       invariant="ResultCache.key call sites bind every component "
+                 "including backend and dtype (kernel/jnp values and "
+                 "real/complex leaves must never share an entry)")
+def _check_cache_key(ctx: FileContext) -> list[Finding]:
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _dotted(node.func) != "ResultCache.key":
+            continue
+        bound = set(_CACHE_KEY_PARAMS[:len(node.args)])
+        bound |= {kw.arg for kw in node.keywords if kw.arg}
+        missing = [p for p in _CACHE_KEY_PARAMS if p not in bound]
+        if missing:
+            out.append(Finding(
+                "PL006", ctx.path, node.lineno, node.col_offset,
+                f"ResultCache.key() call leaves {missing} at their "
+                f"defaults -- every component (notably backend and "
+                f"dtype) must be bound explicitly so ulp-distinct "
+                f"producers never share a cache entry"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PLF01 -- unused module-level imports (pyflakes-class)
+# ---------------------------------------------------------------------------
+
+def _used_names(tree: ast.Module) -> set[str]:
+    used: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            # attribute roots are Names and collected above; nothing extra
+            pass
+    # names re-exported through __all__ count as used
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "__all__"
+                for t in node.targets):
+            for elt in ast.walk(node.value):
+                if isinstance(elt, ast.Constant) and \
+                        isinstance(elt.value, str):
+                    used.add(elt.value)
+    return used
+
+
+@_rule("PLF01", "unused-import",
+       invariant="no unused module-level imports (pyflakes F401 class; "
+                 "ruff enforces the superset when installed)")
+def _check_unused_imports(ctx: FileContext) -> list[Finding]:
+    if ctx.path.endswith("__init__.py"):
+        return []                    # re-export surface; ruff handles it
+    used = _used_names(ctx.tree)
+    out = []
+    for node in ctx.tree.body:       # module level only
+        if isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            aliases = node.names
+        elif isinstance(node, ast.Import):
+            aliases = node.names
+        else:
+            continue
+        for alias in aliases:
+            if alias.name == "*":
+                continue
+            bound = alias.asname or alias.name.split(".")[0]
+            if bound not in used:
+                out.append(Finding(
+                    "PLF01", ctx.path, node.lineno, node.col_offset,
+                    f"{bound!r} imported but unused"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_rules(ctx: FileContext,
+              only: set[str] | None = None) -> list[Finding]:
+    """All findings for one parsed file, every in-scope rule."""
+    out: list[Finding] = []
+    for rule in RULES.values():
+        if only is not None and rule.name not in only:
+            continue
+        if rule.in_scope(ctx.path):
+            out.extend(rule.check(ctx))
+    out.sort(key=lambda f: (f.line, f.col, f.rule))
+    return out

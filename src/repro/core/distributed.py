@@ -32,6 +32,13 @@ as the jnp backend; the step-space split carries complex through its
 twofloat sums (TwoSum is componentwise-exact under complex addition)
 and, under ``backend="pallas"``, runs the split-plane kernel per device.
 
+Every accumulation in this module is governed by the fixed-order
+reduction invariant (permlint rule PL001, ``docs/INVARIANTS.md``): raw
+``jnp`` reductions appear only where the reduced shape is fixed by the
+matrix or the ``CampaignSpec`` geometry -- never by the device count --
+and each such site carries an inline ``# permlint: disable=PL001``
+justification that the linter inventories on every run.
+
 APIs:
   ``permanent_on_mesh``     one-shot step-space split (psum reduction)
   ``slice_sums_on_mesh``    per-device slice sums, no reduction (wave mode)
@@ -46,7 +53,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import lru_cache, partial
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
@@ -129,7 +136,9 @@ def _dyn_chunk_partials(A, first_chunk, T: int, C: int, precision: str):
         sign_bits = bit ^ (midf & lane_bitk)
         s = (2 * sign_bits - 1).astype(dtype)
         X = X + A[:, col_j][:, None] * s[None, :]
-        prod = jnp.prod(X, axis=0)
+        # column product over the fixed axis n -- shape set by the matrix,
+        # never by device count, so association is stable across meshes
+        prod = jnp.prod(X, axis=0)  # permlint: disable=PL001  # fixed-axis column product
         term = jnp.where(par == 1, -prod, prod)
         return (X, accum(acc, term)), None
 
@@ -143,7 +152,7 @@ def _dyn_chunk_partials(A, first_chunk, T: int, C: int, precision: str):
     onehot = (tail_j[None, :] == jnp.arange(n, dtype=jnp.int32)[:, None])
     X = X + (A @ onehot.astype(dtype)) \
         * (tail_sign * tail_live.astype(dtype))[None, :]
-    prod = jnp.prod(X, axis=0)
+    prod = jnp.prod(X, axis=0)  # permlint: disable=PL001  # fixed-axis column product
     neg = (C & 1) == 1
     term = jnp.where(tail_live, -prod if neg else prod, jnp.zeros_like(prod))
     acc = accum(acc, term)
@@ -159,7 +168,9 @@ def _device_body(A_rep, slices_local, *, spd, chunks_per_slice, C, precision):
         first_chunk = slices_local[0, i] * chunks_per_slice
         parts = _dyn_chunk_partials(A_rep, first_chunk, chunks_per_slice, C,
                                     precision)
-        h, l = P.two_sum(jnp.sum(parts.hi), jnp.sum(parts.lo))
+        # parts has shape (chunks_per_slice,) fixed by CampaignSpec geometry,
+        # identical at every device count -- association is mesh-invariant
+        h, l = P.two_sum(jnp.sum(parts.hi), jnp.sum(parts.lo))  # permlint: disable=PL001  # shape-stable by CampaignSpec
         acc = P.tf_add_tf(acc, P.TwoFloat(h, l))
     return acc
 
@@ -224,6 +235,7 @@ def permanent_on_mesh(A, mesh: Mesh, *, precision: str = "dq_acc",
                 first_chunk = slices_local[0, i] * chunks_per_slice
                 parts = device_partials(A_rep, first_chunk)
                 m = live_local[0, i].astype(A_rep.dtype)
+                # permlint: disable=PL001  # parts shape fixed by chunks_per_slice, mesh-invariant
                 h, l = P.two_sum(jnp.sum(parts.hi) * m, jnp.sum(parts.lo) * m)
                 acc = P.tf_add_tf(acc, P.TwoFloat(h, l))
             hi, lo = acc
@@ -240,7 +252,7 @@ def permanent_on_mesh(A, mesh: Mesh, *, precision: str = "dq_acc",
                          check_vma=False)(A, dev_slices, dev_live)
 
     hi, lo = run(A, dev_slices, dev_live)
-    p0 = jnp.prod(nw_base_vector(A))
+    p0 = jnp.prod(nw_base_vector(A))  # permlint: disable=PL001  # length-n product, shape set by the matrix
     total = P.tf_add_acc(P.TwoFloat(hi, lo), p0)
     return P.tf_value(total) * _final_factor(n)
 
@@ -275,6 +287,7 @@ def _wave_fn(mesh: Mesh, chunks_per_slice: int, chunk_size: int,
         # sentinel mask: live lanes multiply by exactly 1.0 (identity
         # under IEEE-754), padded lanes by 0.0
         m = (sid >= 0).astype(A_rep.dtype)
+        # permlint: disable=PL001  # parts shape fixed by chunks_per_slice, mesh-invariant
         h, l = P.two_sum(jnp.sum(parts.hi) * m, jnp.sum(parts.lo) * m)
         return h[None], l[None]
 

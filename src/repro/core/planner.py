@@ -206,12 +206,23 @@ class ExecutionPlan:
     def num_matrices(self) -> int:
         return len(self.entries)
 
-    # SolverConfig fields that perturb execution/numerics.  Queue and
-    # cache policy (cache, cache_entries, queue_max_batch,
-    # queue_max_delay_s) change WHEN work is dispatched, never what is
-    # computed -- two plans differing only there execute identically.
+    # Every SolverConfig field is classified exactly once below, and
+    # permlint rule PL005 rejects any new field that isn't: a field in
+    # _NUMERIC_FIELDS perturbs what is computed (it participates in
+    # ``fingerprint()``); a field in _POLICY_FIELDS only changes WHEN or
+    # WHERE work is dispatched -- two plans differing only there execute
+    # identically.  See docs/INVARIANTS.md (PL005).
     _NUMERIC_FIELDS = ("precision", "backend", "preprocess", "dm", "fm",
                        "num_chunks")
+    # The campaign_* knobs steer routing and slice geometry; their effect
+    # on numerics is already captured in the fingerprint body via each
+    # leaf's route and ``CampaignSpec.as_tuple()``, so hashing the raw
+    # knobs would only split identical executions.  cache/queue knobs and
+    # the injected clock never touch device work at all.
+    _POLICY_FIELDS = ("campaign_threshold", "campaign_slices",
+                      "campaign_lanes", "campaign_checkpoint",
+                      "campaign_max_waves", "cache", "cache_entries",
+                      "queue_max_batch", "queue_max_delay_s", "clock")
 
     def fingerprint(self) -> tuple:
         """Content identity: equal fingerprints -> identical execution.

@@ -84,7 +84,7 @@ def ryser_flops(n: int) -> float:
 def _ryser_seq_jit(A, n: int):
     idx_dtype = jnp.int64 if n > 31 else jnp.int32
     x0 = nw_base_vector(A)
-    p0 = jnp.prod(x0)
+    p0 = jnp.prod(x0)  # permlint: disable=PL001  # length-n product, Alg. 1 reference
 
     def body(carry, g):
         x, acc_hi, acc_lo = carry
@@ -93,7 +93,7 @@ def _ryser_seq_jit(A, n: int):
         gray_g = g ^ (g >> 1)
         s = jnp.where((gray_g & low) != 0, 1.0, -1.0).astype(A.dtype)
         x = x + s * A[:, j]
-        prod = jnp.prod(x)
+        prod = jnp.prod(x)  # permlint: disable=PL001  # length-n product, Alg. 1 reference
         term = jnp.where((g & 1) != 0, -prod, prod)
         acc = P.tf_add_acc(P.TwoFloat(acc_hi, acc_lo), term)
         return (x, acc.hi, acc.lo), None

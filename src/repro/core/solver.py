@@ -111,7 +111,7 @@ class PermanentSolver:
         # clock precedence: explicit kwarg > SolverConfig.clock > monotonic
         # (injectable so deadline behavior is deterministic under test)
         self._clock = clock if clock is not None \
-            else (config.clock or time.monotonic)
+            else (config.clock or time.monotonic)  # permlint: disable=PL004  # sanctioned injectable-clock default
         # size-keyed request queue: n -> (first-enqueue time, requests)
         self._queue: dict[int, tuple[float, list[PermanentRequest]]] = {}
         self._stats = ExecStats()

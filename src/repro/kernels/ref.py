@@ -10,9 +10,6 @@ isolate Pallas-specific bugs from algorithmic ones.  The ground truth for
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
-
-from ..core import gray as G
 from ..core import precision as P
 from ..core.ryser import chunk_partial_sums, nw_base_vector, _final_factor
 
@@ -33,7 +30,9 @@ def block_partials_ref(A, *, TB: int, C: int, num_blocks: int,
             A, TB, C, precision,
             chunk_offset=dev_chunk_base + b * TB,
             total_chunks=total_chunks)
+        # permlint: disable=PL001  # parts shape fixed by (TB, C) geometry; reference path
         hi, lo = P.two_sum(jnp.sum(parts.hi), jnp.sum(parts.lo))
+        # permlint: disable=PL001  # same fixed (TB,) shape as above
         outs.append((hi, lo + jnp.sum(parts.lo) * 0))
     return jnp.asarray(outs)
 
@@ -44,7 +43,8 @@ def permanent_ref(A, *, TB: int, C: int, num_blocks: int,
     n = A.shape[0]
     out = block_partials_ref(A, TB=TB, C=C, num_blocks=num_blocks,
                              precision=precision)
+    # permlint: disable=PL001  # num_blocks axis fixed by the plan; reference path
     hi, e = P.two_sum(jnp.sum(out[:, 0]), jnp.sum(out[:, 1]))
-    p0 = jnp.prod(nw_base_vector(A))
+    p0 = jnp.prod(nw_base_vector(A))  # permlint: disable=PL001  # length-n product
     total = P.tf_add_acc(P.TwoFloat(hi, e), p0)
     return P.tf_value(total) * _final_factor(n)

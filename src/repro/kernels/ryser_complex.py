@@ -142,9 +142,11 @@ def _ryser_block_cx(i, Ar, Ai, xbr, xbi, c0, dev_base, *, n: int, n_pad: int,
 
     zero = jnp.zeros((), dtype)
     keep_err = precision in ("dq_acc", "dq_fast")
-    re_err = jnp.sum(acc_r[1]) if keep_err else zero
-    im_err = jnp.sum(acc_i[1]) if keep_err else zero
-    return jnp.sum(acc_r[0]), re_err, jnp.sum(acc_i[0]), im_err
+    # in-kernel lane reduce: fixed (TB,) lane axis inside one block; kernel
+    # values are covered by the 1e-9 kernel-vs-jnp contract, not mesh identity
+    re_err = jnp.sum(acc_r[1]) if keep_err else zero  # permlint: disable=PL001  # in-kernel lane reduce, under the 1e-9 kernel contract
+    im_err = jnp.sum(acc_i[1]) if keep_err else zero  # permlint: disable=PL001  # in-kernel lane reduce, under the 1e-9 kernel contract
+    return jnp.sum(acc_r[0]), re_err, jnp.sum(acc_i[0]), im_err  # permlint: disable=PL001  # in-kernel lane reduce, under the 1e-9 kernel contract
 
 
 def _ryser_kernel_cx(base_hi_ref, base_lo_ref, Ar_ref, Ai_ref, xbr_ref,

@@ -21,7 +21,6 @@ Usage:
 
 import argparse          # noqa: E402
 import json              # noqa: E402
-import math              # noqa: E402
 import subprocess        # noqa: E402
 import sys               # noqa: E402
 import time              # noqa: E402
@@ -29,13 +28,11 @@ import traceback         # noqa: E402
 
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-import numpy as np       # noqa: E402
 
 from ..configs import ARCH_IDS, FULL_ATTENTION_ARCHS, get_config  # noqa: E402
-from ..models.model import SHAPES, ShapeCell, build               # noqa: E402
+from ..models.model import SHAPES, build                          # noqa: E402
 from ..train.optimizer import AdamWConfig, AdamWState             # noqa: E402
-from ..train.train_step import (build_serve_steps, build_train_step,  # noqa: E402
-                                mesh_axes_of)
+from ..train.train_step import build_serve_steps, build_train_step  # noqa: E402
 from ..utils.hlo import collective_bytes, count_ops               # noqa: E402
 from ..utils.hlo_cost import analyze_hlo                           # noqa: E402
 from ..utils.roofline import roofline_from_analysis               # noqa: E402

@@ -16,7 +16,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..ckpt.checkpoint import restore_train_state, save_train_state

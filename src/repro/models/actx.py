@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Any
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -15,8 +15,7 @@ import jax.numpy as jnp
 from .common import ModelCfg, ShapeInit
 from . import layers as L
 from . import actx
-from .transformer import (_ffn, _norm, _qkv, _rope, attn_param_shapes,
-                          ffn_param_shapes, layer_param_shapes,
+from .transformer import (_ffn, _norm, _qkv, layer_param_shapes,
                           norm_param_shapes, _stack_shapes, chunked_ce_loss)
 
 __all__ = ["encdec_param_shapes", "encdec_loss", "encode", "decode_forward",

@@ -15,7 +15,6 @@ the assigned ``long_500k`` architectures.
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -16,15 +16,13 @@ only this API.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .common import ModelCfg, init_tree, param_count
+from .common import ModelCfg, init_tree
 from . import transformer as T
 from . import encdec as ED
 from . import ssm_lm as SL

@@ -13,7 +13,6 @@ to every family in the zoo.
 from __future__ import annotations
 
 import jax
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .common import ModelCfg, ShapeInit

@@ -17,17 +17,14 @@ Serving: ``prefill`` builds the KV cache with chunked flash attention;
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..utils.compat import shard_map
-from .common import ModelCfg, ShapeInit, init_tree
+from .common import ModelCfg, ShapeInit
 from . import layers as L
 from . import actx
 

@@ -49,7 +49,7 @@ fake; deadlines, latencies, and log cadence are then deterministic).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Sequence
 
 import numpy as np
@@ -123,7 +123,7 @@ class PermanentService:
                              f"{self.scfg.max_batch}")
         solver_config = solver_config or SolverConfig()
         self._clock = clock if clock is not None \
-            else (solver_config.clock or time.monotonic)
+            else (solver_config.clock or time.monotonic)  # permlint: disable=PL004  # sanctioned injectable-clock default
         self._log = log
         self._queue = LaneQueue(self.scfg.lanes)
         self.metrics = ServeMetrics(self._clock,
@@ -179,9 +179,16 @@ class PermanentService:
             return
         from ..core.distributed import run_campaign
         cmat, mesh, ts, cps, C = self._camp_args
+        # backend must follow the solver config (the permlint PL003 audit
+        # caught this dropped kwarg: a pallas-configured service silently
+        # ran jnp waves) -- same jnp/pallas collapse as the planner's
+        # campaign route, since run_campaign knows only those two bodies.
+        backend = "pallas" if self.solver.config.backend == "pallas" \
+            else "jnp"
         val, st = run_campaign(
             cmat, mesh, total_slices=ts, chunks_per_slice=cps,
             chunk_size=C, precision=self.solver.config.precision,
+            backend=backend,
             checkpoint_path=self._campaign.checkpoint,
             state=self._camp_state["state"], max_waves=waves)
         self._camp_state["state"], self._camp_state["value"] = st, val

@@ -118,7 +118,7 @@ class Histogram:
 class ServeMetrics:
     """Counters + histograms for one service instance (injected clock)."""
 
-    def __init__(self, clock: Callable[[], float] = time.monotonic, *,
+    def __init__(self, clock: Callable[[], float] = time.monotonic, *,  # permlint: disable=PL004  # injectable default; tests override
                  lanes: tuple[str, ...] = ()):
         self._clock = clock
         self.t_start = clock()

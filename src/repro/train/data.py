@@ -11,8 +11,6 @@ from __future__ import annotations
 
 import numpy as np
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding
 
 from ..models.common import ModelCfg
 from ..models.model import ShapeCell

@@ -14,12 +14,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models import actx
@@ -27,7 +25,7 @@ from ..models import shardings as SH
 from ..models.common import ModelCfg
 from ..models.model import Model, ShapeCell
 from ..models.transformer import SeqShardCtx
-from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+from .optimizer import AdamWConfig, AdamWState, adamw_update
 
 __all__ = ["MeshAxes", "mesh_axes_of", "build_train_step",
            "build_serve_steps", "named", "TrainStepBundle"]

@@ -1,0 +1,12 @@
+"""PL006 fixture: a cache key missing backend and dtype."""
+
+
+class ResultCache:
+    @staticmethod
+    def key(leaf_key, route, precision, backend="jnp", num_chunks=4096,
+            dtype="<f8"):
+        return (leaf_key, route, precision, backend, num_chunks, dtype)
+
+
+def lookup(leaf_key):
+    return ResultCache.key(leaf_key, "dense", "dq_acc")   # PL006

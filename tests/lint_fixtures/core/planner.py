@@ -1,0 +1,17 @@
+"""PL005 fixture: a SolverConfig field left unclassified."""
+from dataclasses import dataclass
+
+
+@dataclass
+class SolverConfig:
+    precision: str = "dq_acc"
+    new_knob: int = 7                # not in either tuple below
+
+
+@dataclass
+class ExecutionPlan:
+    _NUMERIC_FIELDS = ("precision",)
+    _POLICY_FIELDS = ()
+
+    def fingerprint(self):
+        return self._NUMERIC_FIELDS

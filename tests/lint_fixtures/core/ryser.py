@@ -1,0 +1,8 @@
+"""PL001 fixture: raw jnp reductions on an accumulation path."""
+import jax.numpy as jnp
+
+
+def permanent_terms(parts):
+    total = jnp.sum(parts)           # PL001: shape-dependent association
+    scale = jnp.prod(parts)          # PL001
+    return total * scale

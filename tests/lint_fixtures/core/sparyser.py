@@ -1,0 +1,8 @@
+"""PL002 fixture: vmap over a complex engine body."""
+import jax
+
+
+def permanent_complex_batch(As):
+    def body(A):
+        return A.sum()
+    return jax.vmap(body)(As)        # PL002: lax.map only

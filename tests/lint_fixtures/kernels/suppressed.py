@@ -1,0 +1,6 @@
+"""Suppression fixture: the finding must land in the inventory."""
+import jax.numpy as jnp
+
+
+def block_epilogue(parts):
+    return jnp.sum(parts)  # permlint: disable=PL001  # fixture: inventoried, not hidden

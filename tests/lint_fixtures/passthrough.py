@@ -1,0 +1,11 @@
+"""PL003 fixture: a guarded kwarg accepted but not forwarded."""
+
+
+def engine(A, *, precision="dq_acc", num_chunks=4096):
+    return A, precision, num_chunks
+
+
+def solve(A, *, precision="dq_acc", num_chunks=4096):
+    # PL003 twice: engine() accepts both guarded kwargs, neither is
+    # forwarded -- the exact tiny-n fallback bug shape from PRs 5/6.
+    return engine(A)

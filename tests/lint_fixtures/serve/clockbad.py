@@ -1,0 +1,6 @@
+"""PL004 fixture: wall clock read outside the injectable default site."""
+import time
+
+
+def deadline_expired(t0):
+    return time.monotonic() - t0 > 1.0   # PL004

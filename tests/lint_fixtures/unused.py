@@ -1,0 +1,7 @@
+"""PLF01 fixture: an unused module-level import."""
+import os
+import sys                            # PLF01: never referenced
+
+
+def cwd():
+    return os.getcwd()

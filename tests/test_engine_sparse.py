@@ -16,7 +16,7 @@ import textwrap
 import numpy as np
 import pytest
 
-from repro.core import engine, oracle, ryser, sparyser
+from repro.core import engine, oracle, ryser
 from repro.core.sparyser import (SparseMatrix, perm_sparyser_batched,
                                  perm_sparyser_chunked)
 from repro.kernels import ops

@@ -1,13 +1,11 @@
 """HLO cost analyzer: trip-count scaling, dot flops, collective bytes."""
 
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.utils.hlo import collective_bytes, parse_shape_bytes
 from repro.utils.hlo_cost import analyze_hlo
-from repro.utils.roofline import HW_V5E, Roofline
+from repro.utils.roofline import Roofline
 
 
 def _hlo_of(f, *args):

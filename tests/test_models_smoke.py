@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCH_IDS, FULL_ATTENTION_ARCHS, get_config
-from repro.models.model import Model, ShapeCell, build
+from repro.models.model import Model, build
 
 RNG = np.random.default_rng(0)
 SMOKE_SEQ = 32

@@ -1,6 +1,5 @@
 """Compensated arithmetic: error-free transformation properties."""
 
-import numpy as np
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 

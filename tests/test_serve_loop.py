@@ -21,10 +21,9 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 from repro.core.engine import permanent
-from repro.core.solver import (PermanentRequest, PermanentSolver,
-                               SolverConfig, SolverError)
+from repro.core.solver import PermanentSolver, SolverConfig, SolverError
 from repro.serve import (DEFAULT_LANES, Histogram, LaneQueue, LaneSpec,
-                         PermanentService, ServeMetrics, ServiceConfig,
+                         PermanentService, ServiceConfig,
                          ShedError, ShedReason, quantized_batches,
                          run_soak, start_metrics_server)
 
@@ -420,3 +419,32 @@ def test_warm_compile_cache_cold_start(tmp_path):
     assert int(run2["warm_hits"]) > 0
     assert int(run1["first_misses"]) == 0        # warm-up covered the
     assert int(run2["first_misses"]) == 0        # first bucket's geometry
+
+
+def test_campaign_backend_follows_solver_config(monkeypatch):
+    """Regression (found by permlint's passthrough audit): the service's
+    campaign waves must run under the solver's configured backend -- a
+    pallas-configured service used to silently drop the kwarg and run
+    jnp wave bodies."""
+    from repro.core import distributed
+    from repro.serve.loop import CampaignSpec
+
+    captured = {}
+
+    def fake_run_campaign(A, mesh, **kw):
+        captured.update(kw)
+        return 1.0, None
+
+    monkeypatch.setattr(distributed, "run_campaign", fake_run_campaign)
+    rng = np.random.default_rng(0)
+    for solver_backend, expect in (("pallas", "pallas"), ("jnp", "jnp"),
+                                   ("distributed", "jnp")):
+        svc = PermanentService(
+            SolverConfig(backend=solver_backend),
+            ServiceConfig(max_batch=2, log_every_s=float("inf")),
+            campaign=CampaignSpec(matrix=mk(rng, 8), waves=1),
+            clock=FakeClock(), log=None)
+        captured.clear()
+        svc._advance_campaign(1)
+        assert captured["backend"] == expect, solver_backend
+        assert captured["precision"] == svc.solver.config.precision

@@ -154,10 +154,11 @@ def test_cache_hits_across_batch_members():
 
 
 def test_cache_respects_precision_and_backend():
-    key_a = ResultCache.key("abc", "dense", "dq_acc", "jnp", 64)
-    key_b = ResultCache.key("abc", "dense", "kahan", "jnp", 64)
-    key_c = ResultCache.key("abc", "dense", "dq_acc", "pallas", 64)
-    assert len({key_a, key_b, key_c}) == 3
+    key_a = ResultCache.key("abc", "dense", "dq_acc", "jnp", 64, "<f8")
+    key_b = ResultCache.key("abc", "dense", "kahan", "jnp", 64, "<f8")
+    key_c = ResultCache.key("abc", "dense", "dq_acc", "pallas", 64, "<f8")
+    key_d = ResultCache.key("abc", "dense", "dq_acc", "jnp", 64, "<c16")
+    assert len({key_a, key_b, key_c, key_d}) == 4
 
 
 def test_cache_lru_eviction_and_stats():

@@ -3,7 +3,6 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.ckpt.checkpoint import (latest_step, load_pytree,
                                    restore_train_state, save_pytree,
@@ -11,9 +10,9 @@ from repro.ckpt.checkpoint import (latest_step, load_pytree,
 from repro.configs import get_config
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import ShapeCell, build
-from repro.train.data import SyntheticLM, make_global_batch
+from repro.train.data import SyntheticLM
 from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
-                                   global_norm, lr_schedule)
+                                   lr_schedule)
 from repro.train.train_step import build_train_step, decode_kv_policy
 
 
