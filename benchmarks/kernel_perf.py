@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.oracle import perm_ryser_exact
 from repro.core.ryser import ryser_flops
+from repro.core.stepspace import Geometry
 from repro.kernels.ops import block_partials_pallas
 from repro.utils.hlo_cost import analyze_hlo
 
@@ -35,16 +36,15 @@ MXU = 197e12
 def profile_variant(A, mode: str, *, lanes=64, steps_per_chunk=64,
                     window=16, precision="dd", repeat=3):
     n = A.shape[0]
+    geometry = Geometry(lanes, steps_per_chunk, window)
 
     def run():
         out, geo = block_partials_pallas(
-            A, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window,
-            precision=precision, mode=mode)
+            A, geometry=geometry, precision=precision, mode=mode)
         return out, geo
 
     f = jax.jit(lambda A_: block_partials_pallas(
-        A_, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window,
-        precision=precision, mode=mode)[0])
+        A_, geometry=geometry, precision=precision, mode=mode)[0])
     lowered = f.lower(jnp.asarray(A))
     compiled = lowered.compile()
     cost = analyze_hlo(compiled.as_text())

@@ -2,7 +2,12 @@
 
 Reads experiments/dryrun/*.json, emits CSV + a markdown table with the
 three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and
-the per-cell one-line interpretation.
+the per-cell one-line interpretation.  When the autotuner has run
+(``benchmarks/autotune.py`` or ``repro.launch.tune --report``), its
+per-candidate predicted-vs-measured rows at
+``experiments/dryrun/autotune/mispredict.json`` are appended as
+``mispredict,...`` CSV -- the running scorecard of the tuner's cost
+model against real kernel timings.
 """
 
 from __future__ import annotations
@@ -20,6 +25,19 @@ def load_cells(out_dir: str = OUT_DIR):
         with open(path) as f:
             cells.append(json.load(f))
     return cells
+
+
+def load_mispredicts(out_dir: str = OUT_DIR):
+    """Autotuner predicted-vs-measured rows, worst model error first
+    (empty when the tuner has not run)."""
+    path = os.path.join(out_dir, "autotune", "mispredict.json")
+    try:
+        with open(path) as f:
+            rows = json.load(f).get("rows", [])
+    except OSError:
+        return []
+    return sorted(rows, key=lambda r: abs(1.0 - (r.get("mispredict_ratio")
+                                                 or 1.0)), reverse=True)
 
 
 def _suggestion(rec: dict) -> str:
@@ -61,6 +79,15 @@ def main(csv: bool = True):
         for c in bad:
             print(f"# FAILED {c.get('arch')} {c.get('shape')} "
                   f"{c.get('mesh')}")
+        mis = load_mispredicts()
+        if mis:
+            print("mispredict,route,n,geometry,modeled_s,hlo_predicted_s,"
+                  "predicted_s,measured_s,ratio")
+            for r in mis:
+                print(f"mispredict,{r['route']},{r['n']},{r['geometry']},"
+                      f"{r['modeled_s']:.4g},{r['hlo_predicted_s']:.4g},"
+                      f"{r['predicted_s']:.4g},{r['measured_s']:.4g},"
+                      f"{r['mispredict_ratio']:.3f}")
     return ok, skipped, bad
 
 

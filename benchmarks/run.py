@@ -42,7 +42,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default="",
                     help="comma list: table3,table4,table5,fig7,batch,"
                          "solver_cache,batch_sharding,batch_complex,"
-                         "batch_sparse,campaign,soak,roofline")
+                         "batch_sparse,campaign,soak,autotune,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="smaller n (CI-sized)")
     ap.add_argument("--check", action="store_true",
@@ -56,7 +56,7 @@ def main(argv=None) -> int:
     import jax
     jax.config.update("jax_enable_x64", True)
 
-    from . import (batch_complex, batch_sharding, batch_sparse,
+    from . import (autotune, batch_complex, batch_sharding, batch_sparse,
                    batch_throughput, campaign_resume, fig7_scaling,
                    roofline_report, serve_soak, solver_cache,
                    table3_precision, table4_dense, table5_sparse)
@@ -131,6 +131,21 @@ def main(argv=None) -> int:
         if args.check and not serve_soak.check(rows):
             print("# serve_soak gate RED -- SLO, typed-shed, metrics "
                   "consistency, or warm-compile-cache cold start failed")
+            return 1
+    if not only or "autotune" in only:
+        # tune + cold pickup in forced 8-device subprocesses; tuned must
+        # never lose to the untuned default (1.0x floor), model error is
+        # reported, not gated
+        if args.fast:
+            rows = autotune.run(n=autotune.N_FAST,
+                                bucket=autotune.BUCKET_FAST,
+                                top_k=1, repeats=1)
+        else:
+            rows = autotune.run()
+        print_rows("autotune", rows)
+        if args.check and not autotune.check(rows):
+            print("# autotune gate RED -- tuned geometry lost to the "
+                  "default or the persisted table was not picked up")
             return 1
     if not only or "table3" in only:
         if args.fast:

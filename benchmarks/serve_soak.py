@@ -17,7 +17,15 @@ compilation-cache directory, and assert
 * **no cold-start retrace storm**: run 1 populates the compilation
   cache during its warm-up pass (persistent misses > 0); run 2 -- a cold
   process, warm disk cache -- warms up with ZERO persistent misses, and
-  in both runs the first dispatched bucket compiles nothing new.
+  in both runs the first dispatched bucket compiles nothing new;
+* **tuned cold start** (ISSUE 9): a second, pallas-backend service in
+  the same worker is configured with ``SolverConfig.tuning_table``
+  pointing at a persisted table whose dense/n winner is a NON-default
+  geometry.  Its warm-up plans through the table, so the warmed bucket
+  programs ARE the tuned ones: run 2's tuned warm-up loads everything
+  from disk (zero persistent misses), the tuned first bucket compiles
+  nothing in either run, the dispatched leaves carry the tuned geometry
+  tag, and the value still matches a fresh scalar solver.
 
 Because ``XLA_FLAGS`` must be set before jax initializes (and because
 "cold process" is the point), measurement runs in subprocesses; the
@@ -43,6 +51,10 @@ MAX_BATCH = 8
 REQUESTS = 64
 RATE_HZ = 50.0
 EXPIRE_EVERY = 8       # every 8th request arrives already expired
+# The synthetic table's dense/n winner: deliberately NOT the kernel
+# default (128x64x16), so a tuned pickup is observable; validated
+# against the PL007 auditor before the table is written.
+TUNED_GEOMETRY = (64, 32, 8)
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -98,6 +110,29 @@ consistent = (req["admitted"] == req["completed"] + req["shed_total"]
                             "deadline_expired", "shutdown")
                       for k in req["shed"]))
 cache = snap["solver"]["cache"]
+
+# tuned cold start: a pallas service whose warm-up resolves the
+# persisted tuning table -- the warmed programs are the tuned ones, so
+# with a warm disk cache the tuned first bucket compiles nothing
+tuned = PermanentService(
+    SolverConfig(backend="pallas", precision="dq_acc", preprocess=False,
+                 tuning_table={table!r}),
+    ServiceConfig(max_batch={max_batch}, quantize_buckets=True,
+                  compile_cache_dir={cache_dir!r}, warmup_ns=(n,),
+                  log_every_s=2.0),
+    log=lambda s: print(s, file=sys.stderr))
+tuned_warm = tuned.warmup_report["compile"]
+tmat = np.random.default_rng(5).uniform(-1, 1, (n, n))
+tleaf = tuned.solver.plan_batch([tmat]).leaves[0]
+tuned_tag = tleaf.geometry.tag() if tleaf.geometry is not None else "-"
+s0 = compile_stats()
+t_tuned = tuned.submit(tmat, deadline_s=None)
+tuned.step()
+s1 = compile_stats()
+tuned_first = s1["persistent_misses"] - s0["persistent_misses"]
+tuned_value_ok = t_tuned.done and bool(np.isclose(
+    t_tuned.result(), ref.execute(ref.plan(tmat)), rtol=1e-9))
+
 print(f"ROW,devices={devices},n={{n}},requests={{req['admitted']}},"
       f"completed={{req['completed']}},shed={{req['shed_total']}},"
       f"shed_deadline={{req['shed'].get('deadline_expired', 0)}},"
@@ -110,12 +145,37 @@ print(f"ROW,devices={devices},n={{n}},requests={{req['admitted']}},"
       f"warm_misses={{warm['persistent_misses']}},"
       f"warm_hits={{warm['persistent_hits']}},"
       f"first_misses={{first_misses}},"
+      f"tuned_geometry={{tuned_tag}},"
+      f"tuned_warm_misses={{tuned_warm['persistent_misses']}},"
+      f"tuned_warm_hits={{tuned_warm['persistent_hits']}},"
+      f"tuned_first_misses={{tuned_first}},"
+      f"tuned_value_ok={{int(tuned_value_ok)}},"
       f"consistent={{int(consistent)}},values_ok={{int(values_ok)}}")
 """
 
 
+def _write_tuning_table(path: str, n: int) -> None:
+    """Persist a minimal, VALID table whose dense/n winner is the
+    non-default ``TUNED_GEOMETRY`` (wildcard device kind, so the CPU CI
+    host resolves it).  Timings are placeholders -- this table exercises
+    the pickup path, not the tuner."""
+    from repro.core.stepspace import Geometry
+    from repro.tune.table import TableEntry, TuningTable
+
+    table = TuningTable()
+    table.put(TableEntry(
+        route="dense", n=n, density_bucket="1.00", dtype="<f8",
+        precision="dq_acc", device_kind="any",
+        geometry=Geometry(*TUNED_GEOMETRY),
+        predicted_s=1.0, measured_s=1.0, default_s=1.0))
+    bad = table.validate()
+    if bad:
+        raise RuntimeError(f"synthetic tuning entry violates PL007: {bad}")
+    table.save(path)
+
+
 def _run_once(cache_dir: str, *, devices: int, requests: int,
-              rate_hz: float, seed: int) -> dict:
+              rate_hz: float, seed: int, table: str) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = _SRC + os.pathsep * bool(env.get("PYTHONPATH")) \
@@ -123,7 +183,7 @@ def _run_once(cache_dir: str, *, devices: int, requests: int,
     code = _WORKER.format(n=N, devices=devices, max_batch=MAX_BATCH,
                           cache_dir=cache_dir, requests=requests,
                           rate_hz=rate_hz, seed=seed,
-                          expire_every=EXPIRE_EVERY)
+                          expire_every=EXPIRE_EVERY, table=table)
     r = subprocess.run([sys.executable, "-c", code], env=env,
                        capture_output=True, text=True, timeout=1200)
     if r.returncode != 0:
@@ -143,8 +203,10 @@ def run(devices: int = DEVICES, requests: int = REQUESTS,
     ctx = tempfile.TemporaryDirectory() if cache_dir is None else None
     cdir = ctx.name if ctx else cache_dir
     try:
+        table = os.path.join(cdir, "tuning_table.json")
+        _write_tuning_table(table, N)
         rows = [_run_once(cdir, devices=devices, requests=requests,
-                          rate_hz=rate_hz, seed=seed + i)
+                          rate_hz=rate_hz, seed=seed + i, table=table)
                 for i in range(2)]
     finally:
         if ctx:
@@ -182,16 +244,36 @@ def check(rows, p99_gate_s: float = P99_GATE_S) -> bool:
         if int(row["first_misses"]) != 0:
             fail(f"{tag}: first bucket after warm-up recompiled "
                  f"({row['first_misses']} persistent misses)")
+        want_tag = "x".join(str(v) for v in TUNED_GEOMETRY)
+        if row["tuned_geometry"] != want_tag:
+            fail(f"{tag}: tuned service planned geometry "
+                 f"{row['tuned_geometry']}, table says {want_tag}")
+        if int(row["tuned_first_misses"]) != 0:
+            fail(f"{tag}: tuned first bucket recompiled "
+                 f"({row['tuned_first_misses']} persistent misses)")
+        if row["tuned_value_ok"] != "1":
+            fail(f"{tag}: tuned service value diverged from scalar solver")
     if int(rows[0]["warm_misses"]) < 1:
         fail("run 1 warm-up compiled nothing (cache dir not cold?)")
     if int(rows[1]["warm_misses"]) != 0 or int(rows[1]["warm_hits"]) < 1:
         fail(f"run 2 (cold process, warm cache) recompiled during "
              f"warm-up: misses={rows[1]['warm_misses']} "
              f"hits={rows[1]['warm_hits']}")
+    if int(rows[0]["tuned_warm_misses"]) < 1:
+        fail("run 1 tuned warm-up compiled nothing -- the tuned bucket "
+             "programs were already cached, gate is vacuous")
+    if int(rows[1]["tuned_warm_misses"]) != 0 \
+            or int(rows[1]["tuned_warm_hits"]) < 1:
+        fail(f"run 2 tuned service recompiled during warm-up: "
+             f"misses={rows[1]['tuned_warm_misses']} "
+             f"hits={rows[1]['tuned_warm_hits']}")
     status = "OK" if ok else "FAIL"
     print(f"# serve_soak gate (n={rows[0]['n']} x{rows[0]['devices']} "
           f"devices, {rows[0]['requests']} reqs): run2 warm-up "
           f"misses={rows[1]['warm_misses']} hits={rows[1]['warm_hits']}, "
+          f"tuned warm-up misses={rows[1]['tuned_warm_misses']} "
+          f"hits={rows[1]['tuned_warm_hits']} "
+          f"geometry={rows[1]['tuned_geometry']}, "
           f"p99={rows[0]['p99_ms']}/{rows[1]['p99_ms']}ms -- {status}")
     return ok
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.oracle import perm_ryser_exact
 from repro.core.ryser import perm_ryser_chunked, perm_ryser_seq
+from repro.core.stepspace import Geometry
 from repro.kernels.ops import permanent_pallas
 
 
@@ -36,11 +37,9 @@ def run(ns=(14, 16, 18), seed: int = 0):
             "chunked": lambda: float(perm_ryser_chunked(
                 jnp.asarray(A), num_chunks=1024)),
             "pallas": lambda: float(permanent_pallas(
-                A, mode="baseline", lanes=64, steps_per_chunk=32,
-                window=16)),
+                A, mode="baseline", geometry=Geometry(64, 32, 16))),
             "pallas-bat": lambda: float(permanent_pallas(
-                A, mode="batched", lanes=64, steps_per_chunk=32,
-                window=16)),
+                A, mode="batched", geometry=Geometry(64, 32, 16))),
         }
         base = None
         for name, fn in engines.items():

@@ -41,9 +41,10 @@ from __future__ import annotations
 import argparse
 import sys
 
-__all__ = ["audit_kernel_geometry", "audit_vmem_budget",
+__all__ = ["validate_tiling", "audit_kernel_geometry", "audit_vmem_budget",
            "audit_step_coverage", "audit_sentinel_masking",
-           "audit_routes", "audit_eval_shape", "run_audits", "main"]
+           "audit_routes", "audit_eval_shape", "audit_tuning_table",
+           "run_audits", "main"]
 
 # The n spread: small enough to stay fast, wide enough to cross every
 # geometry regime (clamped tiny-n tiles, the lane knee at TB=lanes, and
@@ -71,12 +72,70 @@ def _pad(n: int) -> int:
     return max(_SUBLANE, -(-n // _SUBLANE) * _SUBLANE)
 
 
+def block_vmem_bytes(n: int, TB: int, Wu: int, *, complex_planes: bool,
+                     itemsize: int = 4) -> int:
+    """Per-block VMEM residency estimate of the dense kernel.
+
+    Counted per block (the BlockSpec shapes in ``ryser_pallas_call`` plus
+    the kernel's live intermediates): A (n_pad, n_pad), xb (n_pad, 1),
+    C0 (n_pad, Wu-1), the lane state X (n_pad, TB), the windowed matmul
+    product D (n_pad, Wu-1), the twofloat accumulator (2 x TB) and the
+    (1, 2) output tile.  Complex doubles the matrix-plane share.
+    """
+    n_pad = _pad(n)
+    planes = (n_pad * n_pad          # A block
+              + n_pad                # xb block
+              + n_pad * (Wu - 1)     # C0 schedule block
+              + n_pad * TB           # X lane state
+              + n_pad * (Wu - 1)     # D = A @ C0 workspace
+              + 2 * TB               # twofloat accumulator
+              + 2)                   # (1, 2) out tile
+    return planes * (2 if complex_planes else 1) * itemsize
+
+
 # ---------------------------------------------------------------------------
 # jax-free audits
 # ---------------------------------------------------------------------------
 
+def validate_tiling(n: int, lanes: int, spc: int, window: int,
+                    *, itemsize: int = 4) -> list[str]:
+    """Every geometry invariant one (lanes, steps_per_chunk, window)
+    candidate must satisfy at matrix size n; empty list = valid.
+
+    The single source of truth the tuner (``repro.tune``) and the
+    on-disk ``TuningTable`` (PL007) delegate candidate validity to:
+    power-of-two components, exact step-space tiling, window range, and
+    the VMEM block budget (checked for the complex split-plane kernel,
+    the larger of the two residencies).
+    """
+    from ..core.stepspace import kernel_geometry
+    space = 1 << (n - 1)
+    TB, C, Wu, nb = kernel_geometry(
+        n, lanes=lanes, steps_per_chunk=spc, window=window)
+    tag = f"n={n} tiling=({lanes},{spc},{window})"
+    bad = []
+    for name, v in (("lanes", lanes), ("steps_per_chunk", spc),
+                    ("window", window), ("TB", TB), ("C", C), ("Wu", Wu),
+                    ("num_blocks", nb)):
+        if not _pow2(v):
+            bad.append(f"{tag}: {name}={v} is not a power of two")
+    if TB * C * nb != space:
+        bad.append(f"{tag}: TB*C*num_blocks = {TB * C * nb} != "
+                   f"2^(n-1) = {space} -- grid does not tile the "
+                   "step space")
+    if not (2 <= Wu <= C):
+        bad.append(f"{tag}: window Wu={Wu} outside [2, C={C}]")
+    est = block_vmem_bytes(n, TB, Wu, complex_planes=True,
+                           itemsize=itemsize)
+    if est > VMEM_BUDGET:
+        bad.append(f"{tag}: block VMEM estimate {est} B exceeds budget "
+                   f"{VMEM_BUDGET} B ({VMEM_BYTES} B/core with Mosaic "
+                   "headroom)")
+    return bad
+
+
 def audit_kernel_geometry(ns=N_SPREAD, tilings=TILINGS) -> list[str]:
-    from ..kernels.ryser_pallas import kernel_geometry
+    from ..core.stepspace import kernel_geometry
     bad = []
     for n in ns:
         space = 1 << (n - 1)
@@ -99,36 +158,53 @@ def audit_kernel_geometry(ns=N_SPREAD, tilings=TILINGS) -> list[str]:
 
 def audit_vmem_budget(ns=N_SPREAD, tilings=TILINGS,
                       itemsize: int = 4) -> list[str]:
-    """Bound the per-block VMEM residency of the dense kernel.
-
-    Counted per block (the BlockSpec shapes in ``ryser_pallas_call`` plus
-    the kernel's live intermediates): A (n_pad, n_pad), xb (n_pad, 1),
-    C0 (n_pad, Wu-1), the lane state X (n_pad, TB), the windowed matmul
-    product D (n_pad, Wu-1), the twofloat accumulator (2 x TB) and the
-    (1, 2) output tile.  Complex doubles the matrix-plane share.
-    """
-    from ..kernels.ryser_pallas import kernel_geometry
+    """Bound the per-block VMEM residency of the dense kernel
+    (see :func:`block_vmem_bytes` for the counted shapes)."""
+    from ..core.stepspace import kernel_geometry
     bad = []
     for n in ns:
-        n_pad = _pad(n)
         for (lanes, spc, window) in tilings:
             TB, C, Wu, nb = kernel_geometry(
                 n, lanes=lanes, steps_per_chunk=spc, window=window)
-            planes = (n_pad * n_pad          # A block
-                      + n_pad                # xb block
-                      + n_pad * (Wu - 1)     # C0 schedule block
-                      + n_pad * TB           # X lane state
-                      + n_pad * (Wu - 1)     # D = A @ C0 workspace
-                      + 2 * TB               # twofloat accumulator
-                      + 2)                   # (1, 2) out tile
-            for kind, mult in (("real", 1), ("complex", 2)):
-                est = planes * mult * itemsize
+            for kind, cplx in (("real", False), ("complex", True)):
+                est = block_vmem_bytes(n, TB, Wu, complex_planes=cplx,
+                                       itemsize=itemsize)
                 if est > VMEM_BUDGET:
                     bad.append(
                         f"n={n} tiling=({lanes},{spc},{window}) {kind}: "
                         f"block VMEM estimate {est} B exceeds budget "
                         f"{VMEM_BUDGET} B ({VMEM_BYTES} B/core with "
                         "Mosaic headroom)")
+    return bad
+
+
+def audit_tuning_table(path: str | None = None) -> list[str]:
+    """PL007: every persisted TuningTable entry re-validates.
+
+    A table edited by hand (or produced by a stale tuner) could smuggle
+    a geometry past the VMEM/step-space invariants straight into the
+    planner; this audit re-runs :func:`validate_tiling` over every entry
+    of the table at ``path`` (default: the ``REPRO_TUNING_TABLE``
+    environment variable; no table configured = nothing to check).
+    ``TuningTable.load`` runs the same validation loudly at load time --
+    the audit exists so lint catches a bad table before any run does.
+    """
+    import os
+
+    from ..tune.table import TuningTable
+    path = path or os.environ.get("REPRO_TUNING_TABLE")
+    if not path or not os.path.exists(path):
+        return []
+    try:
+        table = TuningTable.load(path)
+    except ValueError as e:
+        return [f"tuning table {path}: failed to load: {e}"]
+    bad = []
+    for key, entry in table.entries.items():
+        g = entry.geometry
+        for v in validate_tiling(entry.n, g.lanes, g.steps_per_chunk,
+                                 g.window):
+            bad.append(f"tuning table {path} [{key}]: {v}")
     return bad
 
 
@@ -267,6 +343,7 @@ def audit_eval_shape(ns=(6, 10, 14), batch: int = 3) -> list[str]:
     import jax
     import jax.numpy as jnp
 
+    from ..core.stepspace import DEFAULT_GEOMETRY
     from ..kernels.ops import _pallas_values
     bad = []
     for n in ns:
@@ -280,8 +357,8 @@ def audit_eval_shape(ns=(6, 10, 14), batch: int = 3) -> list[str]:
                     out = jax.eval_shape(
                         lambda As: _pallas_values(
                             As, batched=batched, precision="dq_acc",
-                            mode="baseline", lanes=128, steps_per_chunk=64,
-                            window=16, interpret=True),
+                            mode="baseline", geometry=DEFAULT_GEOMETRY,
+                            interpret=True),
                         spec)
                 except Exception as e:  # noqa: BLE001 -- audit surface
                     bad.append(f"{tag}: eval_shape raised {e!r}")
@@ -304,6 +381,7 @@ AUDITS = (
     ("vmem-budget", audit_vmem_budget, False),
     ("step-coverage", audit_step_coverage, False),
     ("sentinel-masking", audit_sentinel_masking, False),
+    ("tuning-table", audit_tuning_table, False),   # PL007
     ("routes", audit_routes, True),       # True: imports jax
     ("eval-shape", audit_eval_shape, True),
 )

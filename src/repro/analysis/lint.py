@@ -45,6 +45,7 @@ DEFAULT_EXCLUDES = ("lint_fixtures",)
 # seed's models/configs/train tree reachable, which is exactly the
 # leftover surface this inventory exists to expose.
 ENTRY_POINTS = ("repro.launch.permanent", "repro.launch.campaign",
+                "repro.launch.tune",
                 "repro.core.solver", "repro.serve.loop",
                 "repro.analysis.lint", "repro.analysis.geometry")
 

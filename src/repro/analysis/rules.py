@@ -21,9 +21,10 @@ postmortem (see docs/INVARIANTS.md for the full catalog):
   policy (``_POLICY_FIELDS``) so ``fingerprint()`` can never silently
   ignore a new knob (PR 2's fingerprint bug class).
 * **PL006** cache-key completeness: ``ResultCache.key`` call sites must
-  bind every component including ``backend`` and ``dtype`` -- kernel/jnp
-  values collided in the cache before PR 5 carried the producing
-  backend and leaf dtype.
+  bind every component including ``backend``, ``dtype`` and
+  ``geometry`` -- kernel/jnp values collided in the cache before PR 5
+  carried the producing backend and leaf dtype, and PR 9 made the
+  resolved kernel geometry part of numeric identity.
 
 Plus two pyflakes-class hygiene rules so the tree lints clean without
 external tools (ruff runs on top when installed): **PLF01** unused
@@ -407,13 +408,14 @@ def _check_config_classified(ctx: FileContext) -> list[Finding]:
 # ---------------------------------------------------------------------------
 
 _CACHE_KEY_PARAMS = ("leaf_key", "route", "precision", "backend",
-                     "num_chunks", "dtype")
+                     "num_chunks", "dtype", "geometry")
 
 
 @_rule("PL006", "cache-key-completeness",
        invariant="ResultCache.key call sites bind every component "
-                 "including backend and dtype (kernel/jnp values and "
-                 "real/complex leaves must never share an entry)")
+                 "including backend, dtype and geometry (kernel/jnp "
+                 "values, real/complex leaves, and distinct kernel "
+                 "geometries must never share an entry)")
 def _check_cache_key(ctx: FileContext) -> list[Finding]:
     out = []
     for node in ast.walk(ctx.tree):

@@ -32,7 +32,8 @@ class ResultCache:
 
     @staticmethod
     def key(leaf_key: str, route: str, precision: str, backend: str,
-            num_chunks: int, dtype: str = "<f8") -> tuple:
+            num_chunks: int, dtype: str = "<f8",
+            geometry: str = "-") -> tuple:
         """Full cache key: content hash + every numerics-affecting knob.
 
         Precision mode, backend and chunk geometry all perturb the
@@ -45,9 +46,15 @@ class ResultCache:
         zeros are different computations (real engine vs split-plane
         engine) and must never share an entry.  ``precision`` is the
         plan's *effective* precision, so a complex ``qq`` plan stores and
-        finds its values under ``kahan``.
+        finds its values under ``kahan``.  ``geometry`` is the resolved
+        Pallas kernel geometry tag (``Geometry.tag()``) when a kernel
+        produced the value -- geometry changes the fixed-order reduction
+        shape, so two geometries must never share an entry -- and the
+        ``"-"`` sentinel for geometry-free producers (jnp et al.), so
+        tuning never splits or contaminates jnp-produced values.
         """
-        return (leaf_key, route, precision, backend, num_chunks, dtype)
+        return (leaf_key, route, precision, backend, num_chunks, dtype,
+                geometry)
 
     def __len__(self) -> int:
         return len(self._data)

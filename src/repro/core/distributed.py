@@ -66,7 +66,7 @@ from . import precision as P
 from .resume import JobState
 from .ryser import (batched_values, batched_values_complex, chunk_geometry,
                     complex_precision, nw_base_vector, _final_factor)
-from .stepspace import plan_slices
+from .stepspace import DEFAULT_GEOMETRY, Geometry, plan_slices
 
 __all__ = ["permanent_on_mesh", "slice_sums_on_mesh", "run_campaign",
            "CampaignPaused",
@@ -259,11 +259,13 @@ def permanent_on_mesh(A, mesh: Mesh, *, precision: str = "dq_acc",
 
 @lru_cache(maxsize=None)
 def _wave_fn(mesh: Mesh, chunks_per_slice: int, chunk_size: int,
-             precision: str, backend: str):
+             precision: str, backend: str, geometry: Geometry | None = None):
     """Compiled per-wave mesh program for one (mesh, geometry, precision,
     backend) -- cached so a many-wave campaign compiles ONCE per
     configuration instead of once per wave (jit caches on function
     identity; a fresh closure per call would retrace every wave).
+    ``geometry`` (the tuned kernel geometry, pallas backend only) is part
+    of the cache key: two geometries are two different wave programs.
 
     The body masks sentinel lanes (slice id < 0): a padded device runs an
     arithmetically-discarded slice-0 program -- under SPMD every device
@@ -279,7 +281,7 @@ def _wave_fn(mesh: Mesh, chunks_per_slice: int, chunk_size: int,
             fn = _pallas_device_partials_complex \
                 if jnp.iscomplexobj(A_rep) else _pallas_device_partials
             parts = fn(A_rep, first_chunk, chunks_per_slice, chunk_size,
-                       precision, vma=frozenset(axes))
+                       precision, geometry=geometry, vma=frozenset(axes))
         else:
             parts = _dyn_chunk_partials(A_rep, first_chunk,
                                         chunks_per_slice,
@@ -299,14 +301,16 @@ def _wave_fn(mesh: Mesh, chunks_per_slice: int, chunk_size: int,
 
 def slice_sums_on_mesh(A, mesh: Mesh, slice_ids: np.ndarray, *,
                        chunks_per_slice: int, chunk_size: int,
-                       precision: str = "dq_acc", backend: str = "jnp"):
+                       precision: str = "dq_acc", backend: str = "jnp",
+                       geometry: Geometry | None = None):
     """Per-slice twofloat sums for one wave of D slices (no reduction).
 
     slice_ids: (D,) int32, one slice per device.  Entries < 0 are
     sentinel padding for short waves: their lanes return exact zeros and
     callers must discard them explicitly (``run_campaign`` does) -- no
     already-done slice is ever re-recorded.  Returns (his, los) of shape
-    (D,).
+    (D,).  ``geometry`` tunes the per-device kernel launch (pallas
+    backend only; the jnp body has no kernel geometry).
     """
     A = jnp.asarray(A)
     D = math.prod(mesh.devices.shape)
@@ -316,23 +320,28 @@ def slice_sums_on_mesh(A, mesh: Mesh, slice_ids: np.ndarray, *,
     dev_slices = jax.device_put(slice_ids.reshape(D, 1),
                                 NamedSharding(mesh, P_(axes)))
     his, los = _wave_fn(mesh, chunks_per_slice, chunk_size,
-                        precision, backend)(A, dev_slices)
+                        precision, backend, geometry)(A, dev_slices)
     return np.asarray(his), np.asarray(los)
 
 
 def _pallas_device_partials(A_rep, first_chunk, T: int, C: int,
-                            precision: str, vma=None):
+                            precision: str, geometry: Geometry | None = None,
+                            vma=None):
     """Per-device Pallas kernel over the chunk range [first_chunk,
     first_chunk+T); the kernel's u64 lane math consumes the traced base
-    index, so the same program serves every device (shard_map-safe)."""
+    index, so the same program serves every device (shard_map-safe).
+    ``geometry`` tunes lanes (block size within T) and the update window
+    (within C); T and C themselves come from the CampaignSpec and are
+    part of the campaign's numeric identity, not the tuner's."""
     from ..kernels.ops import pad_matrix, pad_base_vector
     from ..kernels.ryser_pallas import ryser_pallas_call
     from .ryser import nw_base_vector
 
     n = A_rep.shape[0]
-    TB = min(128, T)
+    g = geometry or DEFAULT_GEOMETRY
+    TB = min(g.lanes, T)
     num_blocks = T // TB
-    Wu = min(16, C)
+    Wu = min(g.window, C)
     A_pad = pad_matrix(A_rep)
     xb = pad_base_vector(nw_base_vector(A_rep), A_pad.shape[0]).reshape(-1, 1)
     prec = precision if precision in ("dd", "kahan", "dq_acc", "dq_fast") \
@@ -345,7 +354,9 @@ def _pallas_device_partials(A_rep, first_chunk, T: int, C: int,
 
 
 def _pallas_device_partials_complex(A_rep, first_chunk, T: int, C: int,
-                                    precision: str, vma=None):
+                                    precision: str,
+                                    geometry: Geometry | None = None,
+                                    vma=None):
     """Split-plane complex analogue of ``_pallas_device_partials``: per-
     device complex kernel over [first_chunk, first_chunk+T), partials
     re-packed as a complex TwoFloat so the caller's twofloat psum
@@ -355,9 +366,10 @@ def _pallas_device_partials_complex(A_rep, first_chunk, T: int, C: int,
     from .ryser import nw_base_vector
 
     n = A_rep.shape[0]
-    TB = min(128, T)
+    g = geometry or DEFAULT_GEOMETRY
+    TB = min(g.lanes, T)
     num_blocks = T // TB
-    Wu = min(16, C)
+    Wu = min(g.window, C)
     Ar_pad, Ai_pad = split_matrix_planes(A_rep)
     xbr, xbi = split_base_planes(nw_base_vector(A_rep), Ar_pad.shape[0])
     prec = precision if precision in ("dd", "kahan", "dq_acc", "dq_fast") \
@@ -588,7 +600,8 @@ class CampaignPaused(Exception):
 
 def run_campaign(A, mesh: Mesh, *, total_slices: int, chunks_per_slice: int,
                  chunk_size: int, precision: str = "dq_acc",
-                 backend: str = "jnp", checkpoint_path: str | None = None,
+                 backend: str = "jnp", geometry: Geometry | None = None,
+                 checkpoint_path: str | None = None,
                  state: JobState | None = None, progress_cb=None,
                  max_waves: int | None = None, max_wave_retries: int = 2):
     """Execute a step-space campaign in device-count-sized waves.
@@ -623,7 +636,8 @@ def run_campaign(A, mesh: Mesh, *, total_slices: int, chunks_per_slice: int,
         state = JobState.load_or_create(
             checkpoint_path, A, total_slices, precision=precision,
             backend=backend, chunks_per_slice=chunks_per_slice,
-            chunk_size=chunk_size)
+            chunk_size=chunk_size,
+            geometry=geometry.tag() if geometry is not None else "-")
     waves = 0
     retries = 0
     while True:
@@ -637,7 +651,8 @@ def run_campaign(A, mesh: Mesh, *, total_slices: int, chunks_per_slice: int,
         try:
             his, los = slice_sums_on_mesh(
                 A, mesh, ids, chunks_per_slice=chunks_per_slice,
-                chunk_size=chunk_size, precision=precision, backend=backend)
+                chunk_size=chunk_size, precision=precision, backend=backend,
+                geometry=geometry)
         except Exception:
             # preempted/straggling wave: nothing recorded, its slices
             # stay pending and the next iteration re-forms the wave

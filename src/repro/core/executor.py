@@ -148,24 +148,28 @@ class Backend:
     in the module docstring: one bucket -> (B,) ndarray, or ``None`` to
     downgrade to ``jnp``.  ``value_backend`` names the strategy whose
     numerics actually serve a leaf -- the result-cache identity.
+    ``geometry`` is the leaf's resolved kernel geometry (config override
+    or tuning-table hit); only kernel-backed strategies honor it, the
+    jnp engines ignore it (their numerics have no kernel geometry).
     """
 
     name = "?"
 
     def dense(self, M: np.ndarray, *, precision: str, num_chunks: int,
-              ctx: Any | None = None) -> complex | float:
+              geometry=None, ctx: Any | None = None) -> complex | float:
         raise NotImplementedError
 
     def sparse(self, sp, *, precision: str, num_chunks: int,
-               ctx: Any | None = None) -> complex | float:
+               geometry=None, ctx: Any | None = None) -> complex | float:
         raise NotImplementedError
 
     def dense_batch(self, stack: np.ndarray, *, precision: str,
-                    num_chunks: int,
+                    num_chunks: int, geometry=None,
                     ctx: Any | None = None) -> np.ndarray | None:
         return None
 
     def sparse_batch(self, sps: list, *, precision: str, num_chunks: int,
+                     geometry=None,
                      ctx: Any | None = None) -> np.ndarray | None:
         return None
 
@@ -186,19 +190,21 @@ class JnpBackend(Backend):
 
     name = "jnp"
 
-    def dense(self, M, *, precision, num_chunks, ctx=None):
+    def dense(self, M, *, precision, num_chunks, geometry=None, ctx=None):
         return _scalar(R.perm_ryser_chunked(M, num_chunks=num_chunks,
                                             precision=precision))
 
-    def sparse(self, sp, *, precision, num_chunks, ctx=None):
+    def sparse(self, sp, *, precision, num_chunks, geometry=None, ctx=None):
         return _scalar(S.perm_sparyser_chunked(sp, num_chunks=num_chunks,
                                                precision=precision))
 
-    def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
+    def dense_batch(self, stack, *, precision, num_chunks, geometry=None,
+                    ctx=None):
         return np.asarray(R.perm_ryser_batched(stack, num_chunks=num_chunks,
                                                precision=precision))
 
-    def sparse_batch(self, sps, *, precision, num_chunks, ctx=None):
+    def sparse_batch(self, sps, *, precision, num_chunks, geometry=None,
+                     ctx=None):
         return np.asarray(S.perm_sparyser_batched(sps, num_chunks=num_chunks,
                                                   precision=precision))
 
@@ -223,32 +229,35 @@ class PallasBackend(JnpBackend):
     def _supported(self, M_or_stack) -> bool:
         return self._kernel_ok(M_or_stack.shape[-1])
 
-    def dense(self, M, *, precision, num_chunks, ctx=None):
+    def dense(self, M, *, precision, num_chunks, geometry=None, ctx=None):
         if self._supported(M):
             from ..kernels import ops as K
-            return _scalar(K.permanent_pallas(M, precision=precision))
+            return _scalar(K.permanent_pallas(M, precision=precision,
+                                              geometry=geometry))
         return super().dense(M, precision=precision, num_chunks=num_chunks)
 
-    def sparse(self, sp, *, precision, num_chunks, ctx=None):
+    def sparse(self, sp, *, precision, num_chunks, geometry=None, ctx=None):
         if self._kernel_ok(sp.n):
             from ..kernels import ops as K
-            return _scalar(K.permanent_pallas_sparse(sp,
-                                                     precision=precision))
+            return _scalar(K.permanent_pallas_sparse(sp, precision=precision,
+                                                     geometry=geometry))
         return super().sparse(sp, precision=precision,
                               num_chunks=num_chunks)
 
-    def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
+    def dense_batch(self, stack, *, precision, num_chunks, geometry=None,
+                    ctx=None):
         if self._supported(stack):
             from ..kernels import ops as K
             return np.asarray(K.permanent_pallas_batched(
-                stack, precision=precision))
+                stack, precision=precision, geometry=geometry))
         return None                  # dispatcher falls back + tags downgrade
 
-    def sparse_batch(self, sps, *, precision, num_chunks, ctx=None):
+    def sparse_batch(self, sps, *, precision, num_chunks, geometry=None,
+                     ctx=None):
         if self._kernel_ok(sps[0].n):
             from ..kernels import ops as K
             return np.asarray(K.permanent_pallas_sparse_batched(
-                sps, precision=precision))
+                sps, precision=precision, geometry=geometry))
         return None                  # tiny bucket: jnp fallback, tagged
 
     def value_backend(self, route, n, *, batched, ctx=None):
@@ -273,7 +282,8 @@ class DistributedBatchBackend(JnpBackend):
 
     name = "distributed_batch"
 
-    def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
+    def dense_batch(self, stack, *, precision, num_chunks, geometry=None,
+                    ctx=None):
         mesh = _ctx_mesh(ctx)
         if mesh is None:
             return None              # no mesh attached: tagged jnp downgrade
@@ -281,7 +291,8 @@ class DistributedBatchBackend(JnpBackend):
         return Dm.batch_permanents_on_mesh(stack, mesh, precision=precision,
                                            num_chunks=num_chunks)
 
-    def sparse_batch(self, sps, *, precision, num_chunks, ctx=None):
+    def sparse_batch(self, sps, *, precision, num_chunks, geometry=None,
+                     ctx=None):
         mesh = _ctx_mesh(ctx)
         if mesh is None:
             return None
@@ -310,7 +321,7 @@ class DistributedBackend(JnpBackend):
 
     name = "distributed"
 
-    def dense(self, M, *, precision, num_chunks, ctx=None):
+    def dense(self, M, *, precision, num_chunks, geometry=None, ctx=None):
         if ctx is not None:
             # a DistributedPermanent runner computes at ITS OWN precision
             # (ctx.permanent takes none) -- only honor it when that agrees
@@ -324,13 +335,17 @@ class DistributedBackend(JnpBackend):
                                                 precision=precision))
         return super().dense(M, precision=precision, num_chunks=num_chunks)
 
-    def dense_batch(self, stack, *, precision, num_chunks, ctx=None):
+    def dense_batch(self, stack, *, precision, num_chunks, geometry=None,
+                    ctx=None):
         return get_backend("distributed_batch").dense_batch(
-            stack, precision=precision, num_chunks=num_chunks, ctx=ctx)
+            stack, precision=precision, num_chunks=num_chunks,
+            geometry=geometry, ctx=ctx)
 
-    def sparse_batch(self, sps, *, precision, num_chunks, ctx=None):
+    def sparse_batch(self, sps, *, precision, num_chunks, geometry=None,
+                     ctx=None):
         return get_backend("distributed_batch").sparse_batch(
-            sps, precision=precision, num_chunks=num_chunks, ctx=ctx)
+            sps, precision=precision, num_chunks=num_chunks,
+            geometry=geometry, ctx=ctx)
 
     def value_backend(self, route, n, *, batched, ctx=None):
         if batched:
@@ -374,7 +389,8 @@ class CampaignBackend(Backend):
             M, mesh, total_slices=spec.total_slices,
             chunks_per_slice=spec.chunks_per_slice,
             chunk_size=spec.chunk_size, precision=spec.precision,
-            backend=spec.backend, checkpoint_path=checkpoint_path,
+            backend=spec.backend, geometry=spec.geometry,
+            checkpoint_path=checkpoint_path,
             progress_cb=progress_cb, max_waves=max_waves)
         if value is None:
             raise Dm.CampaignPaused(state)
@@ -415,6 +431,25 @@ _FALLBACK = "jnp"
 # Plan execution
 # ---------------------------------------------------------------------------
 
+def _geometry_tag(leaf: LeafTask, produced_by: str) -> str:
+    """Geometry component of the cache key for ``leaf``.
+
+    A geometry tag enters the key only when kernel numerics actually
+    depend on it: campaign leaves carry theirs on the spec (the wave
+    body is the kernel), plain leaves only when a Pallas kernel serves
+    them.  Values produced by the jnp engines -- including pallas->jnp
+    downgrades -- key under the ``"-"`` sentinel so tuning never splits
+    or contaminates geometry-free results.
+    """
+    if leaf.route == ROUTE_CAMPAIGN:
+        g = leaf.campaign.geometry if leaf.campaign is not None else None
+    elif produced_by == "pallas":
+        g = leaf.geometry
+    else:
+        g = None
+    return g.tag() if g is not None else "-"
+
+
 def _cache_key(leaf: LeafTask, plan: ExecutionPlan, produced_by: str) -> tuple:
     """Result-cache key for ``leaf``.
 
@@ -427,10 +462,14 @@ def _cache_key(leaf: LeafTask, plan: ExecutionPlan, produced_by: str) -> tuple:
     content hash): a float64 leaf and a complex128 leaf with zero
     imaginary part must never collide, and ``plan.precision`` is the
     *effective* precision, so a complex ``qq`` plan keys under ``kahan``.
+    Resolved kernel geometry joins the key the same way (see
+    :func:`_geometry_tag`): two geometries reduce in different fixed
+    orders and must never share an entry.
     """
     return ResultCache.key(leaf.key, leaf.route, plan.precision,
                            produced_by, plan.config.num_chunks,
-                           leaf.matrix.dtype.str)
+                           dtype=leaf.matrix.dtype.str,
+                           geometry=_geometry_tag(leaf, produced_by))
 
 
 def _run_leaf(leaf: LeafTask, plan: ExecutionPlan, backend: Backend,
@@ -455,7 +494,8 @@ def _run_leaf(leaf: LeafTask, plan: ExecutionPlan, backend: Backend,
         sp = S.SparseMatrix.from_dense(leaf.matrix)
         t0 = time.perf_counter()
         val = backend.sparse(sp, precision=plan.precision,
-                             num_chunks=cfg.num_chunks, ctx=ctx)
+                             num_chunks=cfg.num_chunks,
+                             geometry=leaf.geometry, ctx=ctx)
         stats.record_time(f"sparse(n={n},{produced})",
                           time.perf_counter() - t0)
     else:
@@ -464,7 +504,8 @@ def _run_leaf(leaf: LeafTask, plan: ExecutionPlan, backend: Backend,
         report.dispatch.append(f"dense(n={n})")
         t0 = time.perf_counter()
         val = backend.dense(leaf.matrix, precision=plan.precision,
-                            num_chunks=cfg.num_chunks, ctx=ctx)
+                            num_chunks=cfg.num_chunks,
+                            geometry=leaf.geometry, ctx=ctx)
         stats.record_time(f"dense(n={n},{produced})",
                           time.perf_counter() - t0)
     stats.device_dispatches += 1
@@ -621,13 +662,13 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
             pending.setdefault((route, n), []).append(j)
 
     for (route, n), idxs in sorted(pending.items()):
-        leaves = [plan.leaves[j] for j in idxs]
-        bname = produced_by(leaves[0], True)
+        bucket_leaves = [plan.leaves[j] for j in idxs]
         if route == ROUTE_CAMPAIGN:
             # campaign leaves never share a device program: each is its
             # own checkpointed wave sequence (probe key == store key --
             # the campaign identity is batched-independent)
-            for leaf in leaves:
+            bname = produced_by(bucket_leaves[0], True)
+            for leaf in bucket_leaves:
                 val = run_campaign_leaf(leaf)
                 if cache is not None:
                     k = _cache_key(leaf, plan, bname)
@@ -635,60 +676,76 @@ def execute_plan(plan: ExecutionPlan, *, cache: ResultCache | None = None,
                     computed[k] = val
                 totals[leaf.owner] += leaf.coef * complex(val)
             continue
-        # ragged straggler: scalar path -- but only while the scalar
-        # strategy produces the same numerics family as the bucket one
-        # (under distributed+mesh the scalar path is the step-space
-        # split, which is NOT bit-identical to the batch engines and
-        # would be stored under a key the batched probes never use)
-        if len(leaves) == 1 and bname == produced_by(leaves[0], False):
-            leaf = leaves[0]
-            val = _run_leaf(leaf, plan, backend, reports[leaf.owner],
-                            stats, distributed_ctx)
-            if cache is not None:
-                cache.put(_cache_key(leaf, plan, bname), val)
-                computed[_cache_key(leaf, plan, bname)] = val
-            totals[leaf.owner] += leaf.coef * complex(val)
-            continue
-        tag = f"{route}_batch(n={n},b={len(leaves)})"
-        t_bucket = time.perf_counter()
-        if route == ROUTE_DENSE:
-            stack = np.stack([l.matrix for l in leaves])
-            vals = backend.dense_batch(stack, precision=plan.precision,
-                                       num_chunks=cfg.num_chunks,
-                                       ctx=distributed_ctx)
-            if vals is None:         # e.g. complex bucket under pallas
-                vals = fallback.dense_batch(stack, precision=plan.precision,
-                                            num_chunks=cfg.num_chunks)
-                tag = f"{route}_batch(n={n},b={len(leaves)}," \
-                      f"{cfg.backend}->{_FALLBACK})"
-                stats.downgrades.append(tag)
-                bname = _FALLBACK    # the fallback produced these values
-        else:
-            sps = [S.SparseMatrix.from_dense(l.matrix) for l in leaves]
-            vals = backend.sparse_batch(sps, precision=plan.precision,
-                                        num_chunks=cfg.num_chunks,
-                                        ctx=distributed_ctx)
-            if vals is None:
-                vals = fallback.sparse_batch(sps, precision=plan.precision,
-                                             num_chunks=cfg.num_chunks)
-                tag = f"{route}_batch(n={n},b={len(leaves)}," \
-                      f"{cfg.backend}->{_FALLBACK})"
-                stats.downgrades.append(tag)
-                bname = _FALLBACK
-        stats.device_dispatches += 1
-        stats.batched_leaves += len(leaves)
-        stats.record_time(f"{route}_batch(n={n},{bname})",
-                          time.perf_counter() - t_bucket,
-                          leaves=len(leaves))
-        vals = np.asarray(vals)
-        for leaf, v in zip(leaves, vals):
-            v = _scalar(v)
-            reports[leaf.owner].dispatch.append(tag)
-            if cache is not None:
-                cache.put(_cache_key(leaf, plan, bname), v)
-                computed[_cache_key(leaf, plan,
-                                    produced_by(leaf, True))] = v
-            totals[leaf.owner] += leaf.coef * v
+        # one device program per resolved kernel geometry: a (route, n)
+        # bucket can mix densities whose tuning-table hits differ, and
+        # geometry is a static jit argument AND numeric identity -- such
+        # leaves must never share a dispatch
+        groups: dict[str, list[LeafTask]] = {}
+        for leaf in bucket_leaves:
+            gtag = leaf.geometry.tag() if leaf.geometry is not None else "-"
+            groups.setdefault(gtag, []).append(leaf)
+        for _gtag, leaves in sorted(groups.items()):
+            bname = produced_by(leaves[0], True)
+            geometry = leaves[0].geometry
+            # ragged straggler: scalar path -- but only while the scalar
+            # strategy produces the same numerics family as the bucket
+            # one (under distributed+mesh the scalar path is the
+            # step-space split, which is NOT bit-identical to the batch
+            # engines and would be stored under a key the batched probes
+            # never use)
+            if len(leaves) == 1 and bname == produced_by(leaves[0], False):
+                leaf = leaves[0]
+                val = _run_leaf(leaf, plan, backend, reports[leaf.owner],
+                                stats, distributed_ctx)
+                if cache is not None:
+                    cache.put(_cache_key(leaf, plan, bname), val)
+                    computed[_cache_key(leaf, plan, bname)] = val
+                totals[leaf.owner] += leaf.coef * complex(val)
+                continue
+            tag = f"{route}_batch(n={n},b={len(leaves)})"
+            t_bucket = time.perf_counter()
+            if route == ROUTE_DENSE:
+                stack = np.stack([l.matrix for l in leaves])
+                vals = backend.dense_batch(stack, precision=plan.precision,
+                                           num_chunks=cfg.num_chunks,
+                                           geometry=geometry,
+                                           ctx=distributed_ctx)
+                if vals is None:     # e.g. tiny bucket under pallas
+                    vals = fallback.dense_batch(stack,
+                                                precision=plan.precision,
+                                                num_chunks=cfg.num_chunks)
+                    tag = f"{route}_batch(n={n},b={len(leaves)}," \
+                          f"{cfg.backend}->{_FALLBACK})"
+                    stats.downgrades.append(tag)
+                    bname = _FALLBACK   # the fallback produced these values
+            else:
+                sps = [S.SparseMatrix.from_dense(l.matrix) for l in leaves]
+                vals = backend.sparse_batch(sps, precision=plan.precision,
+                                            num_chunks=cfg.num_chunks,
+                                            geometry=geometry,
+                                            ctx=distributed_ctx)
+                if vals is None:
+                    vals = fallback.sparse_batch(sps,
+                                                 precision=plan.precision,
+                                                 num_chunks=cfg.num_chunks)
+                    tag = f"{route}_batch(n={n},b={len(leaves)}," \
+                          f"{cfg.backend}->{_FALLBACK})"
+                    stats.downgrades.append(tag)
+                    bname = _FALLBACK
+            stats.device_dispatches += 1
+            stats.batched_leaves += len(leaves)
+            stats.record_time(f"{route}_batch(n={n},{bname})",
+                              time.perf_counter() - t_bucket,
+                              leaves=len(leaves))
+            vals = np.asarray(vals)
+            for leaf, v in zip(leaves, vals):
+                v = _scalar(v)
+                reports[leaf.owner].dispatch.append(tag)
+                if cache is not None:
+                    cache.put(_cache_key(leaf, plan, bname), v)
+                    computed[_cache_key(leaf, plan,
+                                        produced_by(leaf, True))] = v
+                totals[leaf.owner] += leaf.coef * v
 
     for leaf in followers:                 # duplicates of scheduled leaves
         # resolve from this call's own results, not the shared cache -- an

@@ -35,7 +35,7 @@ from typing import Any
 import numpy as np
 
 from . import decompose as D
-from .stepspace import plan_slices
+from .stepspace import Geometry, plan_slices
 
 __all__ = [
     "DENSITY_SWITCH",
@@ -72,6 +72,14 @@ class SolverConfig:
     dm: bool | None = None           # override DM elimination
     fm: bool | None = None           # override Forbert-Marx compression
     num_chunks: int = 4096           # Alg. 3 tau (rounded to power of two)
+    # Pallas kernel geometry resolution (config override > tuning-table
+    # hit > kernel defaults).  ``geometry`` pins one explicit Geometry
+    # for every kernel leaf; ``tuning_table`` points at an on-disk
+    # ``repro.tune`` TuningTable resolved per (route, n, density, dtype,
+    # precision) at plan time.  The *resolved* per-leaf geometry is part
+    # of numeric identity (fingerprints, cache keys, checkpoints).
+    geometry: Geometry | None = None
+    tuning_table: str | None = None
     # Step-space campaign routing: a single leaf whose Ryser-step estimate
     # exceeds campaign_threshold re-routes to ROUTE_CAMPAIGN -- its step
     # space is cut into resumable slices (geometry recorded in the plan as
@@ -134,10 +142,12 @@ class CampaignSpec:
     chunk_size: int
     precision: str                   # effective precision of the wave body
     backend: str                     # per-device slice body: jnp | pallas
+    geometry: Geometry | None = None   # pallas wave-body kernel geometry
 
     def as_tuple(self) -> tuple:
         return (self.total_slices, self.chunks_per_slice, self.chunk_size,
-                self.precision, self.backend)
+                self.precision, self.backend,
+                self.geometry.tag() if self.geometry else None)
 
 
 @dataclass
@@ -148,6 +158,11 @@ class LeafTask:
     matrix: np.ndarray               # post-DM/FM leaf (float64 / complex128)
     route: str                       # dense | sparse | inline | step_sharded
     campaign: CampaignSpec | None = None   # set iff route == step_sharded
+    # Resolved kernel geometry; set iff a Pallas kernel will produce this
+    # leaf's value (config.backend == "pallas", n above the kernel floor).
+    # None = the producing backend runs without geometry (jnp et al.), so
+    # jnp-plan fingerprints and cache keys are untouched by tuning.
+    geometry: Geometry | None = None
     _key: str | None = None
 
     @property
@@ -218,10 +233,16 @@ class ExecutionPlan:
     # on numerics is already captured in the fingerprint body via each
     # leaf's route and ``CampaignSpec.as_tuple()``, so hashing the raw
     # knobs would only split identical executions.  cache/queue knobs and
-    # the injected clock never touch device work at all.
+    # the injected clock never touch device work at all.  geometry /
+    # tuning_table follow the campaign precedent: they steer *which*
+    # kernel geometry each leaf resolves to, and the resolved value is
+    # hashed per leaf in the fingerprint body (LeafTask.geometry /
+    # CampaignSpec.geometry) -- hashing the raw knobs (a table *path*)
+    # would split plans whose resolved execution is identical.
     _POLICY_FIELDS = ("campaign_threshold", "campaign_slices",
                       "campaign_lanes", "campaign_checkpoint",
-                      "campaign_max_waves", "cache", "cache_entries",
+                      "campaign_max_waves", "geometry", "tuning_table",
+                      "cache", "cache_entries",
                       "queue_max_batch", "queue_max_delay_s", "clock")
 
     def fingerprint(self) -> tuple:
@@ -236,7 +257,8 @@ class ExecutionPlan:
         return (
             cfg, self.batched, self.is_complex, self.precision,
             tuple((l.owner, complex(l.coef), l.route, l.key,
-                   l.campaign.as_tuple() if l.campaign else None)
+                   l.campaign.as_tuple() if l.campaign else None,
+                   l.geometry.as_tuple() if l.geometry else None)
                   for l in self.leaves),
             tuple(sorted((r, n, tuple(idx))
                          for (r, n), idx in self.buckets.items())),
@@ -271,7 +293,8 @@ class ExecutionPlan:
             "leaves": [
                 {"owner": l.owner, "n": l.n, "route": l.route,
                  "coef": _num(l.coef), "key": l.key,
-                 "campaign": asdict(l.campaign) if l.campaign else None}
+                 "campaign": asdict(l.campaign) if l.campaign else None,
+                 "geometry": l.geometry.tag() if l.geometry else None}
                 for l in self.leaves],
             "buckets": [
                 {"route": r, "n": n, "size": len(idx), "leaves": list(idx)}
@@ -321,14 +344,45 @@ def _preprocess_leaves(work: np.ndarray, mplan: MatrixPlan,
     return leaves
 
 
+def _density_of(m: np.ndarray) -> float:
+    n = m.shape[0]
+    return float((m != 0).sum()) / max(1, n * n)
+
+
 def _route(m: np.ndarray, batched: bool) -> str:
     n = m.shape[0]
     if batched and n <= 2:
         return ROUTE_INLINE          # closed form, folded at execute time
-    density = float((m != 0).sum()) / max(1, n * n)
-    if n <= 2 or density >= DENSITY_SWITCH:
+    if n <= 2 or _density_of(m) >= DENSITY_SWITCH:
         return ROUTE_DENSE
     return ROUTE_SPARSE
+
+
+# Below this n the pallas backend's _kernel_ok falls back to jnp (the
+# kernel floor in core/executor.py) -- no kernel, no geometry identity.
+_KERNEL_FLOOR_N = 4
+
+
+def _resolve_geometry(config: SolverConfig, route: str, n: int,
+                      density: float, dtype_str: str,
+                      precision: str) -> Geometry | None:
+    """config override > tuning-table hit > None (kernel defaults).
+
+    The table import is lazy and only happens when a table is configured:
+    the default planning path stays jax-free and file-I/O-free.
+    """
+    if config.geometry is not None:
+        return config.geometry
+    if config.tuning_table is None:
+        return None
+    from ..tune.table import resolve_geometry
+    g = resolve_geometry(config.tuning_table, route, n, density,
+                         dtype_str, precision)
+    if g is None and route == ROUTE_CAMPAIGN:
+        # campaign wave bodies fall back to the dense-route entry
+        g = resolve_geometry(config.tuning_table, ROUTE_DENSE, n, density,
+                             dtype_str, precision)
+    return g
 
 
 def _leaf_cost(m: np.ndarray, route: str) -> float:
@@ -391,11 +445,27 @@ def build_plan(mats: list[np.ndarray], config: SolverConfig, *,
                     leaf.n, config.campaign_slices, 1,
                     config.campaign_lanes)
                 leaf.route = ROUTE_CAMPAIGN
+                cbackend = "pallas" if config.backend == "pallas" else "jnp"
                 leaf.campaign = CampaignSpec(
                     total_slices=ts, chunks_per_slice=cps, chunk_size=C,
                     precision=precision,
-                    backend="pallas" if config.backend == "pallas"
-                    else "jnp")
+                    backend=cbackend,
+                    geometry=_resolve_geometry(
+                        config, ROUTE_CAMPAIGN, leaf.n,
+                        _density_of(leaf.matrix), leaf.matrix.dtype.str,
+                        precision) if cbackend == "pallas" else None)
+                leaf.geometry = None   # identity lives on the CampaignSpec
+
+    # Kernel geometry resolution: only leaves a Pallas kernel will
+    # actually produce carry one -- jnp/distributed plans (and tiny-n
+    # fallback leaves) keep geometry out of their identity entirely.
+    if config.backend == "pallas":
+        for leaf in leaves:
+            if leaf.route in (ROUTE_DENSE, ROUTE_SPARSE) and \
+                    leaf.n >= _KERNEL_FLOOR_N:
+                leaf.geometry = _resolve_geometry(
+                    config, leaf.route, leaf.n, _density_of(leaf.matrix),
+                    leaf.matrix.dtype.str, precision)
 
     buckets: dict[tuple[str, int], list[int]] = {}
     for j, leaf in enumerate(leaves):

@@ -34,9 +34,14 @@ __all__ = ["JobState", "FORMAT_VERSION"]
 
 # v2: config-safety fields (precision/backend/chunk geometry) added; v1
 # (the unversioned seed format) checkpoints are rejected at load.
-FORMAT_VERSION = 2
+# v3: kernel ``geometry`` tag joins the config-safety set -- pallas wave
+# partials reduce in a fixed order set by the kernel geometry, so a
+# campaign checkpointed under one tuned geometry must not resume under
+# another ("-" = no kernel geometry, i.e. jnp wave bodies).
+FORMAT_VERSION = 3
 
-_CONFIG_KEYS = ("precision", "backend", "chunks_per_slice", "chunk_size")
+_CONFIG_KEYS = ("precision", "backend", "chunks_per_slice", "chunk_size",
+                "geometry")
 
 
 def matrix_fingerprint(A: np.ndarray) -> str:
@@ -59,6 +64,7 @@ class JobState:
     backend: str = "jnp"      # per-device slice body: jnp | pallas
     chunks_per_slice: int = 0
     chunk_size: int = 0
+    geometry: str = "-"       # kernel Geometry.tag(), "-" = none (jnp)
     version: int = FORMAT_VERSION
 
     # ------------------------------------------------------------------
@@ -66,7 +72,7 @@ class JobState:
     def create(matrix: np.ndarray, total_slices: int, *,
                precision: str = "dq_acc", backend: str = "jnp",
                chunks_per_slice: int = 0,
-               chunk_size: int = 0) -> "JobState":
+               chunk_size: int = 0, geometry: str = "-") -> "JobState":
         # complex jobs checkpoint complex slice sums: the twofloat
         # reduction below is add/sub only, which is componentwise-exact
         # under complex arithmetic
@@ -78,7 +84,8 @@ class JobState:
             hi=np.zeros(total_slices, dtype=dtype),
             lo=np.zeros(total_slices, dtype=dtype),
             precision=precision, backend=backend,
-            chunks_per_slice=chunks_per_slice, chunk_size=chunk_size)
+            chunks_per_slice=chunks_per_slice, chunk_size=chunk_size,
+            geometry=geometry)
 
     @staticmethod
     def load(path: str) -> "JobState":
@@ -102,6 +109,7 @@ class JobState:
                 backend=str(z["backend"]),
                 chunks_per_slice=int(z["chunks_per_slice"]),
                 chunk_size=int(z["chunk_size"]),
+                geometry=str(z["geometry"]),
                 version=version)
 
     @staticmethod
@@ -109,7 +117,8 @@ class JobState:
                        total_slices: int, *,
                        precision: str = "dq_acc", backend: str = "jnp",
                        chunks_per_slice: int = 0,
-                       chunk_size: int = 0) -> "JobState":
+                       chunk_size: int = 0,
+                       geometry: str = "-") -> "JobState":
         if path and os.path.exists(path):
             state = JobState.load(path)
             if state.fingerprint != matrix_fingerprint(matrix):
@@ -123,7 +132,7 @@ class JobState:
                     "decomposition or finish with the code that wrote it")
             want = {"precision": precision, "backend": backend,
                     "chunks_per_slice": chunks_per_slice,
-                    "chunk_size": chunk_size}
+                    "chunk_size": chunk_size, "geometry": geometry}
             bad = [k for k in _CONFIG_KEYS
                    if getattr(state, k) != want[k]]
             if bad:
@@ -139,7 +148,7 @@ class JobState:
         return JobState.create(matrix, total_slices, precision=precision,
                                backend=backend,
                                chunks_per_slice=chunks_per_slice,
-                               chunk_size=chunk_size)
+                               chunk_size=chunk_size, geometry=geometry)
 
     # ------------------------------------------------------------------
     def pending_slices(self) -> list[int]:
@@ -181,7 +190,8 @@ class JobState:
                      done=self.done, hi=self.hi, lo=self.lo,
                      precision=self.precision, backend=self.backend,
                      chunks_per_slice=self.chunks_per_slice,
-                     chunk_size=self.chunk_size, version=self.version)
+                     chunk_size=self.chunk_size, geometry=self.geometry,
+                     version=self.version)
             # np.savez appends .npz to names without it
             produced = tmp if tmp.endswith(".npz") else tmp + ".npz"
             if os.path.exists(produced) and produced != tmp:

@@ -20,8 +20,73 @@ the device engines.
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 
-__all__ = ["chunk_geometry", "plan_slices"]
+__all__ = ["Geometry", "DEFAULT_GEOMETRY", "chunk_geometry", "kernel_geometry",
+           "plan_slices"]
+
+
+@dataclass(frozen=True)
+class Geometry:
+    """Requested Pallas kernel geometry: one frozen, hashable value.
+
+    ``lanes`` / ``steps_per_chunk`` / ``window`` are the *requested* knobs;
+    :func:`kernel_geometry` clamps them to the 2^{n-1} step space per
+    matrix size.  A ``Geometry`` is a single jit static argument (one
+    retrace axis instead of three) and -- because it changes the
+    fixed-order reduction shape -- part of a value's numeric identity:
+    it is hashed into plan fingerprints, appended to ``ResultCache``
+    keys, and persisted in campaign checkpoints (see docs/INVARIANTS.md).
+    """
+
+    lanes: int = 128
+    steps_per_chunk: int = 64
+    window: int = 16
+    max_blocks: int | None = None
+
+    def as_tuple(self):
+        return (self.lanes, self.steps_per_chunk, self.window,
+                self.max_blocks)
+
+    def tag(self) -> str:
+        """Short stable string for cache keys / checkpoints / reports."""
+        base = f"{self.lanes}x{self.steps_per_chunk}x{self.window}"
+        return base if self.max_blocks is None else f"{base}b{self.max_blocks}"
+
+    @staticmethod
+    def from_tag(tag: str) -> "Geometry":
+        body, _, mb = tag.partition("b")
+        lanes, spc, window = (int(p) for p in body.split("x"))
+        return Geometry(lanes, spc, window, int(mb) if mb else None)
+
+    def kernel_geometry(self, n: int):
+        """Clamp this geometry to n's step space -> (TB, C, Wu, num_blocks)."""
+        return kernel_geometry(n, lanes=self.lanes,
+                               steps_per_chunk=self.steps_per_chunk,
+                               window=self.window, max_blocks=self.max_blocks)
+
+
+DEFAULT_GEOMETRY = Geometry()
+
+
+def kernel_geometry(n: int, *, lanes: int = 128, steps_per_chunk: int = 64,
+                    window: int = 16, max_blocks: int | None = None):
+    """Pick (TB, C, Wu, num_blocks) covering the 2^{n-1} step space.
+
+    All power-of-two; TB * C * num_blocks == 2^{n-1}.  For small test
+    matrices the requested sizes are clamped down.  Pure host math --
+    the Pallas wrappers in ``kernels/ryser_pallas.py`` re-export it.
+    """
+    space = 1 << (n - 1)
+    TB = min(lanes, max(2, space // 4))
+    TB = 1 << int(math.floor(math.log2(TB)))
+    C = min(steps_per_chunk, space // TB)
+    C = max(2, 1 << int(math.floor(math.log2(C))))
+    Wu = max(2, min(window, C))
+    num_blocks = space // (TB * C)
+    if max_blocks is not None:
+        num_blocks = min(num_blocks, max_blocks)
+    return TB, C, Wu, num_blocks
 
 
 def chunk_geometry(n: int, num_chunks: int):

@@ -34,10 +34,11 @@ import jax.numpy as jnp
 
 from ..core import precision as P
 from ..core.ryser import nw_base_vector, _final_factor
-from .ryser_pallas import (kernel_geometry, ryser_pallas_call,
-                           ryser_pallas_call_batched)
+from ..core.stepspace import DEFAULT_GEOMETRY, Geometry
+from .ryser_pallas import ryser_pallas_call, ryser_pallas_call_batched
 
-__all__ = ["permanent_pallas", "permanent_pallas_batched",
+__all__ = ["Geometry", "DEFAULT_GEOMETRY",
+           "permanent_pallas", "permanent_pallas_batched",
            "permanent_pallas_sparse", "permanent_pallas_sparse_batched",
            "sparse_batched_values_pallas",
            "block_partials_pallas", "kernel_reduce", "pad_matrix",
@@ -101,15 +102,14 @@ def kernel_reduce(parts_hi, parts_lo, p0, n: int, axis=None):
 
 def block_partials_pallas(A, *, dev_chunk_base: int = 0,
                           num_blocks: int | None = None,
-                          lanes: int = 128, steps_per_chunk: int = 64,
-                          window: int = 16, precision: str = "dq_acc",
+                          geometry: Geometry | None = None,
+                          precision: str = "dq_acc",
                           mode: str = "baseline", interpret: bool = True):
     """Run the kernel over ``num_blocks`` blocks starting at chunk
     ``dev_chunk_base``; returns (num_blocks, 2) (hi, lo) partials."""
     A = jnp.asarray(A)
     n = A.shape[0]
-    TB, C, Wu, full_blocks = kernel_geometry(
-        n, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window)
+    TB, C, Wu, full_blocks = (geometry or DEFAULT_GEOMETRY).kernel_geometry(n)
     if num_blocks is None:
         num_blocks = full_blocks
     A_pad = pad_matrix(A)
@@ -174,18 +174,17 @@ def _reduce_complex(out, xbs, n: int, batched: bool):
 
 
 def _pallas_values(As, *, batched: bool, precision: str, mode: str,
-                   lanes: int, steps_per_chunk: int, window: int,
-                   interpret: bool):
+                   geometry: Geometry, interpret: bool):
     """One traced body behind every public dense pallas entry.
 
     ``As`` is (n, n) (``batched=False``) or (B, n, n); real input launches
     the real kernel, complex input the split-plane kernels -- everything
     else (geometry, padding, NW base vectors, the twofloat epilogue) is
-    shared.
+    shared.  ``geometry`` is the single frozen knob bundle the tuner
+    injects; its requested sizes are clamped to n's step space here.
     """
     n = As.shape[-1]
-    TB, C, Wu, blocks = kernel_geometry(
-        n, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window)
+    TB, C, Wu, blocks = geometry.kernel_geometry(n)
 
     if not jnp.iscomplexobj(As):
         A_pads, xb_pads, xbs = _prep_real(As, batched)
@@ -214,19 +213,16 @@ def _pallas_values(As, *, batched: bool, precision: str, mode: str,
     return _reduce_complex(out, xbs, n, batched)
 
 
-@partial(jax.jit, static_argnames=("batched", "precision", "mode", "lanes",
-                                   "steps_per_chunk", "window", "interpret"))
-def _pallas_values_jit(As, batched, precision, mode, lanes, steps_per_chunk,
-                       window, interpret):
+@partial(jax.jit, static_argnames=("batched", "precision", "mode",
+                                   "geometry", "interpret"))
+def _pallas_values_jit(As, batched, precision, mode, geometry, interpret):
     return _pallas_values(As, batched=batched, precision=precision,
-                          mode=mode, lanes=lanes,
-                          steps_per_chunk=steps_per_chunk, window=window,
-                          interpret=interpret)
+                          mode=mode, geometry=geometry, interpret=interpret)
 
 
 def _pallas_sparse_values(A_stack, rows_stack, vals_stack, *, batched: bool,
-                          precision: str, lanes: int, steps_per_chunk: int,
-                          window: int, interpret: bool):
+                          precision: str, geometry: Geometry,
+                          interpret: bool):
     """Sparse arm of the dispatch helper (SpaRyser on Pallas).
 
     Mirrors ``_pallas_values`` over the padded-CCS layout of
@@ -242,8 +238,7 @@ def _pallas_sparse_values(A_stack, rows_stack, vals_stack, *, batched: bool,
     generation, amortized over the bucket.
     """
     n = A_stack.shape[-1]
-    TB, C, Wu, blocks = kernel_geometry(
-        n, lanes=lanes, steps_per_chunk=steps_per_chunk, window=window)
+    TB, C, Wu, blocks = geometry.kernel_geometry(n)
     from .ryser_sparse import (ryser_sparse_pallas_call,
                                ryser_sparse_pallas_call_batched,
                                ryser_sparse_pallas_call_complex,
@@ -280,23 +275,19 @@ def _pallas_sparse_values(A_stack, rows_stack, vals_stack, *, batched: bool,
     return _reduce_complex(out, xbs, n, batched)
 
 
-@partial(jax.jit, static_argnames=("batched", "precision", "lanes",
-                                   "steps_per_chunk", "window", "interpret"))
+@partial(jax.jit, static_argnames=("batched", "precision", "geometry",
+                                   "interpret"))
 def _pallas_sparse_values_jit(A_stack, rows_stack, vals_stack, batched,
-                              precision, lanes, steps_per_chunk, window,
-                              interpret):
+                              precision, geometry, interpret):
     return _pallas_sparse_values(A_stack, rows_stack, vals_stack,
                                  batched=batched, precision=precision,
-                                 lanes=lanes,
-                                 steps_per_chunk=steps_per_chunk,
-                                 window=window, interpret=interpret)
+                                 geometry=geometry, interpret=interpret)
 
 
 def sparse_batched_values_pallas(A_stack, rows_stack, vals_stack, *,
                                  precision: str = "dq_acc",
-                                 lanes: int = 128,
-                                 steps_per_chunk: int = 64,
-                                 window: int = 16, interpret: bool = True):
+                                 geometry: Geometry | None = None,
+                                 interpret: bool = True):
     """Traced (B,) sparse kernel values of a packed padded-CCS stack.
 
     The un-jitted traced body behind ``permanent_pallas_sparse_batched``,
@@ -306,14 +297,13 @@ def sparse_batched_values_pallas(A_stack, rows_stack, vals_stack, *,
     """
     return _pallas_sparse_values(A_stack, rows_stack, vals_stack,
                                  batched=True, precision=precision,
-                                 lanes=lanes,
-                                 steps_per_chunk=steps_per_chunk,
-                                 window=window, interpret=interpret)
+                                 geometry=geometry or DEFAULT_GEOMETRY,
+                                 interpret=interpret)
 
 
 def permanent_pallas(A, *, precision: str = "dq_acc", mode: str = "baseline",
-                     lanes: int = 128, steps_per_chunk: int = 64,
-                     window: int = 16, interpret: bool = True):
+                     geometry: Geometry | None = None,
+                     interpret: bool = True):
     """perm(A) via the Pallas kernel (full iteration space, one device).
 
     Complex matrices run the split re/im kernel (window-batched mode)."""
@@ -325,13 +315,13 @@ def permanent_pallas(A, *, precision: str = "dq_acc", mode: str = "baseline",
         return A[0, 0] * A[1, 1] + A[0, 1] * A[1, 0]
     if jnp.iscomplexobj(A):
         mode = "batched"             # the split-plane kernel's only mode
-    return _pallas_values_jit(A, False, precision, mode, lanes,
-                              steps_per_chunk, window, interpret)
+    return _pallas_values_jit(A, False, precision, mode,
+                              geometry or DEFAULT_GEOMETRY, interpret)
 
 
 def permanent_pallas_batched(As, *, precision: str = "dq_acc",
-                             mode: str = "batched", lanes: int = 128,
-                             steps_per_chunk: int = 64, window: int = 16,
+                             mode: str = "batched",
+                             geometry: Geometry | None = None,
                              interpret: bool = True):
     """perm of a (B, n, n) stack via ONE batch-grid kernel launch.
 
@@ -354,13 +344,13 @@ def permanent_pallas_batched(As, *, precision: str = "dq_acc",
         mode = "batched"             # the split-plane kernel's only mode
     elif mode not in ("baseline", "batched"):
         raise ValueError(f"batch grid supports baseline|batched, got {mode}")
-    return _pallas_values_jit(As, True, precision, mode, lanes,
-                              steps_per_chunk, window, interpret)
+    return _pallas_values_jit(As, True, precision, mode,
+                              geometry or DEFAULT_GEOMETRY, interpret)
 
 
 def permanent_pallas_sparse(sp, *, precision: str = "dq_acc",
-                            lanes: int = 128, steps_per_chunk: int = 64,
-                            window: int = 16, interpret: bool = True):
+                            geometry: Geometry | None = None,
+                            interpret: bool = True):
     """perm of one ``sparyser.SparseMatrix`` via the SpaRyser kernel.
 
     The scalar sparse entry the executor's pallas backend dispatches to:
@@ -377,14 +367,11 @@ def permanent_pallas_sparse(sp, *, precision: str = "dq_acc",
     rows, vals = sp.padded_columns()
     return _pallas_sparse_values_jit(A, jnp.asarray(rows),
                                      jnp.asarray(vals), False, precision,
-                                     lanes, steps_per_chunk, window,
-                                     interpret)
+                                     geometry or DEFAULT_GEOMETRY, interpret)
 
 
 def permanent_pallas_sparse_batched(sps, *, precision: str = "dq_acc",
-                                    lanes: int = 128,
-                                    steps_per_chunk: int = 64,
-                                    window: int = 16,
+                                    geometry: Geometry | None = None,
                                     interpret: bool = True):
     """perms of a same-size ``SparseMatrix`` bucket via ONE (batch, block)
     grid SpaRyser kernel launch.
@@ -406,5 +393,5 @@ def permanent_pallas_sparse_batched(sps, *, precision: str = "dq_acc",
     return _pallas_sparse_values_jit(jnp.asarray(A_stack),
                                      jnp.asarray(rows_stack),
                                      jnp.asarray(vals_stack), True,
-                                     precision, lanes, steps_per_chunk,
-                                     window, interpret)
+                                     precision, geometry or DEFAULT_GEOMETRY,
+                                     interpret)

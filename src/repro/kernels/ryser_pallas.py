@@ -44,6 +44,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from ..core import gray as G
+from ..core.stepspace import kernel_geometry
 from ..utils.compat import shape_dtype_struct
 from . import u64emu as U
 
@@ -72,25 +73,6 @@ def device_base_u32(dev_chunk_base):
         base_hi = jnp.zeros((1, 1), jnp.uint32) * b.astype(jnp.uint32)
         base_lo = b.astype(jnp.uint32).reshape(1, 1)
     return base_hi.reshape(1, 1), base_lo
-
-
-def kernel_geometry(n: int, *, lanes: int = 128, steps_per_chunk: int = 64,
-                    window: int = 16, max_blocks: int | None = None):
-    """Pick (TB, C, Wu, num_blocks) covering the 2^{n-1} step space.
-
-    All power-of-two; TB * C * num_blocks == 2^{n-1}.  For small test
-    matrices the requested sizes are clamped down.
-    """
-    space = 1 << (n - 1)
-    TB = min(lanes, max(2, space // 4))
-    TB = 1 << int(math.floor(math.log2(TB)))
-    C = min(steps_per_chunk, space // TB)
-    C = max(2, 1 << int(math.floor(math.log2(C))))
-    Wu = max(2, min(window, C))
-    num_blocks = space // (TB * C)
-    if max_blocks is not None:
-        num_blocks = min(num_blocks, max_blocks)
-    return TB, C, Wu, num_blocks
 
 
 def _signed_const_schedule(Wu: int):

@@ -15,6 +15,12 @@ back.  Two layers fix that:
   a throwaway solver before traffic is admitted.  Tracing happens once,
   up front; with a warm disk cache the XLA compile step is a cache hit,
   so a restarted process serves its first bucket with zero compiles.
+  The throwaway solver plans with the *serving* config, so when
+  ``SolverConfig.tuning_table`` is set the planner resolves the tuned
+  kernel geometry per bucket and the warmed programs ARE the tuned
+  ones -- a tuned service serves its first bucket with zero XLA
+  compiles, same as an untuned one (``benchmarks/serve_soak.py`` gates
+  this across two cold processes).
 
 :func:`compile_stats` exposes jax's compilation-cache monitoring events
 (requests / persistent hits / persistent misses) as plain counters; the
@@ -129,6 +135,10 @@ def warmup(config, geometries: Sequence[tuple], *,
     geometry once through a throwaway solver (result cache off, so the
     synthetic warm-up matrices never pollute the serving cache; the jit
     and persistent-compile caches warmed here are process/disk-global).
+    The solver keeps the serving config's ``geometry`` override and
+    ``tuning_table`` -- bucket programs are planned with the same
+    resolved kernel geometry the live loop will dispatch, so tuning
+    never reintroduces a first-bucket compile.
     Returns ``{"geometries", "seconds", "compile"}`` where ``compile`` is
     the :func:`compile_stats` delta of the pass.
     """

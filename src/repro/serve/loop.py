@@ -185,10 +185,20 @@ class PermanentService:
         # campaign route, since run_campaign knows only those two bodies.
         backend = "pallas" if self.solver.config.backend == "pallas" \
             else "jnp"
+        # tuned kernel geometry follows the same resolution order as the
+        # planner's campaign route (config override > tuning table >
+        # kernel defaults); jnp wave bodies have no kernel geometry
+        geometry = None
+        if backend == "pallas":
+            from ..core.planner import ROUTE_CAMPAIGN, _resolve_geometry
+            geometry = _resolve_geometry(
+                self.solver.config, ROUTE_CAMPAIGN, cmat.shape[0],
+                float(np.count_nonzero(cmat)) / cmat.size,
+                cmat.dtype.str, self.solver.config.precision)
         val, st = run_campaign(
             cmat, mesh, total_slices=ts, chunks_per_slice=cps,
             chunk_size=C, precision=self.solver.config.precision,
-            backend=backend,
+            backend=backend, geometry=geometry,
             checkpoint_path=self._campaign.checkpoint,
             state=self._camp_state["state"], max_waves=waves)
         self._camp_state["state"], self._camp_state["value"] = st, val

@@ -1,0 +1,14 @@
+"""Kernel geometry autotuner (cost-model-seeded search + on-disk table).
+
+``table.py`` is the jax-free persistence layer the planner reads
+(:class:`~repro.tune.table.TuningTable`); ``search.py`` is the on-device
+tuner that fills it (enumerate valid candidates -> rank by roofline
+model -> measure top-k -> persist winners with the predicted-vs-measured
+ratio).  ``launch/tune.py`` is the CLI; ``benchmarks/autotune.py`` gates
+tuned >= untuned.
+"""
+
+from .table import TableEntry, TuningTable, density_bucket, resolve_geometry
+
+__all__ = ["TableEntry", "TuningTable", "density_bucket",
+           "resolve_geometry"]

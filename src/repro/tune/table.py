@@ -1,0 +1,251 @@
+"""On-disk tuning table: persisted kernel-geometry winners.
+
+The table is the contract between the tuner (``repro.tune.search``, runs
+once per hardware) and the planner (``core.planner``, reads it on every
+``build_plan`` when ``SolverConfig.tuning_table`` is set).  Keys follow
+the result cache's identity discipline: an entry is addressed by
+``(route, n, density_bucket, dtype, precision, device_kind)`` and the
+whole file is versioned *and* content-hash keyed against the kernel
+sources -- editing any file under ``kernels/`` invalidates every table
+loudly (``ValueError`` at load), because a geometry tuned for one kernel
+body may be invalid, slow, or numerically different for another.
+
+Every entry re-validates against the PR 8 geometry auditor at load time
+(rule PL007, ``analysis/geometry.py::validate_tiling``): a hand-edited
+table cannot smuggle a VMEM- or step-space-violating geometry into the
+planner.
+
+This module is jax-free (the planner must stay importable without jax);
+:func:`host_device_kind` imports jax lazily and only when a table is
+actually consulted.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from dataclasses import dataclass
+from functools import lru_cache
+
+from ..core.stepspace import Geometry
+
+__all__ = ["TABLE_FORMAT_VERSION", "TableEntry", "TuningTable",
+           "density_bucket", "host_device_kind", "kernel_sources_hash",
+           "resolve_geometry", "table_key"]
+
+TABLE_FORMAT_VERSION = 1
+
+# Any-device wildcard: entries tuned in interpret mode (CPU CI) are
+# recorded under the concrete host kind; ``resolve`` falls back to this.
+ANY_DEVICE = "any"
+
+
+def kernel_sources_hash() -> str:
+    """Content hash over every kernel source file.
+
+    Mirrors ``core/cache.py``'s content-hash discipline: the tuning
+    table's winners are only meaningful for the kernel bodies they were
+    measured against, so the hash covers all of ``src/repro/kernels/``.
+    """
+    from .. import kernels
+    kdir = os.path.dirname(os.path.abspath(kernels.__file__))
+    h = hashlib.sha1()
+    for fname in sorted(os.listdir(kdir)):
+        if not fname.endswith(".py"):
+            continue
+        h.update(fname.encode())
+        with open(os.path.join(kdir, fname), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+# Density is quantized so nearby sparsities share one tuned geometry
+# (and one table entry): quarter buckets, upper-edge labeled.
+_DENSITY_EDGES = (0.25, 0.50, 0.75, 1.00)
+
+
+def density_bucket(density: float) -> str:
+    for edge in _DENSITY_EDGES:
+        if density <= edge + 1e-12:
+            return f"{edge:.2f}"
+    return f"{_DENSITY_EDGES[-1]:.2f}"
+
+
+def table_key(route: str, n: int, density_b: str, dtype: str,
+              precision: str, device_kind: str) -> str:
+    return f"{route}/n{n}/d{density_b}/{dtype}/{precision}/{device_kind}"
+
+
+@lru_cache(maxsize=1)
+def host_device_kind() -> str:
+    """Normalized ``jax.devices()[0].device_kind`` (lazy; "cpu" fallback)."""
+    try:
+        import jax
+        return str(jax.devices()[0].device_kind).strip().lower()
+    except Exception:  # noqa: BLE001 -- detection must never raise
+        return "cpu"
+
+
+@dataclass(frozen=True)
+class TableEntry:
+    route: str
+    n: int
+    density_bucket: str
+    dtype: str                 # numpy dtype.str of the leaf, e.g. "<f8"
+    precision: str
+    device_kind: str
+    geometry: Geometry         # the winner (requested knobs, not clamped)
+    predicted_s: float         # cost-model time for the winner
+    measured_s: float          # median-of-repeats measured time
+    default_s: float           # measured time of DEFAULT_GEOMETRY
+
+    @property
+    def mispredict_ratio(self) -> float:
+        """Cost model predicted / measured (1.0 = perfect model)."""
+        return self.predicted_s / self.measured_s if self.measured_s else 0.0
+
+    @property
+    def speedup(self) -> float:
+        """Untuned-default time / tuned time (>= 1.0 by construction:
+        the default is always in the measured candidate set)."""
+        return self.default_s / self.measured_s if self.measured_s else 0.0
+
+    def key(self) -> str:
+        return table_key(self.route, self.n, self.density_bucket,
+                         self.dtype, self.precision, self.device_kind)
+
+    def to_dict(self) -> dict:
+        return {"route": self.route, "n": self.n,
+                "density_bucket": self.density_bucket, "dtype": self.dtype,
+                "precision": self.precision,
+                "device_kind": self.device_kind,
+                "geometry": self.geometry.tag(),
+                "predicted_s": self.predicted_s,
+                "measured_s": self.measured_s,
+                "default_s": self.default_s}
+
+    @staticmethod
+    def from_dict(d: dict) -> "TableEntry":
+        return TableEntry(route=d["route"], n=int(d["n"]),
+                          density_bucket=d["density_bucket"],
+                          dtype=d["dtype"], precision=d["precision"],
+                          device_kind=d["device_kind"],
+                          geometry=Geometry.from_tag(d["geometry"]),
+                          predicted_s=float(d["predicted_s"]),
+                          measured_s=float(d["measured_s"]),
+                          default_s=float(d["default_s"]))
+
+
+class TuningTable:
+    """In-memory view of the persisted table; ``entries`` keyed by
+    :func:`table_key`."""
+
+    def __init__(self, entries: dict[str, TableEntry] | None = None,
+                 kernels_hash: str | None = None):
+        self.entries: dict[str, TableEntry] = dict(entries or {})
+        self.kernels_hash = kernels_hash or kernel_sources_hash()
+
+    def put(self, entry: TableEntry) -> None:
+        self.entries[entry.key()] = entry
+
+    def get(self, route: str, n: int, density: float, dtype: str,
+            precision: str,
+            device_kind: str | None = None) -> TableEntry | None:
+        """Entry for the key, preferring the concrete device kind and
+        falling back to the ``any`` wildcard."""
+        bucket = density_bucket(density)
+        kinds = [device_kind or host_device_kind()]
+        if ANY_DEVICE not in kinds:
+            kinds.append(ANY_DEVICE)
+        for kind in kinds:
+            e = self.entries.get(
+                table_key(route, n, bucket, dtype, precision, kind))
+            if e is not None:
+                return e
+        return None
+
+    def resolve(self, route: str, n: int, density: float, dtype: str,
+                precision: str,
+                device_kind: str | None = None) -> Geometry | None:
+        e = self.get(route, n, density, dtype, precision, device_kind)
+        return e.geometry if e is not None else None
+
+    def validate(self) -> list[str]:
+        """PL007: re-validate every entry against the geometry auditor."""
+        from ..analysis.geometry import validate_tiling
+        bad = []
+        for key, e in self.entries.items():
+            g = e.geometry
+            for v in validate_tiling(e.n, g.lanes, g.steps_per_chunk,
+                                     g.window):
+                bad.append(f"[{key}] {v}")
+        return bad
+
+    def save(self, path: str) -> None:
+        doc = {"format": "repro.tune.table/v%d" % TABLE_FORMAT_VERSION,
+               "version": TABLE_FORMAT_VERSION,
+               "kernels_hash": self.kernels_hash,
+               "entries": [e.to_dict() for _, e in
+                           sorted(self.entries.items())]}
+        d = os.path.dirname(os.path.abspath(path)) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)   # atomic like core/resume.py
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    @classmethod
+    def load(cls, path: str, *, strict_hash: bool = True) -> "TuningTable":
+        """Load + loudly invalidate: version skew, kernel-source drift,
+        and geometry-invariant violations (PL007) all raise ValueError."""
+        with open(path) as f:
+            doc = json.load(f)
+        ver = doc.get("version")
+        if ver != TABLE_FORMAT_VERSION:
+            raise ValueError(
+                f"tuning table {path}: format version {ver!r} != "
+                f"{TABLE_FORMAT_VERSION} -- re-run the tuner "
+                "(python -m repro.launch.tune)")
+        have = doc.get("kernels_hash")
+        want = kernel_sources_hash()
+        if strict_hash and have != want:
+            raise ValueError(
+                f"tuning table {path}: kernel sources changed since "
+                f"tuning (table hash {have!r}, current {want!r}) -- "
+                "geometry winners are stale; re-run the tuner")
+        entries = {}
+        for d in doc.get("entries", ()):
+            e = TableEntry.from_dict(d)
+            entries[e.key()] = e
+        table = cls(entries, kernels_hash=have)
+        bad = table.validate()
+        if bad:
+            raise ValueError(
+                f"tuning table {path}: {len(bad)} entr(ies) violate the "
+                "geometry invariants (PL007): " + "; ".join(bad[:3]))
+        return table
+
+
+@lru_cache(maxsize=8)
+def _load_cached(path: str, mtime_ns: int) -> TuningTable:
+    return TuningTable.load(path)
+
+
+def resolve_geometry(path: str, route: str, n: int, density: float,
+                     dtype: str, precision: str,
+                     device_kind: str | None = None) -> Geometry | None:
+    """Planner entry point: table hit or None, mtime-cached per file.
+
+    A missing file is a hard error (a configured-but-absent table is a
+    deployment bug, not a tuning preference); a stale or invalid table
+    raises from :meth:`TuningTable.load`.
+    """
+    st = os.stat(path)
+    table = _load_cached(os.path.abspath(path), st.st_mtime_ns)
+    return table.resolve(route, n, density, dtype, precision, device_kind)

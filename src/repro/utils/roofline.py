@@ -1,4 +1,4 @@
-"""Three-term roofline model for TPU v5e (target hardware).
+"""Three-term roofline model over a small hardware-spec registry.
 
     compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
     memory term     = HLO_bytes / (chips * HBM_bw)
@@ -7,13 +7,21 @@
 FLOPs / bytes come from ``compiled.cost_analysis()`` (whole-program, i.e.
 all devices together -- divided by the chip count here); collective bytes
 from utils/hlo.py (per-participant already -- NOT divided again).
+
+Hardware is resolved by name through :data:`HW_SPECS`:
+:func:`detect_hw` maps ``jax.devices()[0].device_kind`` onto a registered
+spec (explicitly overridable via its argument or the ``REPRO_HW``
+environment variable), so the tuner's pruning model and the roofline
+report stop assuming v5e.  Unknown kinds fall back to ``tpu-v5e``.
 """
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, asdict
 
-__all__ = ["HW_V5E", "Roofline", "roofline_from_analysis"]
+__all__ = ["HwSpec", "HW_SPECS", "HW_V5E", "detect_hw", "get_hw",
+           "register_hw", "Roofline", "roofline_from_analysis"]
 
 
 @dataclass(frozen=True)
@@ -27,6 +35,67 @@ class HwSpec:
 HW_V5E = HwSpec(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
                 ici_bw=50e9)
 
+# Registered specs, keyed by canonical name.  Numbers are public
+# per-chip peaks (bf16 matmul FLOP/s, HBM bytes/s, per-link ICI
+# bytes/s); "cpu" is a deliberately rough host-interpreter stand-in so
+# interpret-mode tuning still ranks geometry by arithmetic/byte volume.
+HW_SPECS: dict[str, HwSpec] = {
+    "tpu-v4": HwSpec(name="tpu-v4", peak_flops=275e12, hbm_bw=1228e9,
+                     ici_bw=50e9),
+    "tpu-v5e": HW_V5E,
+    "tpu-v5p": HwSpec(name="tpu-v5p", peak_flops=459e12, hbm_bw=2765e9,
+                      ici_bw=100e9),
+    "tpu-v6e": HwSpec(name="tpu-v6e", peak_flops=918e12, hbm_bw=1640e9,
+                      ici_bw=100e9),
+    "cpu": HwSpec(name="cpu", peak_flops=100e9, hbm_bw=20e9, ici_bw=10e9),
+}
+
+_DEFAULT_HW = "tpu-v5e"
+
+# device_kind substrings -> registry keys, checked in order (the kind
+# strings vary across jax versions: "TPU v5e", "TPU v5 lite", ...).
+_KIND_PATTERNS = (
+    ("v5 lite", "tpu-v5e"), ("v5e", "tpu-v5e"), ("v5p", "tpu-v5p"),
+    ("v6", "tpu-v6e"), ("trillium", "tpu-v6e"), ("v4", "tpu-v4"),
+    ("cpu", "cpu"),
+)
+
+
+def register_hw(spec: HwSpec) -> None:
+    HW_SPECS[spec.name] = spec
+
+
+def get_hw(name: str | None = None) -> HwSpec:
+    """Spec by registry name; None/unknown falls back to the default."""
+    return HW_SPECS.get(name or _DEFAULT_HW, HW_V5E)
+
+
+def detect_hw(device_kind: str | None = None) -> HwSpec:
+    """Resolve the HwSpec for this host.
+
+    Precedence: explicit ``device_kind`` argument > ``REPRO_HW``
+    environment override (a registry name) > ``jax.devices()[0]``
+    autodetection > the v5e default.  jax is imported lazily and any
+    failure degrades to the default -- callers never see an exception.
+    """
+    override = os.environ.get("REPRO_HW")
+    if device_kind is None and override:
+        return get_hw(override)
+    kind = device_kind
+    if kind is None:
+        try:
+            import jax
+            kind = jax.devices()[0].device_kind
+        except Exception:  # noqa: BLE001 -- detection must never raise
+            return get_hw(None)
+    low = str(kind).lower()
+    if low in HW_SPECS:
+        return HW_SPECS[low]
+    for pat, name in _KIND_PATTERNS:
+        if pat in low:
+            return HW_SPECS[name]
+    return get_hw(None)
+
 
 @dataclass
 class Roofline:
@@ -37,27 +106,31 @@ class Roofline:
     model_flops: float = 0.0   # 6 N D (dense) / 6 N_active D (MoE)
     bytes_min: float = 0.0     # per-device argument+output traffic
                                # (fusion-optimal lower bound)
-    hw: str = "tpu-v5e"
+    hw: str = _DEFAULT_HW
+
+    @property
+    def spec(self) -> HwSpec:
+        return get_hw(self.hw)
 
     @property
     def compute_s(self) -> float:
-        return self.flops / (self.chips * HW_V5E.peak_flops)
+        return self.flops / (self.chips * self.spec.peak_flops)
 
     @property
     def memory_s(self) -> float:
         """Fusion-optimal bound: every input/output buffer touched once.
         (the unfused-HLO upper bound is memory_s_hlo)"""
         if self.bytes_min:
-            return self.bytes_min / HW_V5E.hbm_bw
+            return self.bytes_min / self.spec.hbm_bw
         return self.memory_s_hlo
 
     @property
     def memory_s_hlo(self) -> float:
-        return self.bytes_accessed / (self.chips * HW_V5E.hbm_bw)
+        return self.bytes_accessed / (self.chips * self.spec.hbm_bw)
 
     @property
     def collective_s(self) -> float:
-        return self.collective_bytes / HW_V5E.ici_bw
+        return self.collective_bytes / self.spec.ici_bw
 
     @property
     def dominant(self) -> str:
@@ -81,7 +154,7 @@ class Roofline:
         t = self.step_time_s
         if not t:
             return 0.0
-        return self.model_flops / (t * self.chips * HW_V5E.peak_flops)
+        return self.model_flops / (t * self.chips * self.spec.peak_flops)
 
     def to_dict(self) -> dict:
         d = asdict(self)
@@ -95,10 +168,11 @@ class Roofline:
 
 
 def roofline_from_analysis(cost: dict, coll_bytes: float, chips: int,
-                           model_flops: float,
-                           bytes_min: float = 0.0) -> Roofline:
+                           model_flops: float, bytes_min: float = 0.0,
+                           hw: str | None = None) -> Roofline:
     return Roofline(
         flops=float(cost.get("flops", 0.0)),
         bytes_accessed=float(cost.get("bytes accessed", 0.0)),
         collective_bytes=float(coll_bytes),
-        chips=chips, model_flops=model_flops, bytes_min=bytes_min)
+        chips=chips, model_flops=model_flops, bytes_min=bytes_min,
+        hw=hw or detect_hw().name)

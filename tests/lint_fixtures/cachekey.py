@@ -4,8 +4,9 @@
 class ResultCache:
     @staticmethod
     def key(leaf_key, route, precision, backend="jnp", num_chunks=4096,
-            dtype="<f8"):
-        return (leaf_key, route, precision, backend, num_chunks, dtype)
+            dtype="<f8", geometry="-"):
+        return (leaf_key, route, precision, backend, num_chunks, dtype,
+                geometry)
 
 
 def lookup(leaf_key):

@@ -23,7 +23,7 @@ import jax
 from repro.core import distributed, oracle, resume
 from repro.core.planner import ROUTE_CAMPAIGN, SolverConfig, build_plan
 from repro.core.solver import PermanentSolver
-from repro.core.stepspace import chunk_geometry, plan_slices
+from repro.core.stepspace import Geometry, chunk_geometry, plan_slices
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -162,7 +162,8 @@ def test_checkpoint_rejects_config_mismatch(tmp_path):
     val, st = _one_wave(A, ckpt)
     assert val is None and st.fraction_done() > 0
     for bad in (dict(precision="dd"), dict(backend="pallas"),
-                dict(chunk_size=4, chunks_per_slice=2 * st.chunks_per_slice)):
+                dict(chunk_size=4, chunks_per_slice=2 * st.chunks_per_slice),
+                dict(geometry=Geometry(64, 32, 8))):
         with pytest.raises(ValueError, match="config mismatch"):
             _one_wave(A, ckpt, **bad)
     # different total_slices fails on the slice count, not silently
@@ -174,6 +175,24 @@ def test_checkpoint_rejects_config_mismatch(tmp_path):
             chunk_size=st.chunk_size, checkpoint_path=ckpt)
     # and the matching config still resumes fine
     val2, _ = _one_wave(A, ckpt, max_waves=None)
+    assert val2 is not None
+
+
+def test_checkpoint_rejects_geometry_mismatch(tmp_path):
+    # ISSUE 9: kernel geometry is numeric identity -- partial sums
+    # accumulated under one tuned geometry must never be extended under
+    # another, even when every other config knob matches
+    A = np.random.default_rng(9).uniform(0.2, 1.0, (10, 10))
+    ckpt = str(tmp_path / "tuned.npz")
+    g_tuned = Geometry(64, 32, 8)
+    val, st = _one_wave(A, ckpt, backend="pallas", geometry=g_tuned)
+    assert val is None and st.geometry == g_tuned.tag()
+    for other in (Geometry(128, 64, 16), None):
+        with pytest.raises(ValueError, match="config mismatch"):
+            _one_wave(A, ckpt, backend="pallas", geometry=other)
+    # same geometry resumes and finishes
+    val2, _ = _one_wave(A, ckpt, backend="pallas", geometry=g_tuned,
+                        max_waves=None)
     assert val2 is not None
 
 
@@ -189,12 +208,14 @@ def test_checkpoint_rejects_preversion_format(tmp_path):
 def test_jobstate_persists_config_fields(tmp_path):
     A = np.random.default_rng(6).uniform(0.2, 1.0, (8, 8))
     st = resume.JobState.create(A, 4, precision="kahan", backend="pallas",
-                                chunks_per_slice=2, chunk_size=16)
+                                chunks_per_slice=2, chunk_size=16,
+                                geometry="64x32x8")
     p = str(tmp_path / "s.npz")
     st.save(p)
     st2 = resume.JobState.load(p)
     assert (st2.precision, st2.backend) == ("kahan", "pallas")
     assert (st2.chunks_per_slice, st2.chunk_size) == (2, 16)
+    assert st2.geometry == "64x32x8"
     assert st2.version == resume.FORMAT_VERSION
 
 

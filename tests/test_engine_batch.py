@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import engine, oracle, ryser, sparyser
+from repro.core.stepspace import Geometry as G
 from repro.kernels import ops
 
 RNG = np.random.default_rng(20260725)
@@ -123,7 +124,7 @@ def test_sparyser_batched_mixed_degrees_pad_to_bucket_max():
 def test_pallas_batched_matches_oracle(mode):
     As = RNG.uniform(-1, 1, (5, 8, 8))
     got = np.asarray(ops.permanent_pallas_batched(
-        jnp.asarray(As), mode=mode, lanes=8, steps_per_chunk=8, window=4))
+        jnp.asarray(As), mode=mode, geometry=G(8, 8, 4)))
     ref = np.array([oracle.perm_ryser_exact(A) for A in As])
     np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-12)
 
@@ -131,10 +132,9 @@ def test_pallas_batched_matches_oracle(mode):
 def test_pallas_batched_equals_scalar_kernel():
     As = RNG.uniform(-1, 1, (3, 9, 9))
     got = np.asarray(ops.permanent_pallas_batched(
-        jnp.asarray(As), lanes=8, steps_per_chunk=8, window=4))
+        jnp.asarray(As), geometry=G(8, 8, 4)))
     for b in range(3):
-        one = float(ops.permanent_pallas(As[b], mode="batched", lanes=8,
-                                         steps_per_chunk=8, window=4))
+        one = float(ops.permanent_pallas(As[b], mode="batched", geometry=G(8, 8, 4)))
         np.testing.assert_allclose(got[b], one, rtol=1e-12)
 
 
@@ -142,7 +142,7 @@ def test_pallas_batched_complex_matches_oracle():
     # ISSUE 4: complex stacks run the split-plane (batch, block) kernel
     Cs = RNG.uniform(-1, 1, (4, 8, 8)) + 1j * RNG.uniform(-1, 1, (4, 8, 8))
     got = np.asarray(ops.permanent_pallas_batched(
-        jnp.asarray(Cs), lanes=8, steps_per_chunk=8, window=4))
+        jnp.asarray(Cs), geometry=G(8, 8, 4)))
     ref = np.array([oracle.perm_ryser_exact(C) for C in Cs])
     np.testing.assert_allclose(got, ref, rtol=1e-9)
 
@@ -151,12 +151,10 @@ def test_pallas_batched_complex_equals_scalar_complex_kernel():
     Cs = RNG.uniform(-1, 1, (3, 9, 9)) + 1j * RNG.uniform(-1, 1, (3, 9, 9))
     for prec in ("dd", "kahan", "dq_acc"):
         got = np.asarray(ops.permanent_pallas_batched(
-            jnp.asarray(Cs), precision=prec, lanes=8, steps_per_chunk=8,
-            window=4))
+            jnp.asarray(Cs), precision=prec, geometry=G(8, 8, 4)))
         for b in range(3):
             one = complex(np.asarray(ops.permanent_pallas(
-                Cs[b], precision=prec, lanes=8, steps_per_chunk=8,
-                window=4)))
+                Cs[b], precision=prec, geometry=G(8, 8, 4))))
             assert got[b] == one, \
                 "batch grid must reuse the scalar complex block body"
 

@@ -19,6 +19,7 @@ import pytest
 from repro.core import engine, oracle, ryser
 from repro.core.sparyser import (SparseMatrix, perm_sparyser_batched,
                                  perm_sparyser_chunked)
+from repro.core.stepspace import Geometry
 from repro.kernels import ops
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -26,7 +27,7 @@ RNG = np.random.default_rng(23)
 
 PRECISIONS = ("dd", "dq_fast", "dq_acc", "qq", "kahan")
 # small kernel geometry: full coverage of the step space, CI-sized blocks
-KGEO = dict(lanes=8, steps_per_chunk=8, window=4)
+KGEO = dict(geometry=Geometry(8, 8, 4))
 
 
 def _rand_sparse(n, density, rng=RNG):

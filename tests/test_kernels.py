@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import oracle
 from repro.kernels import ops, ref
-from repro.kernels.ryser_pallas import kernel_geometry
+from repro.core.stepspace import Geometry as G
 
 RNG = np.random.default_rng(11)
 
@@ -17,8 +17,7 @@ RNG = np.random.default_rng(11)
 def test_kernel_matches_exact(n, mode):
     A = RNG.uniform(-1, 1, (n, n))
     want = oracle.perm_ryser_exact(A)
-    got = float(ops.permanent_pallas(A, mode=mode, lanes=8,
-                                     steps_per_chunk=8, window=4))
+    got = float(ops.permanent_pallas(A, mode=mode, geometry=G(8, 8, 4)))
     np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-12)
 
 
@@ -29,8 +28,7 @@ def test_kernel_matches_exact(n, mode):
 def test_geometry_sweep(lanes, spc, win, mode):
     A = RNG.uniform(-1, 1, (11, 11))
     want = oracle.perm_ryser_exact(A)
-    got = float(ops.permanent_pallas(A, mode=mode, lanes=lanes,
-                                     steps_per_chunk=spc, window=win))
+    got = float(ops.permanent_pallas(A, mode=mode, geometry=G(lanes, spc, win)))
     np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-12)
 
 
@@ -40,8 +38,7 @@ def test_geometry_sweep(lanes, spc, win, mode):
 def test_dtype_sweep(dtype, rtol, mode):
     A = RNG.uniform(0.1, 1.0, (10, 10)).astype(dtype)
     want = oracle.perm_ryser_exact(A.astype(np.float64))
-    got = float(ops.permanent_pallas(A, mode=mode, lanes=8,
-                                     steps_per_chunk=8, window=4))
+    got = float(ops.permanent_pallas(A, mode=mode, geometry=G(8, 8, 4)))
     np.testing.assert_allclose(got, want, rtol=rtol)
 
 
@@ -49,8 +46,7 @@ def test_dtype_sweep(dtype, rtol, mode):
 def test_precision_modes(precision):
     A = RNG.uniform(-1, 1, (10, 10))
     want = oracle.perm_ryser_exact(A)
-    got = float(ops.permanent_pallas(A, precision=precision, lanes=8,
-                                     steps_per_chunk=8, window=4))
+    got = float(ops.permanent_pallas(A, precision=precision, geometry=G(8, 8, 4)))
     np.testing.assert_allclose(got, want, rtol=1e-8)
 
 
@@ -59,7 +55,7 @@ def test_block_partials_match_ref_oracle():
     n = 10
     A = RNG.uniform(-1, 1, (n, n))
     out, (TB, C, Wu, blocks) = ops.block_partials_pallas(
-        A, lanes=8, steps_per_chunk=8, window=4)
+        A, geometry=G(8, 8, 4))
     want = ref.block_partials_ref(A, TB=TB, C=C, num_blocks=blocks)
     got = np.asarray(out[:, 0] + out[:, 1])
     np.testing.assert_allclose(
@@ -71,17 +67,14 @@ def test_device_offset_partials_compose():
     the full-space result -- the distributed decomposition invariant."""
     n = 11
     A = RNG.uniform(-1, 1, (n, n))
-    TB, C, Wu, blocks = kernel_geometry(n, lanes=8, steps_per_chunk=8,
-                                        window=4)
+    TB, C, Wu, blocks = G(8, 8, 4).kernel_geometry(n)
     assert blocks % 2 == 0
-    full, _ = ops.block_partials_pallas(A, lanes=8, steps_per_chunk=8,
-                                        window=4)
+    full, _ = ops.block_partials_pallas(A, geometry=G(8, 8, 4))
     lo_half, _ = ops.block_partials_pallas(
-        A, dev_chunk_base=0, num_blocks=blocks // 2, lanes=8,
-        steps_per_chunk=8, window=4)
+        A, dev_chunk_base=0, num_blocks=blocks // 2, geometry=G(8, 8, 4))
     hi_half, _ = ops.block_partials_pallas(
         A, dev_chunk_base=(blocks // 2) * TB, num_blocks=blocks // 2,
-        lanes=8, steps_per_chunk=8, window=4)
+        geometry=G(8, 8, 4))
     np.testing.assert_allclose(float(jnp.sum(full)),
                                float(jnp.sum(lo_half) + jnp.sum(hi_half)),
                                rtol=1e-12)
@@ -90,9 +83,8 @@ def test_device_offset_partials_compose():
 def test_kernel_vs_ref_permanent_api():
     n = 9
     A = RNG.uniform(-1, 1, (n, n))
-    TB, C, Wu, blocks = kernel_geometry(n, lanes=8, steps_per_chunk=8,
-                                        window=4)
-    a = float(ops.permanent_pallas(A, lanes=8, steps_per_chunk=8, window=4))
+    TB, C, Wu, blocks = G(8, 8, 4).kernel_geometry(n)
+    a = float(ops.permanent_pallas(A, geometry=G(8, 8, 4)))
     b = float(ref.permanent_ref(A, TB=TB, C=C, num_blocks=blocks))
     np.testing.assert_allclose(a, b, rtol=1e-12)
 
@@ -103,8 +95,7 @@ def test_property_kernel_matches_oracle(n, seed):
     rng = np.random.default_rng(seed)
     A = rng.uniform(-1, 1, (n, n))
     want = oracle.perm_ryser_exact(A)
-    got = float(ops.permanent_pallas(A, lanes=4, steps_per_chunk=4,
-                                     window=4))
+    got = float(ops.permanent_pallas(A, geometry=G(4, 4, 4)))
     np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-12)
 
 
@@ -112,8 +103,7 @@ def test_all_ones_family():
     for n in [6, 9, 12]:
         A = np.full((n, n), 0.5)
         want = oracle.all_ones_permanent(n, 0.5)
-        got = float(ops.permanent_pallas(A, lanes=8, steps_per_chunk=8,
-                                         window=8))
+        got = float(ops.permanent_pallas(A, geometry=G(8, 8, 8)))
         np.testing.assert_allclose(got, want, rtol=1e-10)
 
 
@@ -125,7 +115,7 @@ def test_complex_kernel_matches_oracle(n):
     A = rng.normal(size=(n, n)) + 1j * rng.normal(size=(n, n))
     want = oracle.perm_ryser_exact(A)
     got = complex(np.asarray(ops.permanent_pallas(
-        A, lanes=8, steps_per_chunk=8, window=4)))
+        A, geometry=G(8, 8, 4))))
     assert abs(got - want) / abs(want) < 1e-9
 
 
@@ -135,7 +125,7 @@ def test_complex_kernel_precisions(precision):
     A = rng.normal(size=(10, 10)) + 1j * rng.normal(size=(10, 10))
     want = oracle.perm_ryser_exact(A)
     got = complex(np.asarray(ops.permanent_pallas(
-        A, precision=precision, lanes=8, steps_per_chunk=16, window=8)))
+        A, precision=precision, geometry=G(8, 16, 8))))
     assert abs(got - want) / abs(want) < 1e-8
 
 
@@ -147,7 +137,7 @@ def test_complex_unitary_submatrix_probability():
     U = q * (np.diag(r) / np.abs(np.diag(r)))
     sub = U[:4, :4]
     amp = complex(np.asarray(ops.permanent_pallas(
-        sub, lanes=4, steps_per_chunk=4, window=4)))
+        sub, geometry=G(4, 4, 4))))
     want = oracle.perm_ryser_exact(sub)
     assert abs(amp - want) / abs(want) < 1e-10
     assert 0 <= abs(amp) ** 2 <= 1 + 1e-9

@@ -204,7 +204,7 @@ def test_geometry_audits_pass():
         assert violations == [], f"{name}: {violations}"
     assert set(results) == {"kernel-geometry", "vmem-budget",
                             "step-coverage", "sentinel-masking",
-                            "routes", "eval-shape"}
+                            "routes", "eval-shape", "tuning-table"}
 
 
 def test_geometry_jax_free_audits_run_without_jax_import():
@@ -213,7 +213,8 @@ def test_geometry_jax_free_audits_run_without_jax_import():
     from repro.analysis.geometry import run_audits
     results = run_audits(with_jax=False)
     assert set(results) == {"kernel-geometry", "vmem-budget",
-                            "step-coverage", "sentinel-masking"}
+                            "step-coverage", "sentinel-masking",
+                            "tuning-table"}
     assert all(v == [] for v in results.values())
 
 

@@ -154,11 +154,18 @@ def test_cache_hits_across_batch_members():
 
 
 def test_cache_respects_precision_and_backend():
-    key_a = ResultCache.key("abc", "dense", "dq_acc", "jnp", 64, "<f8")
-    key_b = ResultCache.key("abc", "dense", "kahan", "jnp", 64, "<f8")
-    key_c = ResultCache.key("abc", "dense", "dq_acc", "pallas", 64, "<f8")
-    key_d = ResultCache.key("abc", "dense", "dq_acc", "jnp", 64, "<c16")
-    assert len({key_a, key_b, key_c, key_d}) == 4
+    key_a = ResultCache.key("abc", "dense", "dq_acc", "jnp", 64, "<f8", "-")
+    key_b = ResultCache.key("abc", "dense", "kahan", "jnp", 64, "<f8", "-")
+    key_c = ResultCache.key("abc", "dense", "dq_acc", "pallas", 64, "<f8",
+                            "-")
+    key_d = ResultCache.key("abc", "dense", "dq_acc", "jnp", 64, "<c16", "-")
+    # geometry is numeric identity: the same leaf under two kernel
+    # geometries (and under the geometry-free default) never shares
+    key_e = ResultCache.key("abc", "dense", "dq_acc", "pallas", 64, "<f8",
+                            "128x64x16")
+    key_f = ResultCache.key("abc", "dense", "dq_acc", "pallas", 64, "<f8",
+                            "64x32x8")
+    assert len({key_a, key_b, key_c, key_d, key_e, key_f}) == 6
 
 
 def test_cache_lru_eviction_and_stats():
@@ -391,6 +398,30 @@ def test_pallas_and_jnp_sparse_values_use_distinct_cache_keys():
     assert all(k[3] == "pallas" for k in scal.cache._data)
 
 
+def test_same_leaf_under_two_geometries_never_shares_a_cache_entry():
+    # ISSUE 9: kernel geometry is numeric identity -- one matrix executed
+    # under two valid geometries lands in two cache entries (each tagged
+    # with its geometry), and a shared cache never serves one geometry's
+    # value to the other
+    from repro.core.stepspace import Geometry
+    A = RNG.uniform(0.2, 1.0, (8, 8))
+    g1, g2 = Geometry(128, 64, 16), Geometry(8, 8, 8)
+    s1 = PermanentSolver(SolverConfig(backend="pallas", preprocess=False,
+                                      geometry=g1))
+    v1 = s1.execute(s1.plan_batch([A]))
+    s2 = PermanentSolver(SolverConfig(backend="pallas", preprocess=False,
+                                      geometry=g2))
+    s2.cache = s1.cache                  # share the cache across configs
+    v2 = s2.execute(s2.plan_batch([A]))
+    np.testing.assert_allclose(v2, v1, rtol=1e-12)
+    tags = {k[6] for k in s1.cache._data}
+    assert tags == {g1.tag(), g2.tag()}, tags
+    assert len(s1.cache._data) == 2
+    assert s1.stats()["cache"]["hits"] == 0
+    assert s2.stats()["cache"]["hits"] == 0, \
+        "the second geometry must recompute, not hit the first's entry"
+
+
 def test_cache_key_separates_real_and_zero_imag_complex_leaves():
     # ISSUE 4 satellite: dtype is an explicit cache-key component -- a
     # float64 leaf and a complex128 leaf with zero imaginary part are
@@ -409,8 +440,8 @@ def test_cache_key_separates_real_and_zero_imag_complex_leaves():
     assert st["cache"]["hits"] == 0, \
         "the complex plan must not be served from the real plan's entry"
     # and the raw key helper keeps them apart even for equal content hashes
-    kr = ResultCache.key("h", "dense", "dq_acc", "jnp", 64, "<f8")
-    kc = ResultCache.key("h", "dense", "dq_acc", "jnp", 64, "<c16")
+    kr = ResultCache.key("h", "dense", "dq_acc", "jnp", 64, "<f8", "-")
+    kc = ResultCache.key("h", "dense", "dq_acc", "jnp", 64, "<c16", "-")
     assert kr != kc
 
 
