@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
-# Static-analysis gate (ISSUE 8): permlint (the repo's determinism &
-# precision invariants, see docs/INVARIANTS.md) + the geometry auditor
-# (kernel/plan shape validation, no device work) + a ruff pyflakes
-# baseline when ruff is installed (the offline dev image may not have
-# it; CI installs it).
+# Static-analysis gate (ISSUEs 8 + 10): permlint (the repo's
+# determinism & precision invariants, see docs/INVARIANTS.md), the
+# geometry auditor (kernel/plan shape validation, no device work),
+# permprove (IR-level PLI contracts + golden-trace drift gating), and a
+# ruff pyflakes baseline when ruff is installed (the offline dev image
+# may not have it; CI installs it).
 #
 #   scripts/lint.sh [--no-jax]      # --no-jax skips the auditor's
 #                                   # jax-importing audits
@@ -16,6 +17,12 @@ python -m repro.analysis.lint src tests
 
 echo "== geometry auditor (static plan/kernel validation)"
 python -m repro.analysis.geometry --check "$@"
+
+# Abstract tracing + compile-only HLO audit on CPU; the __main__ entry
+# forces 8 host devices so the PLI104 collective audit sees a real mesh.
+# IR_REPORT (optional) captures the JSON report for the CI artifact.
+echo "== permprove (IR contracts + golden-trace drift gate)"
+python -m repro.analysis.ir --check -q ${IR_REPORT:+--report "$IR_REPORT"}
 
 if command -v ruff >/dev/null 2>&1; then
     echo "== ruff (pyflakes + E9 baseline, pyproject.toml)"

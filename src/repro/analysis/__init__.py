@@ -1,9 +1,10 @@
-"""permlint: the repo's determinism & precision invariants as lint rules.
+"""Static verification of the repo's determinism & precision invariants.
 
-Two jax-free AST passes plus one static plan/kernel auditor:
+Three layers, all device-free:
 
-* ``rules.py``   -- the rule registry (PL001..PL006 + pyflakes-class
-  hygiene rules), each encoding one hard-won invariant from PRs 3-7.
+* ``rules.py``   -- permlint's rule registry (PL001..PL006 +
+  pyflakes-class hygiene rules), each encoding one hard-won invariant
+  from PRs 3-7, checked on the Python AST.
 * ``lint.py``    -- the walker and ``python -m repro.analysis.lint`` CLI:
   human/JSON output, ``# permlint: disable=RULE`` inline suppressions
   (inventoried in the report, never hidden), and the orphan-module
@@ -12,6 +13,11 @@ Two jax-free AST passes plus one static plan/kernel auditor:
   registered executor route and validates kernel geometry, VMEM block
   budgets, step-space coverage and sentinel masking of padded lanes via
   ``kernel_geometry``/``jax.eval_shape`` -- no device work.
+* ``ir.py`` + ``contracts.py`` -- permprove: traces every public engine
+  entry with ``jax.make_jaxpr``, checks the PLI-series contracts
+  (PLI101-104) on the emitted IR, and gates drift against golden
+  canonical-trace fingerprints under ``tests/ir_goldens/``
+  (``python -m repro.analysis.ir --check`` / ``--bless``).
 
 ``docs/INVARIANTS.md`` catalogs each rule and the postmortem behind it.
 """

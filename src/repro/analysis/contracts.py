@@ -1,0 +1,277 @@
+"""PLI-series contracts: the determinism & precision invariants checked
+on the *traced IR* instead of the Python AST (ISSUE 10).
+
+permlint (``rules.py``) guards the source; these rules guard what the
+jax transform stack actually emitted -- the level where the PR 3
+(shape-dependent reassociation) and PR 4 (vmap fusion drift) bugs were
+born.  ``ir.py`` traces every public engine entry and hands the jaxprs
+(and, for sharded programs, compiled HLO text) to the checkers here:
+
+PLI101  no raw float ``reduce``/``dot`` contraction over a
+        batch/shard-extent-dependent axis -- the post-transform shadow
+        of PL001.  Detected by tracing each batch entry at two coprime
+        batch extents and flagging any reduction whose *reduced* extent
+        tracks the batch.
+PLI102  dtype-flow audit: no ``convert_element_type`` truncation
+        (f64->f32, c128->c64, f64->bf16 ...) on any value path.
+PLI103  batch-extent invariance: the engine body is structurally
+        identical at different batch extents -- every textual
+        difference between the two canonical traces must be an integer
+        extent scaling exactly with B (the PR 4 ulp-drift bug shape,
+        proven statically instead of tested empirically).
+PLI104  collective audit on sharded programs via
+        ``utils/hlo.collective_bytes``/``count_ops``: only the
+        sanctioned psum kinds and counts appear.
+
+Like permlint, sanctioned sites are never hidden: ``SANCTIONED``
+matches move a finding into the shared suppression inventory that
+every report carries.
+
+This module is import-light (no jax): it consumes canonical trace
+lines and walk records produced by ``ir.py``.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import re
+from dataclasses import dataclass
+
+from .rules import Finding
+from ..utils import hlo
+
+__all__ = ["PLI_RULES", "SANCTIONED", "Sanction", "apply_sanctions",
+           "pli101_reductions", "pli102_dtype_flow",
+           "pli103_batch_invariance", "pli104_collectives",
+           "ReduceRecord", "ConvertRecord"]
+
+
+PLI_RULES = {
+    "PLI101": "no raw float reduce/dot over a batch/shard-extent axis "
+              "outside the sanctioned twofloat patterns",
+    "PLI102": "no convert_element_type truncation (f64->f32, c128->c64) "
+              "on any value path",
+    "PLI103": "engine bodies are structurally batch-extent invariant "
+              "(only extents scale with B)",
+    "PLI104": "sharded programs carry only the sanctioned collective "
+              "kinds/counts",
+}
+
+
+@dataclass(frozen=True)
+class Sanction:
+    """One deliberately-allowed PLI site.  ``entry`` is an fnmatch
+    pattern over entry names, ``match`` a substring of the finding
+    message.  Matched findings are inventoried, never dropped."""
+    rule: str
+    entry: str
+    match: str
+    reason: str
+
+
+# The engine bodies currently prove clean with no per-eqn sanctions --
+# every reduce extent is pinned by (n, T, C) and no value path narrows.
+# This tuple is the hook a future deliberate exception must go through:
+# like permlint's inline suppressions, a Sanction moves the finding into
+# the report's suppression inventory instead of deleting it.  (The
+# PLI104 collective budget below feeds the same inventory: each
+# in-budget collective is recorded as a suppressed finding.)
+SANCTIONED: tuple[Sanction, ...] = ()
+
+
+def apply_sanctions(findings: list[Finding]) -> tuple[list[Finding],
+                                                      list[Finding]]:
+    """Split findings into (active, suppressed) per ``SANCTIONED``."""
+    active, suppressed = [], []
+    for f in findings:
+        hit = None
+        for s in SANCTIONED:
+            if (s.rule == f.rule and fnmatch.fnmatch(f.path, s.entry)
+                    and s.match in f.message):
+                hit = s
+                break
+        if hit is None:
+            active.append(f)
+        else:
+            suppressed.append(Finding(
+                rule=f.rule, path=f.path, line=f.line, col=f.col,
+                message=f.message + f"  [sanctioned: {hit.reason}]",
+                suppressed=True))
+    return active, suppressed
+
+
+# ---------------------------------------------------------------------------
+# Walk records (produced by ir.canonical_walk, consumed here)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ReduceRecord:
+    """One float-dtype contraction eqn from a canonical walk."""
+    index: int                 # position in the walk (aligns across B)
+    primitive: str             # reduce_sum / reduce_prod / dot_general
+    dtype: str                 # short dtype of the reduced operand
+    reduced_extents: tuple[int, ...]   # extents of the contracted axes
+
+
+@dataclass(frozen=True)
+class ConvertRecord:
+    """One convert_element_type eqn from a canonical walk."""
+    index: int
+    src: str                   # short dtype in
+    dst: str                   # short dtype out
+
+
+_WIDTHS = {
+    "pred": 1, "i8": 8, "u8": 8, "i16": 16, "u16": 16, "f16": 16,
+    "bf16": 16, "i32": 32, "u32": 32, "f32": 32, "i64": 64, "u64": 64,
+    "f64": 64, "c64": 64, "c128": 128,
+}
+_FLOATISH = re.compile(r"^(f|bf|c)\d+$")
+
+
+def _is_floatish(short: str) -> bool:
+    return bool(_FLOATISH.match(short))
+
+
+def pli102_dtype_flow(entry: str, converts: list[ConvertRecord],
+                      precision: str) -> list[Finding]:
+    """Flag any float/complex narrowing convert on a value path."""
+    out = []
+    for c in converts:
+        if not (_is_floatish(c.src) and _is_floatish(c.dst)):
+            continue
+        if _WIDTHS.get(c.dst, 0) < _WIDTHS.get(c.src, 0):
+            out.append(Finding(
+                rule="PLI102", path=entry, line=c.index, col=0,
+                message=f"precision={precision}: value path truncates "
+                        f"{c.src}->{c.dst} (convert_element_type "
+                        f"at walk index {c.index})"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PLI103: batch-extent invariance of the canonical trace text
+# ---------------------------------------------------------------------------
+
+# standalone integers only: '128' in 'f128' or '1.5' must not split
+_INT_TOKEN = re.compile(r"(?<![\w.])(\d+)(?![\w.])")
+
+
+def _proportional(tok_a: str, tok_b: str, b_a: int, b_b: int) -> bool:
+    """True when tok_a/tok_b is the same multiple of b_a/b_b -- the only
+    sanctioned way a trace may depend on the batch extent."""
+    va, vb = int(tok_a), int(tok_b)
+    return va % b_a == 0 and vb == (va // b_a) * b_b
+
+
+def lines_batch_variant(line_a: str, line_b: str,
+                        b_a: int, b_b: int) -> bool:
+    """True when the two lines differ only by B-proportional extents."""
+    toks_a = _INT_TOKEN.split(line_a)
+    toks_b = _INT_TOKEN.split(line_b)
+    if len(toks_a) != len(toks_b):
+        return False
+    for i, (ta, tb) in enumerate(zip(toks_a, toks_b)):
+        if ta == tb:
+            continue
+        if i % 2 == 0:          # non-integer text segment differs
+            return False
+        if not _proportional(ta, tb, b_a, b_b):
+            return False
+    return True
+
+
+def pli103_batch_invariance(entry: str, precision: str,
+                            lines_a: list[str], lines_b: list[str],
+                            b_a: int, b_b: int,
+                            max_report: int = 3) -> list[Finding]:
+    """Compare canonical traces at two batch extents line by line."""
+    out = []
+    if len(lines_a) != len(lines_b):
+        return [Finding(
+            rule="PLI103", path=entry, line=0, col=0,
+            message=f"precision={precision}: trace has {len(lines_a)} "
+                    f"canonical lines at B={b_a} but {len(lines_b)} at "
+                    f"B={b_b} -- the program shape depends on the batch "
+                    f"extent")]
+    for i, (la, lb) in enumerate(zip(lines_a, lines_b)):
+        if la == lb or lines_batch_variant(la, lb, b_a, b_b):
+            continue
+        out.append(Finding(
+            rule="PLI103", path=entry, line=i, col=0,
+            message=f"precision={precision}: line {i} differs beyond "
+                    f"B-proportional extents:\n"
+                    f"    B={b_a}: {la.strip()}\n"
+                    f"    B={b_b}: {lb.strip()}"))
+        if len(out) >= max_report:
+            break
+    return out
+
+
+def pli101_reductions(entry: str, precision: str,
+                      reds_a: list[ReduceRecord],
+                      reds_b: list[ReduceRecord],
+                      b_a: int, b_b: int) -> list[Finding]:
+    """Flag float contractions whose *reduced* extent tracks the batch.
+
+    A reduction over the batch/shard axis is exactly the accumulation
+    order PL001 bans at the source level: its association would change
+    with the shard shape.  Extents pinned by the plan (T, C, n) are
+    identical in both traces and pass.
+    """
+    out = []
+    if len(reds_a) != len(reds_b):
+        # PLI103 reports the structural divergence; avoid cascading.
+        return out
+    for ra, rb in zip(reds_a, reds_b):
+        for ea, eb in zip(ra.reduced_extents, rb.reduced_extents):
+            if ea == eb:
+                continue
+            if _proportional(str(ea), str(eb), b_a, b_b):
+                out.append(Finding(
+                    rule="PLI101", path=entry, line=ra.index, col=0,
+                    message=f"precision={precision}: primitive="
+                            f"{ra.primitive} ({ra.dtype}) contracts a "
+                            f"batch-extent axis ({ea} at B={b_a}, {eb} "
+                            f"at B={b_b}) -- accumulation order would "
+                            f"depend on the shard shape"))
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PLI104: collective audit over compiled sharded programs
+# ---------------------------------------------------------------------------
+
+def pli104_collectives(program: str, hlo_text: str,
+                       sanctioned: dict[str, int]) -> list[Finding]:
+    """Only sanctioned collective kinds/counts may appear.
+
+    ``sanctioned`` maps collective kind (``all-reduce`` ...) to the max
+    instruction count allowed; kinds absent from the map are banned
+    outright.  Counts come from ``hlo.collective_bytes`` (async
+    ``-start``/``-done`` pairs count once, at ``-start``).  In-budget
+    collectives come back as *suppressed* findings: the deliberate psum
+    sites are inventoried in every report, never invisible.
+    """
+    stats = hlo.collective_bytes(hlo_text)
+    out = []
+    for kind, v in sorted(stats["by_kind"].items()):
+        allowed = sanctioned.get(kind)
+        if allowed is None:
+            out.append(Finding(
+                rule="PLI104", path=program, line=0, col=0,
+                message=f"unsanctioned collective kind {kind!r} "
+                        f"(count={v['count']}, bytes={v['bytes']})"))
+        elif v["count"] > allowed:
+            out.append(Finding(
+                rule="PLI104", path=program, line=0, col=0,
+                message=f"collective {kind!r} appears {v['count']}x "
+                        f"(sanctioned max {allowed}) -- an extra "
+                        f"reduction changes the cross-device order"))
+        else:
+            out.append(Finding(
+                rule="PLI104", path=program, line=0, col=0, suppressed=True,
+                message=f"sanctioned collective {kind!r} x{v['count']} "
+                        f"({v['bytes']} bytes) within budget {allowed}"))
+    return out

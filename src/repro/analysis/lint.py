@@ -14,9 +14,9 @@ of the test matrix.
   suppression drift shows up in review.
 * The orphan-module inventory walks the intra-repo import graph from
   the permanent/solver/serve entry points and reports every module
-  under ``src/repro`` nothing reachable imports -- seed leftovers
-  (``models/``, ``configs/``, ``train/``) that future PRs can retire
-  deliberately.  Informational: orphans never fail the lint.
+  under ``src/repro`` nothing reachable imports.  It is how the LM
+  seed leftovers (``models/``, ``configs/``, ``train/``) were found
+  and, in PR 10, retired.  Informational: orphans never fail the lint.
 
 Exit status: 0 when no unsuppressed findings, 1 otherwise, 2 on usage
 errors.
@@ -40,14 +40,14 @@ __all__ = ["lint_paths", "lint_file", "parse_suppressions",
 DEFAULT_EXCLUDES = ("lint_fixtures",)
 
 # Reachability roots for the orphan inventory: the permanent CLIs, the
-# solver session object, and the always-on serving loop.  launch/serve.py
-# is deliberately NOT a root: its module-level LM imports would mark the
-# seed's models/configs/train tree reachable, which is exactly the
-# leftover surface this inventory exists to expose.
+# solver session object, the always-on serving loop, and the analysis
+# tooling (permlint, geometry audits, permprove's IR verifier).
 ENTRY_POINTS = ("repro.launch.permanent", "repro.launch.campaign",
-                "repro.launch.tune",
-                "repro.core.solver", "repro.serve.loop",
-                "repro.analysis.lint", "repro.analysis.geometry")
+                "repro.launch.tune", "repro.launch.serve",
+                "repro.core.solver", "repro.core.engine",
+                "repro.serve.loop",
+                "repro.analysis.lint", "repro.analysis.geometry",
+                "repro.analysis.ir")
 
 _DIRECTIVE = "# permlint: disable="
 

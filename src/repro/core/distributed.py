@@ -217,6 +217,29 @@ def permanent_on_mesh(A, mesh: Mesh, *, precision: str = "dq_acc",
     dev_live = jax.device_put(live.astype(np.float64),
                               NamedSharding(mesh, P_(axes)))
 
+    hi, lo = _oneshot_mesh_fn(mesh, spd, chunks_per_slice, C, precision,
+                              backend)(A, dev_slices, dev_live)
+    p0 = jnp.prod(nw_base_vector(A))  # permlint: disable=PL001  # length-n product, shape set by the matrix
+    total = P.tf_add_acc(P.TwoFloat(hi, lo), p0)
+    return P.tf_value(total) * _final_factor(n)
+
+
+@lru_cache(maxsize=None)
+def _oneshot_mesh_fn(mesh: Mesh, spd: int, chunks_per_slice: int, C: int,
+                     precision: str, backend: str):
+    """Compiled one-shot mesh program for ``permanent_on_mesh``.
+
+    Extracted from the former per-call closure so (a) repeated one-shot
+    calls on the same (mesh, plan geometry, precision, backend) reuse
+    one compiled program instead of retracing every call, and (b)
+    permprove can ``.lower()`` the exact production program for the
+    PLI104 collective audit: exactly one twofloat psum pair -- two
+    ``all-reduce`` instructions per mesh axis at most -- may appear.
+    Complex input needs no extra cache key: jit re-specializes on the
+    operand dtype under the same program.
+    """
+    axes = tuple(mesh.axis_names)
+
     def device_partials(A_rep, first_chunk):
         if backend == "pallas":
             fn = _pallas_device_partials_complex \
@@ -226,35 +249,28 @@ def permanent_on_mesh(A, mesh: Mesh, *, precision: str = "dq_acc",
         return _dyn_chunk_partials(A_rep, first_chunk, chunks_per_slice, C,
                                    precision)
 
-    @jax.jit
-    def run(A, dev_slices, dev_live):
-        def body(A_rep, slices_local, live_local):
-            acc = P.TwoFloat(jnp.zeros((), A_rep.dtype),
-                             jnp.zeros((), A_rep.dtype))
-            for i in range(slices_local.shape[1]):
-                first_chunk = slices_local[0, i] * chunks_per_slice
-                parts = device_partials(A_rep, first_chunk)
-                m = live_local[0, i].astype(A_rep.dtype)
-                # permlint: disable=PL001  # parts shape fixed by chunks_per_slice, mesh-invariant
-                h, l = P.two_sum(jnp.sum(parts.hi) * m, jnp.sum(parts.lo) * m)
-                acc = P.tf_add_tf(acc, P.TwoFloat(h, l))
-            hi, lo = acc
-            for ax in axes:
-                hi = jax.lax.psum(hi, ax)
-                lo = jax.lax.psum(lo, ax)
-            return hi, lo
+    def body(A_rep, slices_local, live_local):
+        acc = P.TwoFloat(jnp.zeros((), A_rep.dtype),
+                         jnp.zeros((), A_rep.dtype))
+        for i in range(spd):
+            first_chunk = slices_local[0, i] * chunks_per_slice
+            parts = device_partials(A_rep, first_chunk)
+            m = live_local[0, i].astype(A_rep.dtype)
+            # permlint: disable=PL001  # parts shape fixed by chunks_per_slice, mesh-invariant
+            h, l = P.two_sum(jnp.sum(parts.hi) * m, jnp.sum(parts.lo) * m)
+            acc = P.tf_add_tf(acc, P.TwoFloat(h, l))
+        hi, lo = acc
+        for ax in axes:
+            hi = jax.lax.psum(hi, ax)
+            lo = jax.lax.psum(lo, ax)
+        return hi, lo
 
-        # check_vma=False: interpret-mode pallas inside shard_map trips
-        # the vma typing on its internal grid dynamic_slices
-        return shard_map(body, mesh=mesh,
-                         in_specs=(P_(), P_(axes), P_(axes)),
-                         out_specs=(P_(), P_()),
-                         check_vma=False)(A, dev_slices, dev_live)
-
-    hi, lo = run(A, dev_slices, dev_live)
-    p0 = jnp.prod(nw_base_vector(A))  # permlint: disable=PL001  # length-n product, shape set by the matrix
-    total = P.tf_add_acc(P.TwoFloat(hi, lo), p0)
-    return P.tf_value(total) * _final_factor(n)
+    # check_vma=False: interpret-mode pallas inside shard_map trips
+    # the vma typing on its internal grid dynamic_slices
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(P_(), P_(axes), P_(axes)),
+                             out_specs=(P_(), P_()),
+                             check_vma=False))
 
 
 @lru_cache(maxsize=None)

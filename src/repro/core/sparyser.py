@@ -29,7 +29,8 @@ from .ryser import (chain_prod, chain_prod_complex, chunk_geometry,
 
 __all__ = ["SparseMatrix", "perm_sparyser_chunked", "perm_sparyser_batched",
            "sparse_batched_values", "sparse_batched_values_complex",
-           "pack_padded_ccs", "sparse_chunk_partial_sums"]
+           "sparse_chunked_value", "pack_padded_ccs",
+           "sparse_chunk_partial_sums"]
 
 
 @dataclass(frozen=True)
@@ -274,6 +275,27 @@ def _sparse_key(sp: SparseMatrix):
     return (sp.n, sp.cids.tobytes(), sp.rptrs.tobytes())
 
 
+def sparse_chunked_value(A, rows_pad, vals_pad, T: int, C: int,
+                         precision: str):
+    """Traced scalar SpaRyser permanent from (dense, padded-CCS) arrays.
+
+    The scalar composition behind ``perm_sparyser_chunked`` as one
+    traceable function of traced arrays -- the same fixed-order
+    reductions as ``sparse_batched_values``'s per-element epilogue
+    (bit-identity between a scalar straggler and a bucket member), and
+    the entry permprove's IR verifier traces for the sparse jnp scalar
+    route.
+    """
+    n = A.shape[0]
+    partials = _sparse_partials_traced(A, rows_pad, vals_pad, T, C,
+                                       precision)
+    p_hi, p_lo = jax.lax.optimization_barrier((partials.hi, partials.lo))
+    hi, e1 = tf_tree_sum(p_hi, p_lo)
+    p0 = chain_prod(nw_base_vector(A))
+    total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
+    return P.tf_value(total) * _final_factor(n)
+
+
 def perm_sparyser_chunked(sp: SparseMatrix, num_chunks: int = 4096,
                           precision: str = "dq_acc"):
     """Permanent of a sparse matrix via chunked SpaRyser.
@@ -292,13 +314,10 @@ def perm_sparyser_chunked(sp: SparseMatrix, num_chunks: int = 4096,
         return perm_sparyser_batched([sp], num_chunks=num_chunks,
                                      precision=precision)[0].item()
     T, C, _ = chunk_geometry(n, num_chunks)
-    partials = sparse_chunk_partial_sums(sp, T, C, precision)
-    # same fixed-order reductions as the batched path (bit-identity)
-    p_hi, p_lo = jax.lax.optimization_barrier((partials.hi, partials.lo))
-    hi, e1 = tf_tree_sum(p_hi, p_lo)
-    p0 = chain_prod(nw_base_vector(A))
-    total = P.tf_add_acc(P.TwoFloat(hi, e1), p0)
-    return np.asarray(P.tf_value(total)).item() * _final_factor(n)
+    rows_pad, vals_pad = sp.padded_columns()
+    val = sparse_chunked_value(A, jnp.asarray(rows_pad),
+                               jnp.asarray(vals_pad), T, C, precision)
+    return np.asarray(val).item()
 
 
 def sparse_batched_values(A_stack, rows_stack, vals_stack, T: int, C: int,

@@ -1,9 +1,9 @@
 """Production mesh construction.
 
 IMPORTANT: functions only -- importing this module never touches jax device
-state.  The dry-run entry point (launch/dryrun.py) force-creates 512 host
-devices via XLA_FLAGS *before* importing jax; everything else sees the real
-device count.
+state.  Entry points that want many host devices (e.g. permprove's PLI104
+mesh audit, multi-device CI) set XLA_FLAGS *before* importing jax;
+everything else sees the real device count.
 """
 
 from __future__ import annotations

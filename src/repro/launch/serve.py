@@ -1,25 +1,22 @@
-"""Serving driver: LM decode loop + batched permanent serving.
+"""Serving driver: batched permanent serving.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b \
-        --prompt-len 64 --gen 32 --batch 4 [--reduced]
-    PYTHONPATH=src python -m repro.launch.serve --mode permanent \
+    PYTHONPATH=src python -m repro.launch.serve \
         --perm-n 10 --batch 32 --requests 256
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        PYTHONPATH=src python -m repro.launch.serve --mode permanent \
+        PYTHONPATH=src python -m repro.launch.serve \
         --perm-n 12 --batch 64 --requests 256 --mesh 8
-    PYTHONPATH=src python -m repro.launch.serve --mode permanent --soak \
+    PYTHONPATH=src python -m repro.launch.serve --soak \
         --perm-n 12 --batch 8 --rate 50 --compile-cache .xla-cache \
         --metrics-port 0 --metrics-json soak.json
 
-LM mode builds the serve bundle (KV sharding policy chosen per arch/mesh),
-prefills a synthetic prompt batch, then decodes greedily.  Permanent mode
-drains a synthetic request stream through a ``PermanentSolver``'s async
+Drains a synthetic request stream through a ``PermanentSolver``'s async
 request queue: submissions accumulate in size buckets and flush on
 size/deadline triggers, repeated submatrices resolve from the solver's
 result cache, and compilation/dispatch are amortized across requests --
-the throughput shape (perms/sec) the SUperman paper headlines.  Runnable
-on CPU with ``--reduced``; on a real pod the same code paths serve the
-full configs.
+the throughput shape (perms/sec) the SUperman paper headlines.  The LM
+decode loop that shared this driver was seed scaffolding; it retired
+with the rest of the LM tree (ISSUE 10), so permanent serving is the
+only mode.
 """
 
 from __future__ import annotations
@@ -28,88 +25,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..configs import ARCH_IDS, get_config
-from ..models.model import ShapeCell, build
-from ..train.train_step import build_serve_steps
-from .mesh import make_local_mesh
-
-__all__ = ["serve_main", "run_serving", "run_permanent_serving",
-           "run_permanent_soak"]
-
-
-def run_serving(arch: str, *, prompt_len: int = 64, gen: int = 32,
-                batch: int = 4, reduced: bool = True, mesh=None,
-                seed: int = 0, greedy: bool = True):
-    cfg = get_config(arch)
-    if reduced:
-        cfg = cfg.reduced()
-    model = build(cfg)
-    mesh = mesh or make_local_mesh()
-    max_seq = prompt_len + gen
-    rng = np.random.default_rng(seed)
-
-    prefill_cell = ShapeCell("serve", "prefill", prompt_len, batch)
-    decode_cell = ShapeCell("serve", "decode", max_seq, batch)
-    prefill_fn, _, _, _ = build_serve_steps(model, mesh, prefill_cell)
-    decode_fn, _, _, policy = build_serve_steps(model, mesh, decode_cell)
-
-    params = model.init_params(jax.random.PRNGKey(seed))
-    # serving weights are bf16 + resident (cf. build_serve_steps)
-    params = jax.tree.map(
-        lambda p: p.astype(jnp.bfloat16)
-        if p.dtype == jnp.float32 else p, params)
-
-    if cfg.family == "vlm":
-        pos = np.broadcast_to(np.arange(prompt_len)[None, None],
-                              (3, batch, prompt_len)).copy()
-        inputs = {"embeds": jnp.asarray(
-            rng.normal(0, 0.02, (batch, prompt_len, cfg.d_model)),
-            cfg.dtype), "positions": jnp.asarray(pos, jnp.int32)}
-    elif cfg.family == "audio-encdec":
-        inputs = {"enc_embeds": jnp.asarray(
-            rng.normal(0, 0.02, (batch, prompt_len, cfg.d_model)),
-            cfg.dtype)}
-    else:
-        inputs = {"tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab, (batch, prompt_len)), jnp.int32)}
-
-    t0 = time.time()
-    h, cache = prefill_fn(params, inputs)
-    # pad the prefill cache out to max_seq (cache was built at prompt_len)
-    def grow(x):
-        if x.ndim >= 3 and x.shape[2] == prompt_len and cfg.family != "ssm":
-            pad = [(0, 0)] * x.ndim
-            pad[2] = (0, gen)
-            return jnp.pad(x, pad)
-        return x
-    if cfg.family in ("dense", "moe", "vlm", "audio-encdec"):
-        cache = {k: (grow(v) if k in ("k", "v") else v)
-                 for k, v in cache.items()}
-    elif cfg.family == "hybrid":
-        cache = {k: (grow(v) if k in ("k", "v") else v)
-                 for k, v in cache.items()}
-    t_prefill = time.time() - t0
-
-    tok = jnp.asarray(rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32)
-    out_tokens = []
-    t0 = time.time()
-    for i in range(gen):
-        step_inputs = {"token": tok, "pos": jnp.int32(prompt_len + i)}
-        if cfg.family == "vlm":
-            step_inputs["positions"] = jnp.full((3, batch, 1),
-                                                prompt_len + i, jnp.int32)
-        logits, cache = decode_fn(params, step_inputs, cache)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32) \
-            if greedy else tok
-        out_tokens.append(np.asarray(tok)[:, 0])
-    t_decode = time.time() - t0
-    toks = np.stack(out_tokens, axis=1)
-    return {"tokens": toks, "prefill_s": t_prefill, "decode_s": t_decode,
-            "tok_per_s": batch * gen / max(t_decode, 1e-9),
-            "kv_policy": policy}
+__all__ = ["serve_main", "run_permanent_serving", "run_permanent_soak"]
 
 
 def run_permanent_serving(*, n: int = 10, batch: int = 32,
@@ -321,13 +239,11 @@ def run_permanent_soak(*, n: int = 12, batch: int = 8, requests: int = 64,
 
 def serve_main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("lm", "permanent"), default="lm")
-    ap.add_argument("--arch", choices=ARCH_IDS, default="starcoder2-3b")
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    # --mode is kept for CLI compatibility (docs/CI invoke
+    # "--mode permanent"); permanent is the only mode since the LM seed
+    # scaffolding retired.
+    ap.add_argument("--mode", choices=("permanent",), default="permanent")
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--perm-n", type=int, default=10,
                     help="permanent mode: matrix size")
     ap.add_argument("--requests", type=int, default=128,
@@ -385,99 +301,91 @@ def serve_main(argv=None) -> int:
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="soak: write the final metrics snapshot here")
     args = ap.parse_args(argv)
-    if args.mode == "permanent":
-        jax.config.update("jax_enable_x64", True)
-        mesh = None
-        campaign_mesh = None
-        if args.mesh is not None and "x" in str(args.mesh):
-            from .mesh import make_campaign_mesh
-            b, s = (int(v) for v in str(args.mesh).lower().split("x"))
-            cm = make_campaign_mesh(b, s)
-            mesh, campaign_mesh = cm.batch_mesh, cm.step_mesh
-            print(f"[serve] 2D campaign mesh {b}x{s}: buckets on the "
-                  f"{b}-device batch column, campaign waves on the "
-                  f"{s}-device step row")
-        elif args.mesh is not None:
-            from .mesh import make_batch_mesh
-            mesh = make_batch_mesh(
-                None if args.mesh == "auto" else int(args.mesh))
-            print(f"[serve] batch-sharding buckets over "
-                  f"{mesh.devices.size}-device mesh {mesh.axis_names}")
-        campaign_matrix = None
-        if args.campaign is not None:
-            if args.campaign.isdigit():
-                cn = int(args.campaign)
-                campaign_matrix = np.random.default_rng(7).uniform(
-                    0.2, 1.2, (cn, cn))
-            else:
-                campaign_matrix = np.load(args.campaign)
-            print(f"[serve] campaign: n={campaign_matrix.shape[0]} "
-                  f"ckpt={args.campaign_checkpoint} "
-                  f"waves/flush={args.campaign_waves}")
-        if args.soak:
-            out = run_permanent_soak(
-                n=args.perm_n, batch=args.batch, requests=args.requests,
-                rate_hz=args.rate, density=args.density,
-                precision=args.precision, backend=args.backend,
-                repeat_pool=args.repeat_pool or 8,
-                complex_entries=args.complex_entries, mesh=mesh,
-                slo_ms=args.slo_ms, compile_cache=args.compile_cache,
-                warmup=args.warmup, metrics_port=args.metrics_port,
-                metrics_json=args.metrics_json,
-                campaign_matrix=campaign_matrix,
-                campaign_mesh=campaign_mesh,
-                campaign_waves=args.campaign_waves,
-                campaign_checkpoint=args.campaign_checkpoint)
-            snap = out["snapshot"]
-            req = snap["requests"]
-            lat = snap["latency_s"]["overall"]
-            print(f"[serve] soak: {req['admitted']} reqs @ "
-                  f"{args.rate:.0f}/s -> {req['completed']} done, "
-                  f"{req['shed_total']} shed {dict(req['shed'])}, "
-                  f"p50 {lat['p50'] * 1e3:.0f}ms p99 "
-                  f"{lat['p99'] * 1e3:.0f}ms, "
-                  f"{snap['dispatches']} dispatches (mean occupancy "
-                  f"{snap['bucket_occupancy']['mean']:.2f})")
-            if snap["campaign_fraction"] is not None:
-                print(f"[serve] campaign: "
-                      f"{snap['campaign_fraction']:.1%} done")
-            return 0
-        out = run_permanent_serving(
+    jax.config.update("jax_enable_x64", True)
+    mesh = None
+    campaign_mesh = None
+    if args.mesh is not None and "x" in str(args.mesh):
+        from .mesh import make_campaign_mesh
+        b, s = (int(v) for v in str(args.mesh).lower().split("x"))
+        cm = make_campaign_mesh(b, s)
+        mesh, campaign_mesh = cm.batch_mesh, cm.step_mesh
+        print(f"[serve] 2D campaign mesh {b}x{s}: buckets on the "
+              f"{b}-device batch column, campaign waves on the "
+              f"{s}-device step row")
+    elif args.mesh is not None:
+        from .mesh import make_batch_mesh
+        mesh = make_batch_mesh(
+            None if args.mesh == "auto" else int(args.mesh))
+        print(f"[serve] batch-sharding buckets over "
+              f"{mesh.devices.size}-device mesh {mesh.axis_names}")
+    campaign_matrix = None
+    if args.campaign is not None:
+        if args.campaign.isdigit():
+            cn = int(args.campaign)
+            campaign_matrix = np.random.default_rng(7).uniform(
+                0.2, 1.2, (cn, cn))
+        else:
+            campaign_matrix = np.load(args.campaign)
+        print(f"[serve] campaign: n={campaign_matrix.shape[0]} "
+              f"ckpt={args.campaign_checkpoint} "
+              f"waves/flush={args.campaign_waves}")
+    if args.soak:
+        out = run_permanent_soak(
             n=args.perm_n, batch=args.batch, requests=args.requests,
-            density=args.density, precision=args.precision,
-            backend=args.backend, repeat_pool=args.repeat_pool,
-            deadline_s=args.deadline_ms / 1e3, cache=args.cache, mesh=mesh,
-            complex_entries=args.complex_entries,
-            campaign_matrix=campaign_matrix, campaign_mesh=campaign_mesh,
+            rate_hz=args.rate, density=args.density,
+            precision=args.precision, backend=args.backend,
+            repeat_pool=args.repeat_pool or 8,
+            complex_entries=args.complex_entries, mesh=mesh,
+            slo_ms=args.slo_ms, compile_cache=args.compile_cache,
+            warmup=args.warmup, metrics_port=args.metrics_port,
+            metrics_json=args.metrics_json,
+            campaign_matrix=campaign_matrix,
+            campaign_mesh=campaign_mesh,
             campaign_waves=args.campaign_waves,
             campaign_checkpoint=args.campaign_checkpoint)
-        print(f"[serve] permanents: {args.requests} "
-              f"{'complex ' if args.complex_entries else ''}reqs "
-              f"x n={args.perm_n} batch={args.batch} backend="
-              f"{'distributed' if mesh is not None else args.backend}")
-        if out["downgrades"]:
-            print(f"[serve] downgrades: {len(out['downgrades'])} "
-                  f"(e.g. {out['downgrades'][0]})")
-        print(f"[serve] compile batch {out['compile_batch_s']:.3f}s, steady "
-              f"{out['steady_batch_s'] * 1e3:.1f}ms/batch -> "
-              f"{out['perms_per_s']:.0f} perms/s")
-        if out["cache"]:
-            print(f"[serve] cache: {out['cache']['hits']} hits / "
-                  f"{out['cache']['misses']} misses "
-                  f"(hit rate {out['cache']['hit_rate']:.1%}), "
-                  f"{out['device_dispatches']} device dispatches")
-        if out["campaign_fraction"] is not None:
-            cv = out["campaign_value"]
-            vtxt = "pending" if cv is None else f"{cv:+.17e}"
-            print(f"[serve] campaign: {out['campaign_fraction']:.1%} done, "
-                  f"perm = {vtxt}")
+        snap = out["snapshot"]
+        req = snap["requests"]
+        lat = snap["latency_s"]["overall"]
+        print(f"[serve] soak: {req['admitted']} reqs @ "
+              f"{args.rate:.0f}/s -> {req['completed']} done, "
+              f"{req['shed_total']} shed {dict(req['shed'])}, "
+              f"p50 {lat['p50'] * 1e3:.0f}ms p99 "
+              f"{lat['p99'] * 1e3:.0f}ms, "
+              f"{snap['dispatches']} dispatches (mean occupancy "
+              f"{snap['bucket_occupancy']['mean']:.2f})")
+        if snap["campaign_fraction"] is not None:
+            print(f"[serve] campaign: "
+                  f"{snap['campaign_fraction']:.1%} done")
         return 0
-    out = run_serving(args.arch, prompt_len=args.prompt_len, gen=args.gen,
-                      batch=args.batch, reduced=args.reduced)
-    print(f"[serve] kv_policy={out['kv_policy']} "
-          f"prefill {out['prefill_s']:.2f}s decode {out['decode_s']:.2f}s "
-          f"({out['tok_per_s']:.1f} tok/s)")
-    print(f"[serve] sample tokens: {out['tokens'][0][:16].tolist()}")
+    out = run_permanent_serving(
+        n=args.perm_n, batch=args.batch, requests=args.requests,
+        density=args.density, precision=args.precision,
+        backend=args.backend, repeat_pool=args.repeat_pool,
+        deadline_s=args.deadline_ms / 1e3, cache=args.cache, mesh=mesh,
+        complex_entries=args.complex_entries,
+        campaign_matrix=campaign_matrix, campaign_mesh=campaign_mesh,
+        campaign_waves=args.campaign_waves,
+        campaign_checkpoint=args.campaign_checkpoint)
+    print(f"[serve] permanents: {args.requests} "
+          f"{'complex ' if args.complex_entries else ''}reqs "
+          f"x n={args.perm_n} batch={args.batch} backend="
+          f"{'distributed' if mesh is not None else args.backend}")
+    if out["downgrades"]:
+        print(f"[serve] downgrades: {len(out['downgrades'])} "
+              f"(e.g. {out['downgrades'][0]})")
+    print(f"[serve] compile batch {out['compile_batch_s']:.3f}s, steady "
+          f"{out['steady_batch_s'] * 1e3:.1f}ms/batch -> "
+          f"{out['perms_per_s']:.0f} perms/s")
+    if out["cache"]:
+        print(f"[serve] cache: {out['cache']['hits']} hits / "
+              f"{out['cache']['misses']} misses "
+              f"(hit rate {out['cache']['hit_rate']:.1%}), "
+              f"{out['device_dispatches']} device dispatches")
+    if out["campaign_fraction"] is not None:
+        cv = out["campaign_value"]
+        vtxt = "pending" if cv is None else f"{cv:+.17e}"
+        print(f"[serve] campaign: {out['campaign_fraction']:.1%} done, "
+              f"perm = {vtxt}")
     return 0
 
 

@@ -11,13 +11,19 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
-__all__ = ["collective_bytes", "parse_shape_bytes", "count_ops"]
+__all__ = ["collective_bytes", "parse_shape_bytes", "count_ops",
+           "UnknownDtypeError"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
     "c64": 8, "c128": 16,
 }
+
+# Bracketed tokens that are legitimately byte-free in HLO type strings.
+# Everything else unknown (f8e4m3fn, s4, ...) raises: silently counting
+# a real dtype as zero bytes corrupts the roofline's collective term.
+_ZERO_BYTE_TYPES = frozenset({"token"})
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
@@ -26,13 +32,29 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
-def parse_shape_bytes(shape_str: str) -> int:
-    """Total bytes of all array shapes in an HLO type string."""
+class UnknownDtypeError(ValueError):
+    """An HLO shape carries a dtype outside the byte table."""
+
+
+def parse_shape_bytes(shape_str: str, *, allow=()) -> int:
+    """Total bytes of all array shapes in an HLO type string.
+
+    Unknown dtypes are a loud ``UnknownDtypeError`` -- counting them as
+    zero silently under-reports collective traffic (the pre-PR 10 bug).
+    ``allow`` extends the zero-byte allowlist (``token`` is always
+    allowed) for callers that knowingly parse exotic types.
+    """
     total = 0
+    allowed = _ZERO_BYTE_TYPES | frozenset(allow)
     for m in _SHAPE_RE.finditer(shape_str):
         dt, dims = m.group(1), m.group(2)
         if dt not in _DTYPE_BYTES:
-            continue
+            if dt in allowed:
+                continue
+            raise UnknownDtypeError(
+                f"unknown dtype {dt!r} in HLO shape {shape_str!r}; add it "
+                f"to hlo._DTYPE_BYTES or pass allow=({dt!r},) to treat it "
+                f"as zero bytes")
         n = 1
         if dims:
             for d in dims.split(","):
@@ -82,11 +104,24 @@ def collective_bytes(hlo_text: str) -> dict:
 
 
 def count_ops(hlo_text: str, opnames=("dot", "convolution")) -> dict:
+    """Instruction counts by opcode, plus every collective opcode seen.
+
+    Async collectives lower to ``-start``/``-done`` *pairs* describing
+    ONE logical op: the pair is counted once, under the base opcode
+    (``all-gather-start`` + ``all-gather-done`` -> ``all-gather: 1``) --
+    the same convention as ``collective_bytes``.
+    """
     counts = defaultdict(int)
     for line in hlo_text.splitlines():
         m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*.+?\s+([\w\-]+)\(",
                      line)
-        if m:
-            counts[m.group(1)] += 1
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-done"):
+            continue                      # counted at its -start
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        counts[op] += 1
     return {k: counts.get(k, 0) for k in opnames} | {
         k: v for k, v in counts.items() if k.startswith(_COLLECTIVES)}

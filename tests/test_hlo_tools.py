@@ -1,9 +1,12 @@
-"""HLO cost analyzer: trip-count scaling, dot flops, collective bytes."""
+"""HLO cost analyzer: trip-count scaling, dot flops, collective bytes,
+unknown-dtype loudness, async -start/-done pair counting."""
 
 import jax
 import jax.numpy as jnp
+import pytest
 
-from repro.utils.hlo import collective_bytes, parse_shape_bytes
+from repro.utils.hlo import (UnknownDtypeError, collective_bytes, count_ops,
+                             parse_shape_bytes)
 from repro.utils.hlo_cost import analyze_hlo
 from repro.utils.roofline import Roofline
 
@@ -17,6 +20,19 @@ def test_parse_shape_bytes():
     assert parse_shape_bytes("bf16[2,3]{1,0}") == 12
     assert parse_shape_bytes("(f32[2], u32[4])") == 24
     assert parse_shape_bytes("pred[]") == 1
+
+
+def test_parse_shape_bytes_unknown_dtype_is_loud():
+    with pytest.raises(UnknownDtypeError, match="f8e4m3fn"):
+        parse_shape_bytes("f8e4m3fn[16]")
+    with pytest.raises(UnknownDtypeError, match="s4"):
+        parse_shape_bytes("(f32[2], s4[8])")
+    # token is legitimately byte-free, always allowed
+    assert parse_shape_bytes("(f32[2], token[])") == 8
+    # the escape hatch must be explicit, per dtype
+    assert parse_shape_bytes("f8e4m3fn[16]", allow=("f8e4m3fn",)) == 0
+    assert parse_shape_bytes("(f32[2], f8e4m3fn[16])",
+                             allow=("f8e4m3fn",)) == 8
 
 
 def test_dot_flops_exact():
@@ -80,6 +96,53 @@ ENTRY %main (p: f32[16,8]) -> f32[16,8] {
     assert out["by_kind"]["all-gather"]["bytes"] == 64 * 8 * 4
     assert out["by_kind"]["all-reduce"]["bytes"] == 16 * 8 * 4
     assert out["by_kind"]["all-gather"]["count"] == 1
+
+
+_ASYNC_HLO = """
+HloModule m
+
+%fused (a: f64[32]) -> f64[32] {
+  %a = f64[32]{0} parameter(0)
+  %two = f64[32]{0} multiply(%a, %a)
+  ROOT %fr = f64[32]{0} add(%two, %a)
+}
+
+ENTRY %main (p: f64[32]) -> f64[32] {
+  %p = f64[32]{0} parameter(0)
+  %f = f64[32]{0} fusion(%p), kind=kLoop, calls=%fused
+  %ar-start = f64[32]{0} all-reduce-start(%f), to_apply=%add
+  %ar-done = f64[32]{0} all-reduce-done(%ar-start)
+  %ag-start = (f64[32]{0}, f64[128]{0}) all-gather-start(%ar-done), dimensions={0}
+  %ag-done = f64[128]{0} all-gather-done(%ag-start)
+  %d = f64[32]{0} dot(%p, %p), lhs_contracting_dims={}, rhs_contracting_dims={}
+  ROOT %out = f64[32]{0} copy(%ar-done)
+}
+"""
+
+
+def test_async_collective_pairs_count_once():
+    out = collective_bytes(_ASYNC_HLO)
+    # -start/-done describe ONE logical collective each
+    assert out["by_kind"]["all-reduce"]["count"] == 1
+    assert out["by_kind"]["all-gather"]["count"] == 1
+    # all-reduce bytes from the -start result; the tuple-shaped
+    # all-gather-start result counts both the operand and output buffers
+    assert out["by_kind"]["all-reduce"]["bytes"] == 32 * 8
+    assert out["by_kind"]["all-gather"]["bytes"] == (32 + 128) * 8
+
+
+def test_count_ops_merges_async_pairs_and_sees_fusion_bodies():
+    counts = count_ops(_ASYNC_HLO, opnames=("dot", "multiply", "add"))
+    assert counts["dot"] == 1
+    # ops inside the fusion computation body are instruction lines too
+    assert counts["multiply"] == 1
+    assert counts["add"] == 1
+    # the async pair appears once, under the base opcode -- never as
+    # separate -start/-done (or double-counted) entries
+    assert counts["all-reduce"] == 1
+    assert counts["all-gather"] == 1
+    assert not any(k.endswith("-start") or k.endswith("-done")
+                   for k in counts)
 
 
 def test_roofline_terms_and_dominant():

@@ -147,16 +147,22 @@ def test_fixture_corpus_is_excluded_from_tree_walk():
     assert not any("lint_fixtures" in f.path for f in report["findings"])
 
 
-def test_orphan_inventory_surfaces_seed_leftovers():
+def test_orphan_inventory_post_retirement():
     orphans = set(orphan_modules([SRC]))
-    # the LM seed tree is unreachable from the permanent entry points
-    assert any(m.startswith("repro.models") for m in orphans)
-    assert any(m.startswith("repro.configs") for m in orphans)
-    assert any(m.startswith("repro.train") for m in orphans)
+    # the LM seed tree (models/, configs/, train/, ckpt/) retired in
+    # PR 10 -- it must never come back as unreachable dead weight
+    for prefix in ("repro.models", "repro.configs", "repro.train",
+                   "repro.ckpt"):
+        assert not any(m.startswith(prefix) for m in orphans), orphans
+    # the only sanctioned orphan: the pure-jnp kernel-geometry oracle,
+    # imported by tests alone (its entire purpose)
+    assert orphans == {"repro.kernels.ref"}, orphans
     # the live stack is NOT orphaned
     for mod in ("repro.core.solver", "repro.core.planner",
                 "repro.core.distributed", "repro.serve.loop",
-                "repro.kernels.ryser_pallas", "repro.core.sparyser"):
+                "repro.kernels.ryser_pallas", "repro.core.sparyser",
+                "repro.analysis.ir", "repro.analysis.contracts",
+                "repro.utils.hlo"):
         assert mod not in orphans, mod
     assert set(ENTRY_POINTS) & orphans == set()
 
